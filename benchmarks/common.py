@@ -1,0 +1,81 @@
+"""Shared benchmark plumbing: timing, tables, error metrics."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def block(x):
+    return jax.block_until_ready(x)
+
+
+def time_fn(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
+            **kw) -> tuple[float, object]:
+    """Median wall time of ``fn(*args)`` after ``warmup`` calls."""
+    out = None
+    for _ in range(warmup):
+        out = block(fn(*args, **kw))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = block(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+class Table:
+    """Fixed-width console table that also accumulates JSON rows."""
+
+    def __init__(self, title: str, columns: list[str], fmt: Optional[dict] = None):
+        self.title = title
+        self.columns = columns
+        self.fmt = fmt or {}
+        self.rows: list[dict] = []
+
+    def add(self, **row):
+        self.rows.append(row)
+
+    def _cell(self, col, v):
+        if v is None:
+            return "-"
+        f = self.fmt.get(col)
+        if f:
+            return format(v, f)
+        if isinstance(v, float):
+            return f"{v:.4g}"
+        return str(v)
+
+    def show(self):
+        print(f"\n=== {self.title} ===")
+        cells = [[self._cell(c, r.get(c)) for c in self.columns]
+                 for r in self.rows]
+        widths = [max(len(c), *(len(row[i]) for row in cells)) if cells
+                  else len(c) for i, c in enumerate(self.columns)]
+        print("  ".join(c.rjust(w) for c, w in zip(self.columns, widths)))
+        for row in cells:
+            print("  ".join(v.rjust(w) for v, w in zip(row, widths)))
+
+    def save(self, name: str):
+        out = ARTIFACTS / "bench"
+        out.mkdir(parents=True, exist_ok=True)
+        (out / f"{name}.json").write_text(
+            json.dumps({"title": self.title, "rows": self.rows}, indent=1,
+                       default=float))
+
+
+@dataclasses.dataclass
+class Budget:
+    """Benchmark scale: quick (CPU CI) vs full (paper-scale)."""
+    quick: bool = True
+
+    @property
+    def label(self):
+        return "quick" if self.quick else "full"

@@ -1,0 +1,125 @@
+"""Regenerate the auto-filled sections of EXPERIMENTS.md from artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.make_experiments_tables
+Replaces text between  <!-- AUTO:name -->  and  <!-- /AUTO:name -->.
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+FINAL = ROOT / "artifacts" / "dryrun_final"
+MULTI = ROOT / "artifacts" / "dryrun"
+PERF = ROOT / "artifacts" / "perf"
+
+
+def _load(d: Path) -> list[dict]:
+    out = []
+    for p in sorted(d.glob("*.json")):
+        try:
+            out.append(json.loads(p.read_text()))
+        except json.JSONDecodeError:
+            continue
+    return out
+
+
+def roofline_table() -> str:
+    final = {(r["arch"], r["shape"]): r for r in _load(FINAL)}
+    v1 = {(r["arch"], r["shape"]): r for r in _load(MULTI)
+          if not r.get("multi_pod")}
+    keys = sorted(set(final) | set(v1))
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "bottleneck | MODEL/HLO flops | peak GiB/dev | parser |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for k in keys:
+        r = final.get(k)
+        ver = "v2"
+        if r is None:
+            r = v1[k]
+            ver = "v1"
+        t = r["roofline"]
+        u = r.get("useful_flops_frac")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"**{r['bottleneck']}** | "
+            f"{'-' if u is None else f'{u:.2f}'} | "
+            f"{r['bytes_per_device']['peak'] / 2**30:.2f} | {ver} |")
+    return "\n".join(rows)
+
+
+def dryrun_table() -> str:
+    ok = {}
+    for r in _load(MULTI):
+        key = (r["arch"], r["shape"])
+        ok.setdefault(key, set()).add("multi" if r["multi_pod"] else "single")
+    for r in _load(FINAL):
+        ok.setdefault((r["arch"], r["shape"]), set()).add("single")
+    rows = ["| arch | shape | 16x16 (256) | 2x16x16 (512) |",
+            "|---|---|---|---|"]
+    for (a, s), meshes in sorted(ok.items()):
+        rows.append(f"| {a} | {s} | "
+                    f"{'ok' if 'single' in meshes else 'MISSING'} | "
+                    f"{'ok' if 'multi' in meshes else 'MISSING'} |")
+    n = len(ok)
+    both = sum(1 for m in ok.values() if len(m) == 2)
+    rows.append(f"\n**{n} cells; {both} compiled on both meshes.**")
+    return "\n".join(rows)
+
+
+def memory_summary() -> str:
+    final = {(r["arch"], r["shape"]): r for r in _load(FINAL)}
+    v1 = {(r["arch"], r["shape"]): r for r in _load(MULTI)
+          if not r.get("multi_pod")}
+    merged = {**v1, **final}
+    rows = ["| arch | shape | argument GiB | temp GiB | peak GiB | "
+            "fits 16 GiB HBM |", "|---|---|---|---|---|---|"]
+    for _, r in sorted(merged.items()):
+        b = r["bytes_per_device"]
+        if "argument" not in b:
+            continue
+        peak = b["peak"] / 2**30
+        rows.append(f"| {r['arch']} | {r['shape']} | "
+                    f"{b['argument']/2**30:.2f} | {b['temp']/2**30:.2f} | "
+                    f"{peak:.2f} | {'yes' if peak <= 16 else 'NO (see §Perf)'} |")
+    return "\n".join(rows)
+
+
+def perf_artifacts() -> str:
+    rows = ["| tag | arch/cell | compute s | memory s | collective s | "
+            "bottleneck | arg GiB | peak GiB |", "|---|---|---|---|---|---|---|---|"]
+    for r in _load(PERF):
+        t = r.get("roofline")
+        b = r.get("bytes_per_device", {})
+        if t is None:  # capacity-only records (production compile only)
+            rows.append(f"| {r.get('tag','')} | {r['arch']}/{r['shape']} | "
+                        f"- | - | - | capacity-only | "
+                        f"{b.get('argument',0)/2**30:.2f} | "
+                        f"{b.get('peak',0)/2**30:.2f} |")
+            continue
+        rows.append(f"| {r.get('tag','')} | {r['arch']}/{r['shape']} | "
+                    f"{t['compute_s']:.3e} | {t['memory_s']:.3e} | "
+                    f"{t['collective_s']:.3e} | {r['bottleneck']} | "
+                    f"{b.get('argument',0)/2**30:.2f} | "
+                    f"{b.get('peak',0)/2**30:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    for name, gen in [("roofline", roofline_table),
+                      ("dryrun", dryrun_table),
+                      ("memory", memory_summary),
+                      ("perf_artifacts", perf_artifacts)]:
+        pat = re.compile(rf"(<!-- AUTO:{name} -->).*?(<!-- /AUTO:{name} -->)",
+                         re.DOTALL)
+        md = pat.sub(lambda m: m.group(1) + "\n" + gen() + "\n" + m.group(2),
+                     md)
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Roofline report: reads artifacts/dryrun/*.json (produced by
+``python -m repro.launch.dryrun --all --sa --both-meshes``) and prints the
+per-(arch x shape x mesh) three-term roofline table — the §Roofline source
+of EXPERIMENTS.md.
+
+This module does NOT compile anything (the dry-run owns that); it only
+aggregates, so ``benchmarks.run`` stays fast.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import ARTIFACTS, Budget, Table
+
+
+def load_records(d: Path | None = None) -> list[dict]:
+    """Prefer the final-parser single-pod sweep; fall back per-cell to the
+    both-mesh sweep (see EXPERIMENTS.md §Methodology on parser versions)."""
+    if d is not None:
+        dirs = [d]
+    else:
+        dirs = [ARTIFACTS / "dryrun_final", ARTIFACTS / "dryrun"]
+    seen = {}
+    for dd in dirs:
+        if not dd.exists():
+            continue
+        for p in sorted(dd.glob("*.json")):
+            try:
+                r = json.loads(p.read_text())
+            except json.JSONDecodeError:
+                continue
+            key = (r.get("arch"), r.get("shape"), r.get("multi_pod"),
+                   r.get("tag"))
+            if key not in seen:
+                seen[key] = r
+    return list(seen.values())
+
+
+def run(budget: Budget) -> Table:
+    recs = load_records()
+    t = Table("Roofline — per (arch x shape x mesh), from compiled dry-run",
+              ["arch", "shape", "mesh", "compute_s", "memory_s",
+               "collective_s", "bottleneck", "useful_flops", "peak GiB"],
+              fmt={"compute_s": ".3e", "memory_s": ".3e",
+                   "collective_s": ".3e", "useful_flops": ".2f",
+                   "peak GiB": ".1f"})
+    if not recs:
+        print("\n[roofline] no dry-run artifacts found — run "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all --sa "
+              "--both-meshes first")
+        return t
+    for r in recs:
+        if r.get("tag"):  # perf-iteration variants reported in EXPERIMENTS.md
+            continue
+        terms = r["roofline"]
+        t.add(arch=r["arch"], shape=r["shape"],
+              mesh="x".join(str(s) for s in r["mesh"]),
+              compute_s=terms["compute_s"], memory_s=terms["memory_s"],
+              collective_s=terms["collective_s"],
+              bottleneck=r["bottleneck"],
+              useful_flops=r.get("useful_flops_frac"),
+              **{"peak GiB": r["bytes_per_device"]["peak"] / 2 ** 30})
+    t.show()
+    doms = {}
+    for r in recs:
+        if not r.get("tag"):
+            doms[r["bottleneck"]] = doms.get(r["bottleneck"], 0) + 1
+    print(f"[roofline] bottleneck census: {doms} over {len(t.rows)} cells")
+    t.save("roofline")
+    return t
+
+
+if __name__ == "__main__":
+    run(Budget(quick=True))

@@ -1,0 +1,115 @@
+"""Benchmark harness: one module per paper table + kernel + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick (CPU, ~5-10 min)
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale budgets
+  PYTHONPATH=src python -m benchmarks.run --only table1,table9
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from .common import Budget
+
+REGISTRY = {}
+
+
+def _reg(name):
+    def deco(fn):
+        REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+@_reg("table1")
+def _t1(b):
+    from . import table1_accuracy as m
+    return m.run(b)
+
+
+@_reg("table2")
+def _t2(b):
+    from . import table2_speedup as m
+    return m.run(b)
+
+
+@_reg("table3")
+def _t3(b):
+    from . import table3_chains_error as m
+    return m.run(b)
+
+
+@_reg("table456")
+def _t456(b):
+    from . import table456_scaling as m
+    return m.run(b)
+
+
+@_reg("table7")
+def _t7(b):
+    from . import table7_precision as m
+    return m.run(b)
+
+
+@_reg("table9")
+def _t9(b):
+    from . import table9_suite as m
+    return m.run(b)
+
+
+@_reg("table10")
+def _t10(b):
+    from . import table10_hybrid as m
+    return m.run(b)
+
+
+@_reg("kernels")
+def _tk(b):
+    from . import kernels_bench as m
+    return m.run(b)
+
+
+@_reg("autotune")
+def _ta(b):
+    from . import autotune_bench as m
+    return m.run(b)
+
+
+@_reg("roofline")
+def _tr(b):
+    from . import roofline as m
+    return m.run(b)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale budgets (hours)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(REGISTRY))
+    args = ap.parse_args()
+    budget = Budget(quick=not args.full)
+
+    names = (args.only.split(",") if args.only else list(REGISTRY))
+    failures = []
+    t_start = time.time()
+    for name in names:
+        print(f"\n{'=' * 70}\n[bench] {name}  ({budget.label})\n{'=' * 70}")
+        t0 = time.time()
+        try:
+            REGISTRY[name](budget)
+            print(f"[bench] {name} done in {time.time() - t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    print(f"\n[bench] total {time.time() - t_start:.1f}s; "
+          f"{len(names) - len(failures)}/{len(names)} benchmarks OK")
+    if failures:
+        for name, err in failures:
+            print(f"  FAIL {name}: {err}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Paper Table 2: parallel-vs-sequential performance across dimension n.
+
+The paper measures GPU wall-time speedup of 16384 CUDA chains vs one CPU
+core.  The TPU-adapted equivalent on this container: throughput (Metropolis
+steps/s summed over chains) of the vectorized parallel engine vs the same
+engine at n_chains=1 — the vectorization speedup.  The paper's qualitative
+claims asserted here:
+  * speedup grows with the chain count and saturates;
+  * speedup *drops* as n grows (the sweep becomes memory-bound: state
+    streaming dominates the O(n) objective arithmetic).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import SAConfig, sa_minimize
+from repro.objectives import functions as F
+
+from .common import Budget, Table, time_fn
+
+
+def _throughput(obj, n_chains: int, budget: Budget) -> float:
+    """Metropolis proposals/s for one ladder run."""
+    cfg = SAConfig(T0=10.0, T_min=1.0, rho=0.7,
+                   N=20 if budget.quick else 100,
+                   n_chains=n_chains, exchange="sync",
+                   record_history=False)
+
+    def run(seed):
+        return sa_minimize(obj, cfg, key=jax.random.PRNGKey(seed)).f_best
+
+    dt, _ = time_fn(run, 0, repeats=2, warmup=1)
+    return cfg.n_evals / dt
+
+
+def run(budget: Budget) -> Table:
+    dims = [8, 16, 32] if budget.quick else [8, 16, 32, 64, 128, 256, 512]
+    chains = 4096 if budget.quick else 16384
+
+    t = Table(f"Table 2 — parallel throughput vs sequential ({budget.label})",
+              ["n", "V0 evals/s", f"V1x{chains} evals/s", "speedup"],
+              fmt={"V0 evals/s": ".3e", f"V1x{chains} evals/s": ".3e",
+                   "speedup": ".1f"})
+    speedups = []
+    for n in dims:
+        obj = F.schwefel(n)
+        seq = _throughput(obj, 1, budget)
+        par = _throughput(obj, chains, budget)
+        speedups.append(par / seq)
+        t.add(n=n, **{"V0 evals/s": seq, f"V1x{chains} evals/s": par,
+                      "speedup": par / seq})
+    t.show()
+    print(f"[claim] speedup decreases with n (memory-bound at large n): "
+          f"{'OK' if speedups[-1] < speedups[0] else 'NOT SEEN'} "
+          f"({speedups[0]:.0f}x -> {speedups[-1]:.0f}x)")
+    t.save("table2_speedup")
+    return t
+
+
+if __name__ == "__main__":
+    run(Budget(quick=True))

@@ -1,0 +1,82 @@
+"""Paper Tables 4/5/6: throughput scaling when growing (4) the chain count,
+(5) the Markov-chain length N, and (6) the total function-eval budget.
+
+The paper's claim set:
+  * Table 4: speedup rises with chains and saturates (more parallel work
+    amortizes fixed overhead) — here: evals/s rises with chains, saturates;
+  * Table 5: speedup is maintained as N doubles (longer sweeps amortize
+    the per-level exchange) — here: evals/s roughly flat-to-rising in N;
+  * Table 6: same when the budget doubles via any knob.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import SAConfig, sa_minimize
+from repro.objectives import functions as F
+
+from .common import Budget, Table, time_fn
+
+
+def _tput(obj, n_chains, N, budget) -> float:
+    cfg = SAConfig(T0=10.0, T_min=1.0, rho=0.7, N=N, n_chains=n_chains,
+                   exchange="sync", record_history=False)
+
+    def run(seed):
+        return sa_minimize(obj, cfg, key=jax.random.PRNGKey(seed)).f_best
+
+    dt, _ = time_fn(run, 0, repeats=2, warmup=1)
+    return cfg.n_evals / dt
+
+
+def run(budget: Budget) -> Table:
+    obj16, obj32 = F.schwefel(16), F.schwefel(32)
+
+    # Table 4: chains doubling.
+    chain_list = ([512, 1024, 2048, 4096] if budget.quick
+                  else [8192, 16384, 32768, 65536, 131072])
+    t4 = Table(f"Table 4 — evals/s vs chains ({budget.label})",
+               ["chains", "n=16 evals/s", "n=32 evals/s"],
+               fmt={"n=16 evals/s": ".3e", "n=32 evals/s": ".3e"})
+    r16 = []
+    for w in chain_list:
+        a, b = _tput(obj16, w, 20, budget), _tput(obj32, w, 20, budget)
+        r16.append(a)
+        t4.add(chains=w, **{"n=16 evals/s": a, "n=32 evals/s": b})
+    t4.show()
+    print(f"[claim] throughput rises with chains then saturates: "
+          f"{'OK' if r16[-1] > r16[0] else 'NOT SEEN'}")
+    t4.save("table4_chains_scaling")
+
+    # Table 5: N doubling at fixed chains.
+    Ns = [25, 50, 100] if budget.quick else [50, 100, 200, 400, 800]
+    w = 1024 if budget.quick else 16384
+    t5 = Table(f"Table 5 — evals/s vs N ({budget.label})",
+               ["N", "n=16 evals/s", "n=32 evals/s"],
+               fmt={"n=16 evals/s": ".3e", "n=32 evals/s": ".3e"})
+    rN = []
+    for N in Ns:
+        a, b = _tput(obj16, w, N, budget), _tput(obj32, w, N, budget)
+        rN.append(a)
+        t5.add(N=N, **{"n=16 evals/s": a, "n=32 evals/s": b})
+    t5.show()
+    print(f"[claim] throughput maintained as N grows: "
+          f"{'OK' if rN[-1] > 0.7 * rN[0] else 'NOT SEEN'}")
+    t5.save("table5_N_scaling")
+
+    # Table 6: budget doubling via chains (evals/s should hold).
+    t6 = Table(f"Table 6 — evals/s vs total budget ({budget.label})",
+               ["evals", "n=16 evals/s", "n=32 evals/s"],
+               fmt={"evals": ".3e", "n=16 evals/s": ".3e",
+                    "n=32 evals/s": ".3e"})
+    for w in chain_list[:3]:
+        cfg = SAConfig(T0=10.0, T_min=1.0, rho=0.7, N=20, n_chains=w)
+        a, b = _tput(obj16, w, 20, budget), _tput(obj32, w, 20, budget)
+        t6.add(evals=cfg.n_evals, **{"n=16 evals/s": a, "n=32 evals/s": b})
+    t6.show()
+    t6.save("table6_budget_scaling")
+    return t4
+
+
+if __name__ == "__main__":
+    run(Budget(quick=True))

@@ -1,0 +1,70 @@
+"""Paper Table 7: single vs double precision — time and accuracy.
+
+Paper: fp64 ~2x slower on Fermi, ~100x lower error; fp32 "enough for SA's
+purpose".  We reproduce both directions.  x64 is enabled in a subprocess so
+the global jax config of the benchmark process is untouched.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from .common import Budget, Table
+
+_CHILD = r"""
+import json, sys, time
+import jax
+if sys.argv[1] == "float64":
+    jax.config.update("jax_enable_x64", True)
+from repro.core import SAConfig, sa_minimize
+from repro.objectives import functions as F
+
+dtype = sys.argv[1]
+quick = sys.argv[2] == "quick"
+obj = F.schwefel(16)
+if quick:
+    cfg = SAConfig(T0=100.0, T_min=0.05, rho=0.9, N=30, n_chains=1024,
+                   dtype=dtype, record_history=False)
+else:
+    cfg = SAConfig(T0=1000.0, T_min=0.01, rho=0.99, N=100, n_chains=16384,
+                   dtype=dtype, record_history=False)
+res = sa_minimize(obj, cfg, key=jax.random.PRNGKey(0))  # warm compile
+t0 = time.time()
+res = sa_minimize(obj, cfg, key=jax.random.PRNGKey(1))
+dt = time.time() - t0
+df, dx = obj.error_to_opt(res.x_best, res.f_best)
+print(json.dumps({"dtype": dtype, "time_s": dt,
+                  "f_err": float(df), "x_err": float(dx)}))
+"""
+
+
+def run(budget: Budget) -> Table:
+    t = Table(f"Table 7 — fp32 vs fp64 ({budget.label})",
+              ["precision", "time_s", "|f-f*|", "rel-x err"],
+              fmt={"time_s": ".2f", "|f-f*|": ".3e", "rel-x err": ".3e"})
+    rows = {}
+    src = Path(__file__).resolve().parent.parent / "src"
+    for dtype in ("float32", "float64"):
+        out = subprocess.run(
+            [sys.executable, "-c", _CHILD, dtype, budget.label],
+            capture_output=True, text=True,
+            env={"PYTHONPATH": str(src), "PATH": "/usr/bin:/bin"},
+            check=True)
+        r = json.loads(out.stdout.strip().splitlines()[-1])
+        rows[dtype] = r
+        t.add(precision=dtype, time_s=r["time_s"], **{"|f-f*|": r["f_err"],
+                                                      "rel-x err": r["x_err"]})
+    t.show()
+    f32, f64 = rows["float32"], rows["float64"]
+    print(f"[claim] fp64 slower (paper ~2x on GPU): "
+          f"{f64['time_s']/max(f32['time_s'],1e-9):.2f}x; "
+          f"fp64 more accurate: "
+          f"{'OK' if f64['x_err'] <= f32['x_err'] * 2 else 'NOT SEEN'}")
+    t.save("table7_precision")
+    return t
+
+
+if __name__ == "__main__":
+    run(Budget(quick=True))

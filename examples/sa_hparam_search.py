@@ -1,0 +1,128 @@
+"""SA-driven hyperparameter search with the training run INSIDE the
+objective — everything jitted end to end.
+
+The paper's algorithm is a black-box global optimizer; a production use in
+an LM framework is hyperparameter search.  Here each SA "energy evaluation"
+is *an entire (tiny) training run*: f(hp) = final training loss after K
+steps.  Chains vectorize over hyperparameter candidates via ``vmap``, so a
+single Metropolis step trains ``n_chains`` models in parallel — the TPU
+adaptation of one-thread-per-chain, at the outer loop level.
+
+Search space (4-d box, the paper's coordinate-wise proposals apply as-is):
+  x0: log10(lr)        in [-4.0, -1.0]
+  x1: warmup fraction  in [0.0, 0.5]
+  x2: weight decay     in [0.0, 0.2]
+  x3: beta2            in [0.90, 0.999]
+
+Run:  PYTHONPATH=src python examples/sa_hparam_search.py
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SAConfig, sa_minimize
+from repro.objectives.base import Objective
+
+# ----- tiny transformer trained inside the objective ------------------------
+VOCAB, DM, SEQ, BATCH, STEPS = 64, 32, 32, 4, 12
+
+
+def _init(key):
+    k = jax.random.split(key, 4)
+    s = 0.02
+    return {
+        "emb": jax.random.normal(k[0], (VOCAB, DM)) * s,
+        "w1": jax.random.normal(k[1], (DM, 4 * DM)) * s,
+        "w2": jax.random.normal(k[2], (4 * DM, DM)) * s,
+        "wq": jax.random.normal(k[3], (DM, DM)) * s,
+    }
+
+
+def _fwd(p, toks):
+    x = p["emb"][toks]                      # (B, S, D)
+    q = x @ p["wq"]
+    a = jax.nn.softmax(
+        (q @ jnp.swapaxes(x, -1, -2)) / np.sqrt(DM)
+        + jnp.triu(jnp.full((SEQ, SEQ), -1e9), 1), axis=-1)
+    x = x + a @ x
+    x = x + jax.nn.gelu(x @ p["w1"]) @ p["w2"]
+    return x @ p["emb"].T                   # tied head
+
+
+def _loss(p, toks):
+    logits = _fwd(p, toks[:, :-1])
+    tgt = toks[:, 1:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, tgt[..., None], -1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def make_objective(seed: int = 0) -> Objective:
+    rng = np.random.default_rng(seed)
+    data = jnp.asarray(
+        rng.integers(0, VOCAB, size=(STEPS, BATCH, SEQ + 1)), jnp.int32)
+    p0 = _init(jax.random.PRNGKey(seed))
+
+    def train_once(hp):
+        """hp = (log10_lr, warmup_frac, wd, b2) -> final loss (scalar)."""
+        lr0 = 10.0 ** hp[0]
+        warm = jnp.maximum(hp[1] * STEPS, 1.0)
+        wd, b2 = hp[2], hp[3]
+
+        def adam_step(i, carry):
+            p, m, v = carry
+            g = jax.grad(_loss)(p, data[i])
+            lr = lr0 * jnp.minimum(1.0, (i + 1.0) / warm)
+            m = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, m, g)
+            v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ ** 2, v, g)
+            p = jax.tree.map(
+                lambda p_, m_, v_: p_ - lr * (m_ / (jnp.sqrt(v_) + 1e-8)
+                                              + wd * p_), p, m, v)
+            return p, m, v
+
+        zeros = jax.tree.map(jnp.zeros_like, p0)
+        p, _, _ = jax.lax.fori_loop(0, STEPS, adam_step, (p0, zeros, zeros))
+        return _loss(p, data[-1])
+
+    def fn(x):
+        flat = x.reshape((-1, 4))
+        out = jax.vmap(train_once)(flat)
+        return out.reshape(x.shape[:-1])
+
+    lo = np.array([-4.0, 0.0, 0.0, 0.90])
+    hi = np.array([-1.0, 0.5, 0.2, 0.999])
+    return Objective(name="lm-hparam", dim=4, lower=lo, upper=hi, fn=fn)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chains", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    obj = make_objective(args.seed)
+    cfg = SAConfig(T0=0.5, T_min=0.02, rho=0.7, N=6, n_chains=args.chains,
+                   exchange="sync", seed=args.seed, record_history=True)
+    print(f"[hparam] {cfg.n_levels} levels x N={cfg.N} x "
+          f"{cfg.n_chains} chains = {cfg.n_evals} tiny training runs")
+    t0 = time.time()
+    res = sa_minimize(obj, cfg, key=jax.random.PRNGKey(args.seed))
+    dt = time.time() - t0
+
+    # Reference: the default practitioner guess.
+    default = jnp.asarray([-3.0, 0.1, 0.01, 0.999])
+    f_default = float(obj(default[None, :])[0])
+    lr, warm, wd, b2 = res.x_best
+    print(f"[hparam] default hp loss  = {f_default:.4f}")
+    print(f"[hparam] SA best loss     = {res.f_best:.4f}  ({dt:.1f}s)")
+    print(f"[hparam] lr=10^{lr:.2f}={10**lr:.2e} warmup={warm:.2f} "
+          f"wd={wd:.3f} beta2={b2:.4f}")
+    assert res.f_best <= f_default + 1e-6, "SA should not lose to the default"
+    print("[example] OK: SA hyperparameters beat the default guess")
+
+
+if __name__ == "__main__":
+    main()

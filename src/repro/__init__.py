@@ -1,0 +1,2 @@
+"""repro: parallel simulated annealing (Ferreiro et al.) as a multi-pod JAX framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,6 @@
+"""Fault-tolerant checkpointing: async sharded save, atomic publish,
+elastic restore (re-shard to any mesh)."""
+from repro.checkpoint.manager import (CheckpointManager, latest_step,
+                                      restore_state, save_state)
+
+__all__ = ["CheckpointManager", "save_state", "restore_state", "latest_step"]

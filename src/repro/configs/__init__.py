@@ -1,0 +1,5 @@
+"""Architecture + shape registry (assignment pool)."""
+from repro.configs.archs import ARCHS, ARCH_IDS, get_arch
+from repro.configs.common import SHAPES, ArchSpec, shrink
+
+__all__ = ["ARCHS", "ARCH_IDS", "get_arch", "SHAPES", "ArchSpec", "shrink"]

@@ -1,0 +1,5 @@
+"""Assigned architecture config: gemma3-4b (defined in archs.py)."""
+from repro.configs.archs import get_arch
+
+ARCH = get_arch("gemma3-4b")
+MODEL = ARCH.model

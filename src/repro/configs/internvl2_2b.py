@@ -1,0 +1,5 @@
+"""Assigned architecture config: internvl2-2b (defined in archs.py)."""
+from repro.configs.archs import get_arch
+
+ARCH = get_arch("internvl2-2b")
+MODEL = ARCH.model

@@ -1,0 +1,5 @@
+"""Assigned architecture config: whisper-base (defined in archs.py)."""
+from repro.configs.archs import get_arch
+
+ARCH = get_arch("whisper-base")
+MODEL = ARCH.model

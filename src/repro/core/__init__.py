@@ -1,0 +1,9 @@
+"""Core: the paper's contribution — parallel simulated annealing."""
+from repro.core.annealing import SAConfig, SAResult, sa_minimize, build_sharded_ladder
+from repro.core.hybrid import HybridResult, hybrid_minimize
+from repro.core.neldermead import NMResult, nelder_mead
+
+__all__ = [
+    "SAConfig", "SAResult", "sa_minimize", "build_sharded_ladder",
+    "HybridResult", "hybrid_minimize", "NMResult", "nelder_mead",
+]

@@ -1,0 +1,82 @@
+"""Chain-exchange (crossover) operators for parallel SA.
+
+The paper's V2 performs a deterministic *minimum crossover* at every
+temperature level: all chains restart from the globally best state.  On the
+GPU this is a Thrust reduce; on the TPU mesh it is a per-shard ``argmin``
+followed by a tiny ``all_gather`` of per-shard champions — only
+``devices × (dim + 1)`` floats move over the interconnect, exactly the
+paper's "only function values are exchanged among workers".
+
+Strategies
+----------
+``async``  : no exchange until the very end (paper V1).
+``sync``   : minimum crossover each ``period`` levels (paper V2, period=1).
+``sos``    : Synchronous with Occasional Solution exchanges (Onbasoglu &
+             Özdamar [23]) — stochastic crossover: a chain adopts the
+             champion only if better, or with Metropolis probability at the
+             current temperature; keeps chain diversity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def local_champion(x, fx):
+    """Best (x, f) among the local chains."""
+    i = jnp.argmin(fx)
+    return x[i], fx[i]
+
+
+def global_champion(x, fx, axis_names=None):
+    """Champion across local chains and (optionally) mesh axes.
+
+    Inside ``shard_map`` with ``axis_names`` set, gathers one champion per
+    shard and reduces replicatedly (identical result on all shards).
+    """
+    xb, fb = local_champion(x, fx)
+    if axis_names:
+        # Tiny collective: (devices, dim+1) floats.
+        fall = lax.all_gather(fb, axis_names, tiled=False)  # (shards,)
+        xall = lax.all_gather(xb, axis_names, tiled=False)  # (shards, dim)
+        fall = fall.reshape(-1)
+        xall = xall.reshape(-1, x.shape[-1])
+        j = jnp.argmin(fall)
+        xb, fb = xall[j], fall[j]
+    return xb, fb
+
+
+def exchange_sync(key, x, fx, T, axis_names=None):
+    """Paper V2: every chain restarts from the global champion."""
+    xb, fb = global_champion(x, fx, axis_names)
+    x = jnp.broadcast_to(xb[None, :], x.shape)
+    fx = jnp.full_like(fx, fb)
+    return x, fx
+
+
+def exchange_sos(key, x, fx, T, axis_names=None):
+    """Stochastic crossover: adopt champion if better, else with Metropolis
+    probability exp(-(fb - fx)/T).  (fb <= fx always ⇒ adopting is always
+    'downhill'; diversity is kept by *not* forcing adoption: each chain
+    adopts only with probability 1/2 when the champion is not strictly
+    better than its own state by more than T.)"""
+    xb, fb = global_champion(x, fx, axis_names)
+    u = jax.random.uniform(key, fx.shape, dtype=fx.dtype)
+    # Probability of adoption grows with the deficit (fx - fb)/T.
+    p = 1.0 - jnp.exp(jnp.clip(-(fx - fb) / jnp.maximum(T, 1e-30), -80.0, 0.0))
+    adopt = u <= p
+    x = jnp.where(adopt[:, None], xb[None, :], x)
+    fx = jnp.where(adopt, fb, fx)
+    return x, fx
+
+
+def exchange_none(key, x, fx, T, axis_names=None):
+    return x, fx
+
+
+EXCHANGES = {
+    "async": exchange_none,
+    "sync": exchange_sync,
+    "sos": exchange_sos,
+}

@@ -1,0 +1,43 @@
+"""Hybrid SA → Nelder–Mead strategy (paper §4.2, Table 10).
+
+The annealing run is stopped *prematurely* (a much hotter ``T_min`` / smaller
+eval budget than a pure-SA run would need) and its champion seeds a local
+simplex minimization.  The paper shows this is orders of magnitude better in
+both error and time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.core.annealing import SAConfig, SAResult, sa_minimize
+from repro.core.neldermead import NMResult, nelder_mead
+from repro.objectives.base import Objective
+
+
+@dataclasses.dataclass
+class HybridResult:
+    sa: SAResult
+    nm: NMResult
+
+    @property
+    def x_best(self):
+        return self.nm.x_best
+
+    @property
+    def f_best(self) -> float:
+        return min(self.nm.f_best, self.sa.f_best)
+
+
+def hybrid_minimize(objective: Objective, sa_config: SAConfig,
+                    key: Optional[jax.Array] = None,
+                    nm_max_iters: int = 4000,
+                    nm_fatol: float = 1e-12, nm_xatol: float = 1e-12,
+                    mesh=None, mesh_axes=None) -> HybridResult:
+    sa_res = sa_minimize(objective, sa_config, key=key, mesh=mesh,
+                         mesh_axes=mesh_axes)
+    nm_res = nelder_mead(objective, sa_res.x_best, max_iters=nm_max_iters,
+                         fatol=nm_fatol, xatol=nm_xatol)
+    return HybridResult(sa=sa_res, nm=nm_res)

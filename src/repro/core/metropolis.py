@@ -1,0 +1,136 @@
+"""Vectorized Metropolis sweeps (the paper's inner loop, Listing 2/4).
+
+A sweep runs ``n_steps`` Metropolis iterations at a fixed temperature ``T``
+for a whole *batch* of chains at once: ``x`` has shape ``(chains, dim)``.
+This is the TPU adaptation of the CUDA one-thread-per-chain design — chains
+are SIMD lanes, the accept/reject branch is a branchless masked select
+(DESIGN.md §2).
+
+Two implementations:
+
+* :func:`sweep_full`  — paper-faithful: every proposal evaluates the full
+  objective, O(dim) work per step per chain.
+* :func:`sweep_delta` — beyond-paper: for decomposable objectives, maintains
+  sum/product accumulators and applies an O(1) update per step.  Exactly
+  equivalent in accepted-point trajectory for identical random streams
+  (validated in tests up to float tolerance).
+
+Both use three uniforms per step, exactly as the paper prescribes (coordinate
+pick, replacement value, acceptance draw).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.objectives.base import DecomposableSpec, Objective
+
+
+def _proposal(key_d, key_u, x, lo, hi):
+    """Paper's ComputeNeighbour: replace one random coordinate with a fresh
+    uniform draw over that coordinate's box interval."""
+    chains, dim = x.shape
+    d = jax.random.randint(key_d, (chains,), 0, dim)
+    u = jax.random.uniform(key_u, (chains,), dtype=x.dtype)
+    newval = lo[d] + u * (hi[d] - lo[d])
+    return d, newval
+
+
+def _accept(key_a, f0, f1, T):
+    """Metropolis criterion, branchless. Accepts downhill moves always
+    (exp(+) >= 1 >= u) and uphill with probability exp(-df/T)."""
+    u = jax.random.uniform(key_a, f0.shape, dtype=f0.dtype)
+    # Clamp the exponent to avoid inf-inf NaNs under extreme df/T.
+    ratio = jnp.exp(jnp.clip(-(f1 - f0) / T, -80.0, 80.0))
+    return u <= ratio
+
+
+@partial(jax.jit, static_argnames=("objective", "n_steps", "unroll"))
+def sweep_full(key, x, fx, T, *, objective: Objective, n_steps: int,
+               unroll: bool = False):
+    """Paper-faithful Metropolis sweep with full objective evaluation."""
+    lo, hi = objective.bounds
+    lo = lo.astype(x.dtype)
+    hi = hi.astype(x.dtype)
+    chains = x.shape[0]
+    rows = jnp.arange(chains)
+
+    def body(i, carry):
+        key, x, fx = carry
+        key, kd, ku, ka = jax.random.split(key, 4)
+        d, newval = _proposal(kd, ku, x, lo, hi)
+        x1 = x.at[rows, d].set(newval)
+        f1 = objective(x1)
+        acc = _accept(ka, fx, f1, T)
+        x = jnp.where(acc[:, None], x1, x)
+        fx = jnp.where(acc, f1, fx)
+        return key, x, fx
+
+    carry = (key, x, fx)
+    if unroll:  # cost-measurement mode (see launch/dryrun.py)
+        for i in range(n_steps):
+            carry = body(i, carry)
+        key, x, fx = carry
+    else:
+        key, x, fx = lax.fori_loop(0, n_steps, body, carry)
+    return key, x, fx
+
+
+@partial(jax.jit, static_argnames=("objective", "n_steps", "unroll"))
+def sweep_delta(key, x, fx, T, *, objective: Objective, n_steps: int,
+                unroll: bool = False):
+    """O(1)-per-step sweep for decomposable objectives.
+
+    Accumulators are refreshed (recomputed exactly) at sweep entry, so fp
+    drift from incremental updates is bounded by one temperature level.
+    """
+    spec: Optional[DecomposableSpec] = objective.decomposable
+    assert spec is not None, f"{objective.name} has no decomposable structure"
+    lo, hi = objective.bounds
+    lo = lo.astype(x.dtype)
+    hi = hi.astype(x.dtype)
+    chains, dim = x.shape
+    rows = jnp.arange(chains)
+
+    S, (logP, sgnP) = spec.init_acc(x)
+    fx = spec.value(S, (logP, sgnP), dim)  # refresh f from exact accumulators
+
+    def term_at(xi, d):
+        s, p = spec.terms(xi, d)
+        return s, p
+
+    def body(i, carry):
+        key, x, fx, S, logP, sgnP = carry
+        key, kd, ku, ka = jax.random.split(key, 4)
+        d, newval = _proposal(kd, ku, x, lo, hi)
+        xi_old = x[rows, d]
+        s_old, p_old = term_at(xi_old, d)
+        s_new, p_new = term_at(newval, d)
+        S1 = S - s_old + s_new
+        la_old = jnp.log(jnp.maximum(jnp.abs(p_old), 1e-30))
+        la_new = jnp.log(jnp.maximum(jnp.abs(p_new), 1e-30))
+        logP1 = logP - la_old + la_new
+        sg = jnp.where(p_old < 0, -1.0, 1.0) * jnp.where(p_new < 0, -1.0, 1.0)
+        sgnP1 = sgnP * sg.astype(sgnP.dtype)
+        f1 = spec.value(S1, (logP1, sgnP1), dim)
+        acc = _accept(ka, fx, f1, T)
+        accc = acc[:, None]
+        x = x.at[rows, d].set(jnp.where(acc, newval, xi_old))
+        fx = jnp.where(acc, f1, fx)
+        S = jnp.where(accc, S1, S)
+        logP = jnp.where(accc, logP1, logP)
+        sgnP = jnp.where(accc, sgnP1, sgnP)
+        return key, x, fx, S, logP, sgnP
+
+    carry = (key, x, fx, S, logP, sgnP)
+    if unroll:  # cost-measurement mode
+        for i in range(n_steps):
+            carry = body(i, carry)
+        key, x, fx, *_ = carry
+    else:
+        key, x, fx, *_ = lax.fori_loop(0, n_steps, body, carry)
+    return key, x, fx

@@ -1,0 +1,109 @@
+"""Box-constrained Nelder–Mead simplex minimizer, pure ``lax.while_loop``.
+
+Used by the hybrid SA→NM strategy (paper §4.2, Table 10).  Standard
+coefficients (reflection α=1, expansion γ=2, contraction β=0.5, shrink σ=0.5)
+with candidate points clipped to the box.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass
+class NMResult:
+    x_best: jnp.ndarray
+    f_best: float
+    n_iters: int
+    converged: bool
+
+
+def _order(simplex, fvals):
+    idx = jnp.argsort(fvals)
+    return simplex[idx], fvals[idx]
+
+
+@partial(jax.jit, static_argnames=("fn", "max_iters"))
+def _nm_loop(x0, lo, hi, *, fn: Callable, max_iters: int,
+             fatol: float, xatol: float):
+    n = x0.shape[-1]
+    dtype = x0.dtype
+
+    # Initial simplex: x0 plus per-coordinate perturbations (5% of the box,
+    # guarded to be nonzero).
+    step = 0.05 * (hi - lo)
+    simplex = jnp.concatenate(
+        [x0[None, :], jnp.clip(x0[None, :] + jnp.diag(step), lo, hi)], axis=0
+    )  # (n+1, n)
+    fvals = jax.vmap(fn)(simplex)
+    simplex, fvals = _order(simplex, fvals)
+
+    def cond(state):
+        simplex, fvals, it = state
+        fspread = fvals[-1] - fvals[0]
+        xspread = jnp.max(jnp.abs(simplex[1:] - simplex[0]))
+        return (it < max_iters) & ((fspread > fatol) | (xspread > xatol))
+
+    def body(state):
+        simplex, fvals, it = state
+        c = jnp.mean(simplex[:-1], axis=0)  # centroid of the best n
+        worst = simplex[-1]
+        f_best, f_second, f_worst = fvals[0], fvals[-2], fvals[-1]
+
+        xr = jnp.clip(c + (c - worst), lo, hi)  # reflection
+        fr = fn(xr)
+
+        xe = jnp.clip(c + 2.0 * (c - worst), lo, hi)  # expansion
+        fe = fn(xe)
+
+        xc = jnp.clip(c + 0.5 * (worst - c), lo, hi)  # contraction
+        fc = fn(xc)
+
+        # Decision tree, branchless.
+        do_expand = fr < f_best
+        new_pt_er = jnp.where(do_expand & (fe < fr), xe, xr)
+        new_f_er = jnp.where(do_expand & (fe < fr), fe, fr)
+        use_reflect_like = fr < f_second
+        do_contract = (~use_reflect_like) & (fc < f_worst)
+
+        accept_point = use_reflect_like | do_contract
+        new_pt = jnp.where(use_reflect_like, new_pt_er, xc)
+        new_f = jnp.where(use_reflect_like, new_f_er, fc)
+
+        simplex_acc = simplex.at[-1].set(new_pt)
+        fvals_acc = fvals.at[-1].set(new_f)
+
+        # Shrink toward the best vertex when nothing was accepted.
+        shrunk = jnp.clip(simplex[0][None, :] + 0.5 * (simplex - simplex[0]), lo, hi)
+        fshrunk = jax.vmap(fn)(shrunk)
+
+        simplex = jnp.where(accept_point, simplex_acc, shrunk)
+        fvals = jnp.where(accept_point, fvals_acc, fshrunk)
+        simplex, fvals = _order(simplex, fvals)
+        return simplex, fvals, it + 1
+
+    simplex, fvals, it = lax.while_loop(cond, body, (simplex, fvals, jnp.zeros((), jnp.int32)))
+    fspread = fvals[-1] - fvals[0]
+    xspread = jnp.max(jnp.abs(simplex[1:] - simplex[0]))
+    converged = (fspread <= fatol) & (xspread <= xatol)
+    return simplex[0], fvals[0], it, converged
+
+
+def nelder_mead(objective, x0, max_iters: int = 4000,
+                fatol: float = 1e-10, xatol: float = 1e-10) -> NMResult:
+    """Minimize ``objective`` (an ``Objective``) starting from ``x0``."""
+    lo, hi = objective.bounds
+    x0 = jnp.asarray(x0)
+    lo = lo.astype(x0.dtype)
+    hi = hi.astype(x0.dtype)
+    xb, fb, it, conv = _nm_loop(
+        x0, lo, hi, fn=objective.fn, max_iters=max_iters,
+        fatol=fatol, xatol=xatol,
+    )
+    return NMResult(x_best=xb, f_best=float(fb), n_iters=int(it),
+                    converged=bool(conv))

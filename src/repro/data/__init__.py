@@ -1,0 +1,5 @@
+"""Deterministic, shardable data pipeline with checkpointable iterator state."""
+from repro.data.pipeline import (DataConfig, TokenDataset, make_batches,
+                                 synthetic_dataset)
+
+__all__ = ["DataConfig", "TokenDataset", "make_batches", "synthetic_dataset"]

@@ -1,0 +1,12 @@
+"""Distributed substrate: compression, monitoring, pipeline parallelism."""
+from repro.distributed.compression import (compress_grads_tree,
+                                           compressed_psum, init_residuals)
+from repro.distributed.monitor import Heartbeat, StepTimer, StragglerMonitor
+from repro.distributed.pipeline import (bubble_fraction, make_pipelined_fn,
+                                        pipeline_apply)
+
+__all__ = [
+    "compressed_psum", "compress_grads_tree", "init_residuals",
+    "Heartbeat", "StepTimer", "StragglerMonitor",
+    "pipeline_apply", "make_pipelined_fn", "bubble_fraction",
+]

@@ -1,0 +1,205 @@
+"""SA-driven sharding autotuner: the paper's optimizer pointed at the
+framework's own distribution problem.
+
+Search space (discrete, encoded into the SA box [0,1)^k — coordinate-wise
+uniform proposals quantize to choice indices, so the paper's Metropolis
+kernel applies unchanged):
+
+  d0: dp_split   — how many of the ``chips`` go to DP (rest = TP); choices
+                   are divisors of ``chips`` that also divide global batch.
+  d1: remat      — none | dots | full  (activation-memory vs recompute)
+  d2: ep         — MoE expert-parallel on/off (all_to_all vs replicated)
+  d3: microbatch — 1|2|4|8 gradient-accumulation chunks
+  d4: compress   — fp32 | bf16 | int8 gradient all-reduce payload
+
+The objective is an analytic three-term roofline step-time estimate — the
+same compute/memory/collective decomposition the dry-run extracts from
+compiled HLO (launch/dryrun.py), so SA minimizes exactly the quantity §Perf
+hillclimbs.  A model, not a measurement: validated against dry-run terms in
+tests/test_autotune.py; exhaustive-search agreement is asserted there too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import ModelConfig
+from repro.objectives.base import Objective
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+REMAT_CHOICES = ("none", "dots", "full")
+# extra fwd-flops multiplier: none=0, dots≈.3 (recompute non-dot), full=1
+_REMAT_RECOMP = {"none": 0.0, "dots": 0.3, "full": 1.0}
+# activation bytes kept per token per layer (fraction of no-remat)
+_REMAT_ACT = {"none": 1.0, "dots": 0.35, "full": 0.08}
+MB_CHOICES = (1, 2, 4, 8)
+COMPRESS_CHOICES = ("fp32", "bf16", "int8")
+_COMPRESS_BYTES = {"fp32": 4.0, "bf16": 2.0, "int8": 1.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneProblem:
+    cfg: ModelConfig
+    seq: int
+    batch: int
+    chips: int
+    kind: str = "train"        # 'train' | 'prefill' | 'decode'
+
+    def dp_choices(self) -> tuple[int, ...]:
+        out = []
+        for dp in range(1, self.chips + 1):
+            if self.chips % dp == 0 and self.batch % dp == 0:
+                out.append(dp)
+        return tuple(out)
+
+    def space(self) -> tuple[tuple[str, int], ...]:
+        return (("dp", len(self.dp_choices())),
+                ("remat", len(REMAT_CHOICES)),
+                ("ep", 2),
+                ("mb", len(MB_CHOICES)),
+                ("compress", len(COMPRESS_CHOICES)))
+
+
+def decode_point(prob: TuneProblem, x: np.ndarray) -> dict:
+    """Map a box point in [0,1)^5 to a concrete decision dict."""
+    dps = prob.dp_choices()
+    idx = [min(int(xi * n), n - 1) for xi, (_, n) in zip(x, prob.space())]
+    return {
+        "dp": dps[idx[0]], "tp": prob.chips // dps[idx[0]],
+        "remat": REMAT_CHOICES[idx[1]],
+        "ep": bool(idx[2]) and prob.cfg.n_experts > 0,
+        "microbatch": MB_CHOICES[idx[3]],
+        "compress": COMPRESS_CHOICES[idx[4]],
+    }
+
+
+def _cost_terms(prob: TuneProblem, dp, remat_recomp, remat_act, ep, mb,
+                comp_bytes):
+    """Vectorized analytic roofline terms (all args jnp arrays)."""
+    cfg = prob.cfg
+    total, active = cfg.param_count()
+    D = float(cfg.d_model)
+    Ls = float(cfg.n_layers)
+    tokens = float(prob.batch * prob.seq)
+    tp = prob.chips / dp
+    bytes_p = 2.0  # bf16 params/activations
+
+    mult = 6.0 if prob.kind == "train" else 2.0
+    model_flops = mult * float(active) * tokens
+    # recompute applies to the forward third of 6ND
+    flops = model_flops * (1.0 + remat_recomp * (2.0 / mult))
+    compute_s = flops / (prob.chips * PEAK_FLOPS)
+
+    # memory: params traversed (fwd+bwd+opt ~ 3x for train), activations
+    # streamed in/out once, scaled by remat retention; KV cache for decode.
+    p_traverse = 3.0 if prob.kind == "train" else 1.0
+    act_bytes = tokens * D * Ls * 8.0 * bytes_p * remat_act
+    mem_bytes = p_traverse * float(total) * bytes_p + act_bytes
+    if prob.kind == "train":
+        mem_bytes = mem_bytes + 3.0 * float(total) * 4.0  # fp32 opt state r/w
+    memory_s = mem_bytes / (prob.chips * HBM_BW)
+
+    # collectives
+    #   TP: 2 all-reduces per layer of (tokens/dp, D) activations
+    tp_bytes = jnp.where(tp > 1,
+                         2.0 * Ls * (tokens / dp) * D * bytes_p * 2.0
+                         * (tp - 1.0) / tp, 0.0)
+    #   DP grad sync: ring reduce-scatter+all-gather of param bytes / tp
+    dp_bytes = jnp.where(dp > 1,
+                         2.0 * (float(total) / tp) * comp_bytes
+                         * (dp - 1.0) / dp, 0.0)
+    #   EP dispatch: top_k-routed activations all_to_all, 2x (fwd+bwd-ish)
+    if cfg.n_experts:
+        ep_bytes = jnp.where(ep,
+                             4.0 * (tokens / prob.chips) * D * bytes_p
+                             * float(cfg.top_k), 0.0)
+        # without EP the routed FFN weights are replicated: pay a one-time
+        # broadcast amortized as an extra DP-style sync on expert params
+        moe_params = float(total - active)
+        ep_bytes = ep_bytes + jnp.where(ep, 0.0, 2.0 * moe_params
+                                        * comp_bytes * (dp - 1.0)
+                                        / jnp.maximum(dp, 1.0))
+    else:
+        ep_bytes = jnp.zeros_like(tp_bytes)
+    coll_bytes = tp_bytes + dp_bytes / mb + ep_bytes  # grad sync 1/mb-able
+    collective_s = coll_bytes / (prob.chips * ICI_BW)
+
+    # memory-capacity penalty: activations + params + opt must fit 16 GiB.
+    hbm_cap = 16.0 * 2 ** 30
+    state_bytes = (float(total) * (bytes_p + 12.0) / prob.chips  # p+opt fp32
+                   + act_bytes / (prob.chips * mb))
+    over = jnp.maximum(state_bytes / hbm_cap - 1.0, 0.0)
+    penalty = over * 100.0  # strongly discourage OOM points
+
+    # int8 compression numeric tax: tiny fixed penalty so it's only chosen
+    # when the wire win is real.
+    penalty = penalty + jnp.where(comp_bytes < 2.0, 1e-4, 0.0)
+    return compute_s, memory_s, collective_s, penalty
+
+
+def make_objective(prob: TuneProblem) -> Objective:
+    """Step-time estimate as an SA Objective over the [0,1)^5 box."""
+    dps = np.asarray(prob.dp_choices(), np.float64)
+    n_dp = len(dps)
+    recomp = np.asarray([_REMAT_RECOMP[r] for r in REMAT_CHOICES])
+    act = np.asarray([_REMAT_ACT[r] for r in REMAT_CHOICES])
+    mbs = np.asarray(MB_CHOICES, np.float64)
+    cbytes = np.asarray([_COMPRESS_BYTES[c] for c in COMPRESS_CHOICES])
+
+    def fn(x):
+        x = jnp.asarray(x)
+        i_dp = jnp.clip((x[..., 0] * n_dp).astype(jnp.int32), 0, n_dp - 1)
+        i_rm = jnp.clip((x[..., 1] * 3).astype(jnp.int32), 0, 2)
+        i_ep = jnp.clip((x[..., 2] * 2).astype(jnp.int32), 0, 1)
+        i_mb = jnp.clip((x[..., 3] * 4).astype(jnp.int32), 0, 3)
+        i_cp = jnp.clip((x[..., 4] * 3).astype(jnp.int32), 0, 2)
+        dp = jnp.take(jnp.asarray(dps), i_dp)
+        c, m, coll, pen = _cost_terms(
+            prob, dp,
+            jnp.take(jnp.asarray(recomp), i_rm),
+            jnp.take(jnp.asarray(act), i_rm),
+            i_ep.astype(bool), jnp.take(jnp.asarray(mbs), i_mb),
+            jnp.take(jnp.asarray(cbytes), i_cp))
+        # overlappable: compute hides the larger of (memory, collective)
+        # partially; model 70% overlap of the non-dominant pair.
+        hi = jnp.maximum(jnp.maximum(c, m), coll)
+        rest = c + m + coll - hi
+        return hi + 0.3 * rest + pen
+
+    return Objective(name=f"autotune-{prob.cfg.name}", dim=5,
+                     lower=np.zeros(5), upper=np.ones(5) - 1e-9, fn=fn)
+
+
+def exhaustive_best(prob: TuneProblem) -> tuple[dict, float]:
+    """Brute-force reference (small space) — used for validation."""
+    obj = make_objective(prob)
+    space = prob.space()
+    best, best_f = None, np.inf
+    grids = [np.arange(n) for _, n in space]
+    for combo in itertools.product(*grids):
+        x = np.array([(c + 0.5) / n for c, (_, n) in zip(combo, space)])
+        f = float(obj(jnp.asarray(x)[None, :])[0])
+        if f < best_f:
+            best, best_f = x, f
+    return decode_point(prob, best), best_f
+
+
+def autotune(prob: TuneProblem, n_chains: int = 256, seed: int = 0,
+             mesh=None) -> tuple[dict, float]:
+    """Run synchronous parallel SA over the decision space."""
+    import jax
+
+    from repro.core import SAConfig, sa_minimize
+
+    obj = make_objective(prob)
+    cfg = SAConfig(T0=1.0, T_min=1e-3, rho=0.85, N=20, n_chains=n_chains,
+                   exchange="sync", seed=seed, record_history=False)
+    res = sa_minimize(obj, cfg, key=jax.random.PRNGKey(seed), mesh=mesh)
+    return decode_point(prob, np.asarray(res.x_best)), float(res.f_best)

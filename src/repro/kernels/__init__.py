@@ -1,0 +1,4 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU)."""
+from repro.kernels import objective_math
+from repro.kernels.ops import metropolis_sweep, resolve_use_pallas
+from repro.kernels.reduce_min import argmin_reduce, block_argmin_pallas

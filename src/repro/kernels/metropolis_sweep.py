@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: fused Metropolis sweep (the paper's Listing 2/4 body).
+
+One kernel invocation advances a block of ``blk`` chains by ``n_steps``
+Metropolis iterations at fixed temperature, entirely in VMEM:
+
+  HBM traffic   : one read of the (blk, dim) state block + one write, per
+                  *sweep* (N steps) — the CUDA version's design goal
+                  ("no global-memory round trips inside the chain") mapped
+                  to the TPU memory hierarchy.
+  RNG           : counter-based threefry2x32 on the VPU (see rng.py); the
+                  TPU analogue of per-thread CURAND state.
+  accept/reject : branchless masked selects — no divergence on TPU.
+
+Variants
+--------
+``full``  : paper-faithful — every proposal evaluates the objective over all
+            ``dim`` coordinates (O(dim) transcendentals per step).
+``delta`` : beyond-paper — sum/product accumulators updated in O(1) per step
+            (DESIGN.md §2); identical proposal/acceptance stream.
+
+Block shape: ``(blk, dim)``; ``blk`` is a multiple of 8 (sublanes), ``dim``
+pads to the 128-lane VREG width. Chains are fully independent so the grid
+over chain-blocks is embarrassingly parallel ("arbitrary dimension" in
+Mosaic terms).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels import objective_math as om
+from repro.kernels import rng
+
+
+def _accept_prob(f0, f1, T):
+    return jnp.exp(jnp.clip(-(f1 - f0) / T, -80.0, 80.0))
+
+
+def _step_draws(seed, cidx, step0, i):
+    """Three uniforms for step i (paper Step 3): coord bits, value, accept."""
+    return rng.draws3(seed, cidx, (step0 + i).astype(jnp.uint32))
+
+
+def _sweep_kernel(seed_ref, step0_ref, t_ref, x_ref, xo_ref, fo_ref,
+                  *, kid: int, n_steps: int, blk: int, variant: str):
+    dim = x_ref.shape[-1]
+    lo, hi = om.BOX[kid]
+    lo = np.float32(lo)
+    hi = np.float32(hi)
+    seed = seed_ref[0]
+    step0 = step0_ref[0]
+    T = t_ref[0]
+
+    pid = pl.program_id(0)
+    cidx = (pid * blk + lax.broadcasted_iota(jnp.int32, (blk, 1), 0)).astype(jnp.uint32)
+    coords = lax.broadcasted_iota(jnp.int32, (blk, dim), 1)
+
+    x = x_ref[...]
+
+    if variant == "delta":
+        S, logP, sgnP = om.init_acc(kid, x)
+        fx = om.combine(kid, S, logP, sgnP, dim)
+
+        def body(i, carry):
+            x, fx, S, logP, sgnP = carry
+            rbits, uval, uacc = _step_draws(seed, cidx, step0, i)
+            d = (rbits % np.uint32(dim)).astype(jnp.int32)  # (blk, 1)
+            onehot = coords == d
+            xi_old = jnp.sum(jnp.where(onehot, x, 0.0), axis=1, keepdims=True)
+            newval = lo + uval * (hi - lo)
+            df = d.astype(x.dtype)
+            s_old, p_old = om.term(kid, xi_old, df)
+            s_new, p_new = om.term(kid, newval, df)
+            S1 = S - s_old + s_new
+            logP1 = (logP
+                     - jnp.log(jnp.maximum(jnp.abs(p_old), 1e-30))
+                     + jnp.log(jnp.maximum(jnp.abs(p_new), 1e-30)))
+            sg = jnp.where(p_old < 0, -1.0, 1.0) * jnp.where(p_new < 0, -1.0, 1.0)
+            sgnP1 = sgnP * sg.astype(sgnP.dtype)
+            f1 = om.combine(kid, S1, logP1, sgnP1, dim)
+            acc = uacc <= _accept_prob(fx, f1, T)  # (blk, 1)
+            x = jnp.where(onehot & acc, newval, x)
+            fx = jnp.where(acc, f1, fx)
+            S = jnp.where(acc, S1, S)
+            logP = jnp.where(acc, logP1, logP)
+            sgnP = jnp.where(acc, sgnP1, sgnP)
+            return x, fx, S, logP, sgnP
+
+        x, fx, *_ = lax.fori_loop(0, n_steps, body, (x, fx, S, logP, sgnP))
+    else:  # full: paper-faithful O(dim) evaluation per step
+        fx = om.full_eval(kid, x, dim)
+
+        def body(i, carry):
+            x, fx = carry
+            rbits, uval, uacc = _step_draws(seed, cidx, step0, i)
+            d = (rbits % np.uint32(dim)).astype(jnp.int32)
+            onehot = coords == d
+            newval = lo + uval * (hi - lo)
+            x1 = jnp.where(onehot, newval, x)
+            f1 = om.full_eval(kid, x1, dim)
+            acc = uacc <= _accept_prob(fx, f1, T)
+            x = jnp.where(acc, x1, x)
+            fx = jnp.where(acc, f1, fx)
+            return x, fx
+
+        x, fx = lax.fori_loop(0, n_steps, body, (x, fx))
+
+    xo_ref[...] = x
+    fo_ref[...] = fx
+
+
+def metropolis_sweep_pallas(x, T, seed, step0, *, kid: int, n_steps: int,
+                            blk: int = 256, variant: str = "delta",
+                            interpret: bool = False):
+    """Run an N-step Metropolis sweep for all chains.
+
+    Args:
+      x: (chains, dim) float32 chain states.
+      T: scalar temperature. seed/step0: RNG stream coordinates.
+      kid: registry objective id (objective_math.KID_*).
+      n_steps: Metropolis steps (paper's N).
+      blk: chains per kernel block (multiple of 8).
+      variant: 'delta' (O(1) updates) or 'full' (paper-faithful).
+
+    Returns (x_out, f_out): (chains, dim) and (chains,).
+    """
+    chains, dim = x.shape
+    if chains % blk:
+        raise ValueError(f"chains={chains} must be a multiple of blk={blk}")
+    grid = (chains // blk,)
+
+    kernel = functools.partial(
+        _sweep_kernel, kid=kid, n_steps=n_steps, blk=blk, variant=variant)
+
+    seed_arr = jnp.asarray([seed], jnp.uint32).reshape((1,))
+    step0_arr = jnp.asarray([step0], jnp.uint32).reshape((1,))
+    t_arr = jnp.asarray([T], jnp.float32).reshape((1,))
+
+    x_out, f_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((blk, dim), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk, dim), lambda i: (i, 0)),
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((chains, dim), x.dtype),
+            jax.ShapeDtypeStruct((chains, 1), x.dtype),
+        ],
+        interpret=interpret,
+        name=f"metropolis_sweep_{variant}_k{kid}",
+    )(seed_arr, step0_arr, t_arr, x)
+    return x_out, f_out[:, 0]

@@ -1,0 +1,101 @@
+"""Kernel-side objective math for the registry objectives.
+
+Shared by the Pallas kernel (``metropolis_sweep.py``) and the pure-jnp
+oracle (``ref.py``) so both compute identical floating-point expressions.
+
+Accumulator layout (uniform across objectives, unused slots stay zero):
+  S    : (..., 2)  sum accumulators
+  logP : (..., 1)  log-magnitude of the product accumulator
+  sgnP : (..., 1)  sign (+-1) of the product accumulator
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+KID_SCHWEFEL = 0
+KID_RASTRIGIN = 1
+KID_ACKLEY = 2
+KID_GRIEWANK = 3
+
+KID_BY_NAME = {
+    "schwefel": KID_SCHWEFEL,
+    "rastrigin": KID_RASTRIGIN,
+    "ackley": KID_ACKLEY,
+    "griewank": KID_GRIEWANK,
+}
+# Uniform box per registry objective.
+BOX = {
+    KID_SCHWEFEL: (-512.0, 512.0),
+    KID_RASTRIGIN: (-5.12, 5.12),
+    KID_ACKLEY: (-30.0, 30.0),
+    KID_GRIEWANK: (-600.0, 600.0),
+}
+
+_PI = np.float32(np.pi)
+_E = np.float32(np.e)
+_TINY = np.float32(1e-30)
+
+
+def full_eval(kid: int, x, dim: int):
+    """Full objective evaluation; x: (..., dim) -> (..., 1)."""
+    if kid == KID_SCHWEFEL:
+        f = -jnp.sum(x * jnp.sin(jnp.sqrt(jnp.abs(x))), -1, keepdims=True) / dim
+    elif kid == KID_RASTRIGIN:
+        f = 10.0 * dim + jnp.sum(x * x - 10.0 * jnp.cos(2 * _PI * x), -1, keepdims=True)
+    elif kid == KID_ACKLEY:
+        s1 = jnp.sum(x * x, -1, keepdims=True)
+        s2 = jnp.sum(jnp.cos(2 * _PI * x), -1, keepdims=True)
+        f = (-20.0 * jnp.exp(-0.2 * jnp.sqrt(s1 / dim))
+             - jnp.exp(s2 / dim) + 20.0 + _E)
+    elif kid == KID_GRIEWANK:
+        i = jnp.sqrt(jnp.arange(1, dim + 1, dtype=x.dtype))
+        s = jnp.sum(x * x, -1, keepdims=True) / 4000.0
+        p = jnp.prod(jnp.cos(x / i), -1, keepdims=True)
+        f = 1.0 + s - p
+    else:
+        raise ValueError(f"unknown kernel objective id {kid}")
+    return f.astype(x.dtype)
+
+
+def term(kid: int, xi, d):
+    """Per-coordinate contributions. xi, d: (..., 1). Returns (s (...,2), p (...,1))."""
+    z = jnp.zeros_like(xi)
+    if kid == KID_SCHWEFEL:
+        return jnp.concatenate([xi * jnp.sin(jnp.sqrt(jnp.abs(xi))), z], -1), jnp.ones_like(xi)
+    if kid == KID_RASTRIGIN:
+        return jnp.concatenate([xi * xi - 10.0 * jnp.cos(2 * _PI * xi), z], -1), jnp.ones_like(xi)
+    if kid == KID_ACKLEY:
+        return jnp.concatenate([xi * xi, jnp.cos(2 * _PI * xi)], -1), jnp.ones_like(xi)
+    if kid == KID_GRIEWANK:
+        s = jnp.concatenate([xi * xi / 4000.0, z], -1)
+        p = jnp.cos(xi / jnp.sqrt(d.astype(xi.dtype) + 1.0))
+        return s, p
+    raise ValueError(f"unknown kernel objective id {kid}")
+
+
+def init_acc(kid: int, x):
+    """Exact O(dim) accumulator init from the state block x: (..., dim)."""
+    dim = x.shape[-1]
+    d = jnp.broadcast_to(jnp.arange(dim, dtype=x.dtype), x.shape)
+    # term() over every coordinate: reshape to (..., dim, 1)
+    s, p = term(kid, x[..., None], d[..., None])  # (..., dim, 2), (..., dim, 1)
+    S = jnp.sum(s, axis=-2)
+    logP = jnp.sum(jnp.log(jnp.maximum(jnp.abs(p), _TINY)), axis=-2)
+    sgnP = jnp.prod(jnp.where(p < 0, -1.0, 1.0).astype(x.dtype), axis=-2)
+    return S, logP, sgnP
+
+
+def combine(kid: int, S, logP, sgnP, dim: int):
+    """Accumulators -> objective value (..., 1)."""
+    if kid == KID_SCHWEFEL:
+        return -S[..., 0:1] / dim
+    if kid == KID_RASTRIGIN:
+        return 10.0 * dim + S[..., 0:1]
+    if kid == KID_ACKLEY:
+        return (-20.0 * jnp.exp(-0.2 * jnp.sqrt(S[..., 0:1] / dim))
+                - jnp.exp(S[..., 1:2] / dim) + 20.0 + _E)
+    if kid == KID_GRIEWANK:
+        P = sgnP * jnp.exp(logP)
+        return 1.0 + S[..., 0:1] - P
+    raise ValueError(f"unknown kernel objective id {kid}")

@@ -1,0 +1,51 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``use_pallas='auto'`` selects the Pallas path on TPU backends and the pure
+XLA reference elsewhere (the CPU container cannot lower TPU custom calls;
+tests exercise the kernels under ``interpret=True``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import objective_math as om
+from repro.kernels import ref as ref_mod
+from repro.kernels.metropolis_sweep import metropolis_sweep_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_use_pallas(use_pallas) -> bool:
+    if use_pallas == "auto":
+        return _on_tpu()
+    return bool(use_pallas)
+
+
+@partial(jax.jit, static_argnames=("kid", "n_steps", "variant", "blk",
+                                   "use_pallas", "interpret"))
+def metropolis_sweep(x, T, seed, step0, *, kid: int, n_steps: int,
+                     variant: str = "delta", blk: int = 256,
+                     use_pallas: bool = False, interpret: bool = False):
+    """N-step Metropolis sweep over all chains (see metropolis_sweep.py).
+
+    Returns (x_out (chains, dim), f_out (chains,)).
+    """
+    if use_pallas:
+        chains = x.shape[0]
+        eff_blk = min(blk, chains)
+        return metropolis_sweep_pallas(
+            x, T, seed, step0, kid=kid, n_steps=n_steps, blk=eff_blk,
+            variant=variant, interpret=interpret)
+    return ref_mod.metropolis_sweep_ref(
+        x, T, seed, step0, kid=kid, n_steps=n_steps, variant=variant)
+
+
+def kid_for(objective) -> Optional[int]:
+    """Registry kernel id for an Objective, or None."""
+    return getattr(objective, "kernel_id", None)

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: block-tree (min, argmin) reduction.
+
+The paper's V1/V2 champion selection is a Thrust ``reduceMin`` over the
+per-chain objective values (shared-memory partial reductions per block,
+then a host-side combine).  TPU adaptation: a grid of chain blocks, each
+reducing its (1, blk) VMEM tile to a per-block (min, argmin) pair on the
+VPU; the tiny (n_blocks,) tail is combined with a plain ``jnp.argmin``
+(the analogue of Thrust's final pass, but staying on-device).
+
+Tie-breaking matches ``jnp.argmin``: the first (lowest-index) minimum wins
+within a block and across blocks, so the kernel is bit-identical to the
+oracle (tests/test_kernels_pallas.py sweeps shapes/dtypes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _argmin_kernel(f_ref, m_ref, i_ref, *, blk: int):
+    pid = pl.program_id(0)
+    f = f_ref[...]                                    # (1, blk)
+    idx = lax.broadcasted_iota(jnp.int32, (1, blk), 1)
+    m = jnp.min(f)
+    # first index attaining the block minimum
+    i = jnp.min(jnp.where(f == m, idx, blk))
+    m_ref[0, 0] = m
+    i_ref[0, 0] = pid * blk + i
+
+
+def block_argmin_pallas(f, *, blk: int = 1024, interpret: bool = False):
+    """Per-block (min, argmin) of a 1-D value vector.
+
+    Returns (mins (n_blocks,), idxs (n_blocks,)); combine with
+    :func:`argmin_reduce` (or any tail reduce).
+    """
+    (n,) = f.shape
+    if n % blk:
+        raise ValueError(f"n={n} must be a multiple of blk={blk}")
+    grid = (n // blk,)
+    mins, idxs = pl.pallas_call(
+        functools.partial(_argmin_kernel, blk=blk),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, blk), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((1, 1), lambda i: (0, i)),
+                   pl.BlockSpec((1, 1), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((1, grid[0]), f.dtype),
+                   jax.ShapeDtypeStruct((1, grid[0]), jnp.int32)],
+        interpret=interpret,
+        name="block_argmin",
+    )(f.reshape(1, n))
+    return mins[0], idxs[0]
+
+
+def argmin_reduce(f, *, blk: int = 1024, use_pallas: bool = False,
+                  interpret: bool = False):
+    """(min_value, argmin_index) of ``f`` — the paper's reduceMin.
+
+    With ``use_pallas`` the per-block stage runs as the TPU kernel;
+    otherwise pure jnp (identical result).
+    """
+    (n,) = f.shape
+    if use_pallas and n % blk == 0 and n >= blk:
+        mins, idxs = block_argmin_pallas(f, blk=blk, interpret=interpret)
+        j = jnp.argmin(mins)            # ties: first block wins, as jnp
+        return mins[j], idxs[j]
+    i = jnp.argmin(f)
+    return f[i], i.astype(jnp.int32)

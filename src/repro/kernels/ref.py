@@ -1,0 +1,84 @@
+"""Pure-jnp oracle for the Metropolis-sweep kernel.
+
+Computes the *identical* floating-point recurrence as the Pallas kernel
+(same RNG counters via ``rng.draws3``, same accumulator math via
+``objective_math``), vectorized over all chains at once with no blocking.
+Because the RNG is counter-based on the global chain index, the kernel's
+chain-block decomposition does not change random streams, so kernel and
+oracle must agree to float tolerance.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.kernels import objective_math as om
+from repro.kernels import rng
+
+
+@partial(jax.jit, static_argnames=("kid", "n_steps", "variant"))
+def metropolis_sweep_ref(x, T, seed, step0, *, kid: int, n_steps: int,
+                         variant: str = "delta"):
+    chains, dim = x.shape
+    lo, hi = om.BOX[kid]
+    lo = np.float32(lo)
+    hi = np.float32(hi)
+    cidx = jnp.arange(chains, dtype=jnp.uint32)[:, None]  # (chains, 1)
+    coords = jnp.broadcast_to(jnp.arange(dim, dtype=jnp.int32), (chains, dim))
+    seed = jnp.asarray(seed, jnp.uint32)
+    step0 = jnp.asarray(step0, jnp.uint32)
+    T = jnp.asarray(T, x.dtype)
+
+    if variant == "delta":
+        S, logP, sgnP = om.init_acc(kid, x)
+        fx = om.combine(kid, S, logP, sgnP, dim)
+
+        def body(i, carry):
+            x, fx, S, logP, sgnP = carry
+            rbits, uval, uacc = rng.draws3(seed, cidx, (step0 + i).astype(jnp.uint32))
+            d = (rbits % np.uint32(dim)).astype(jnp.int32)
+            onehot = coords == d
+            xi_old = jnp.sum(jnp.where(onehot, x, 0.0), axis=1, keepdims=True)
+            newval = lo + uval * (hi - lo)
+            df = d.astype(x.dtype)
+            s_old, p_old = om.term(kid, xi_old, df)
+            s_new, p_new = om.term(kid, newval, df)
+            S1 = S - s_old + s_new
+            logP1 = (logP
+                     - jnp.log(jnp.maximum(jnp.abs(p_old), 1e-30))
+                     + jnp.log(jnp.maximum(jnp.abs(p_new), 1e-30)))
+            sg = jnp.where(p_old < 0, -1.0, 1.0) * jnp.where(p_new < 0, -1.0, 1.0)
+            sgnP1 = sgnP * sg.astype(sgnP.dtype)
+            f1 = om.combine(kid, S1, logP1, sgnP1, dim)
+            acc = uacc <= jnp.exp(jnp.clip(-(f1 - fx) / T, -80.0, 80.0))
+            x = jnp.where(onehot & acc, newval, x)
+            fx = jnp.where(acc, f1, fx)
+            S = jnp.where(acc, S1, S)
+            logP = jnp.where(acc, logP1, logP)
+            sgnP = jnp.where(acc, sgnP1, sgnP)
+            return x, fx, S, logP, sgnP
+
+        x, fx, *_ = lax.fori_loop(0, n_steps, body, (x, fx, S, logP, sgnP))
+    else:
+        fx = om.full_eval(kid, x, dim)
+
+        def body(i, carry):
+            x, fx = carry
+            rbits, uval, uacc = rng.draws3(seed, cidx, (step0 + i).astype(jnp.uint32))
+            d = (rbits % np.uint32(dim)).astype(jnp.int32)
+            onehot = coords == d
+            newval = lo + uval * (hi - lo)
+            x1 = jnp.where(onehot, newval, x)
+            f1 = om.full_eval(kid, x1, dim)
+            acc = uacc <= jnp.exp(jnp.clip(-(f1 - fx) / T, -80.0, 80.0))
+            x = jnp.where(acc, x1, x)
+            fx = jnp.where(acc, f1, fx)
+            return x, fx
+
+        x, fx = lax.fori_loop(0, n_steps, body, (x, fx))
+
+    return x, fx[:, 0]

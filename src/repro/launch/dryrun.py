@@ -1,0 +1,329 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count at first init.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell with
+ShapeDtypeStruct inputs (no allocation) and extract roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --sa   # the SA production cell
+
+Artifacts: one JSON per cell with memory_analysis, cost_analysis and the
+collective-byte census parsed from the compiled HLO (§Roofline inputs).
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+# hardware constants (TPU v5e target)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4, "s8": 1,
+    "u8": 1, "pred": 1, "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the HLO text."""
+    out = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # result-shape = op-name(...)  — match op kind anywhere on the line
+        m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(?:-start)?", line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # operand shapes: parse shapes on the RHS inside the call parens
+        rhs = line.split("=", 1)[1]
+        call = rhs[rhs.index("("):] if "(" in rhs else ""
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(call):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+def roofline_terms(flops: float, bytes_acc: float, coll: dict, n_chips: int):
+    """NOTE: XLA's cost_analysis on an SPMD-partitioned module reports
+    *per-device* quantities (verified empirically — see EXPERIMENTS.md
+    §Methodology), so the terms divide by per-chip peaks only; this equals
+    the assignment's global/(chips × peak) formula."""
+    cbytes = float(sum(coll.values()))
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_acc / HBM_BW,
+        "collective_s": cbytes / ICI_BW,
+        "collective_bytes": cbytes,
+    }
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             out_dir: Path, overrides=None, tag: str = "") -> dict:
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh, mesh_size
+    from repro.launch.steps import build_cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh_size(mesh)
+    spec = get_arch(arch_id)
+    t0 = time.time()
+
+    # 1) PRODUCTION program (scanned layer stacks): this is the artifact that
+    #    must lower+compile — memory analysis comes from here.
+    cell = build_cell(spec, shape_name, mesh, overrides=overrides)
+    with mesh:
+        lowered = cell.fn.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+
+    # 2) MEASUREMENT program (scan fully unrolled): XLA cost_analysis counts
+    #    while-loop bodies ONCE, so the scanned program under-reports
+    #    flops/bytes/collectives by ~n_layers. The unrolled variant gives the
+    #    true per-step per-device cost. (Production keeps the scan for
+    #    compile-time sanity at 512 devices; the unroll exists only here.)
+    over2 = dict(overrides or {})
+    over2["scan_unroll"] = 0
+    cell2 = build_cell(spec, shape_name, mesh, overrides=over2)
+    with mesh:
+        compiled2 = cell2.fn.lower(*cell2.args).compile()
+    t_measure = time.time() - t0 - t_lower - t_compile
+
+    from repro.launch.hloparse import parse_hlo_costs
+    cost = compiled2.cost_analysis()
+    hlo = compiled2.as_text()
+    parsed = parse_hlo_costs(hlo)
+    coll = parsed["wire"]
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_raw = float(cost.get("bytes accessed", 0.0))
+    bytes_acc = parsed["hbm_bytes"]  # fusion-aware (hloparse.py)
+    terms = roofline_terms(flops, bytes_acc, coll, n_chips)
+    tot, act = cell.model_cfg.param_count()
+    seq = {"train_4k": 4096, "prefill_32k": 32768,
+           "decode_32k": 1, "long_500k": 1}[shape_name]
+    from repro.configs.common import SHAPES
+    seq_len, batch, kind = SHAPES[shape_name]
+    tokens = batch * (seq_len if kind != "decode" else 1)
+    # 6ND for a train step (fwd+bwd), 2ND for inference FLOPs
+    mult = 6 if kind == "train" else 2
+    model_flops = mult * act * tokens
+
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mesh": list(mesh.shape.values()),
+        "multi_pod": multi_pod, "n_chips": n_chips, "kind": kind, "tag": tag,
+        "params_total": tot, "params_active": act,
+        "bytes_per_device": {
+            "argument": getattr(mem, "argument_size_in_bytes", 0),
+            "output": getattr(mem, "output_size_in_bytes", 0),
+            "temp": getattr(mem, "temp_size_in_bytes", 0),
+            "peak": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+        "hlo_flops": flops, "hlo_bytes": bytes_acc,
+        "hlo_bytes_raw_prefusion": bytes_raw,
+        "hbm_by_op": parsed.get("by_op", {}),
+        "collectives": coll,
+        "roofline": terms,
+        "model_flops": model_flops,
+        "model_flops_per_chip": model_flops / n_chips,
+        "useful_flops_frac": (model_flops / n_chips) / flops if flops else None,
+        "lower_s": t_lower, "compile_s": t_compile, "measure_s": t_measure,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    rec["bottleneck"] = dom.replace("_s", "")
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = ("multi" if multi_pod else "single") + (f"_{tag}" if tag else "")
+    path = out_dir / f"{arch_id}__{shape_name}__{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    print(f"[ok] {arch_id:24s} {shape_name:12s} {suffix:12s} "
+          f"compute={terms['compute_s']:.3e}s memory={terms['memory_s']:.3e}s "
+          f"coll={terms['collective_s']:.3e}s dom={rec['bottleneck']} "
+          f"peak={rec['bytes_per_device']['peak']/2**30:.2f}GiB "
+          f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    return rec
+
+
+def _sa_measure(obj, base_cfg, mesh, levels: int, n_steps: int):
+    """Compile a tiny fully-unrolled SA ladder and return (flops, bytes, coll)."""
+    import dataclasses as dc
+
+    import jax.numpy as jnp
+
+    from repro.core import build_sharded_ladder
+
+    tmin = {1: 0.5, 2: 0.25}[levels]
+    cfg = dc.replace(base_cfg, T0=1.0, T_min=tmin, rho=0.5, N=n_steps,
+                     record_history=False, unroll=True)
+    assert cfg.n_levels == levels
+    fn = jax.jit(build_sharded_ladder(obj, cfg, mesh))
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    x0 = jax.ShapeDtypeStruct((cfg.n_chains, obj.dim), jnp.float32)
+    with mesh:
+        compiled = fn.lower(key, x0).compile()
+    from repro.launch.hloparse import parse_hlo_costs
+    cost = compiled.cost_analysis()
+    parsed = parse_hlo_costs(compiled.as_text())
+    return (float(cost.get("flops", 0.0)), parsed["hbm_bytes"], parsed["wire"])
+
+
+def run_sa_cell(*, multi_pod: bool, out_dir: Path, n_chains: int = 1 << 22,
+                dim: int = 512, exchange: str = "sync", tag: str = "",
+                use_delta_eval: bool = False, n_steps: int = 100) -> dict:
+    """The paper's own technique at production scale (DESIGN.md §4.1).
+
+    Cost methodology: the production program nests fori_loop(N) inside
+    scan(levels) — XLA cost_analysis counts each loop body once, so we
+    compile three tiny *unrolled* variants (L,N) ∈ {(1,1),(1,2),(2,1)} and
+    solve F(L,N) = S0 + L·S1 + L·N·b for the per-step/per-level/fixed parts,
+    then extrapolate to the real (levels=1146, N=100) schedule.
+    """
+    from repro import objectives
+    from repro.core import SAConfig, build_sharded_ladder
+    from repro.launch.mesh import make_production_mesh, mesh_size
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh_size(mesh)
+    obj = objectives.functions.schwefel(dim)
+    cfg = SAConfig(T0=1000.0, T_min=0.01, rho=0.99, N=n_steps,
+                   n_chains=n_chains, exchange=exchange,
+                   use_delta_eval=use_delta_eval,
+                   record_history=False)
+    fn = jax.jit(build_sharded_ladder(obj, cfg, mesh))
+    key = jax.ShapeDtypeStruct((2,), jax.numpy.uint32)
+    x0 = jax.ShapeDtypeStruct((n_chains, dim), jax.numpy.float32)
+
+    t0 = time.time()
+    with mesh:
+        lowered = fn.lower(key, x0)
+        compiled = lowered.compile()
+    t_all = time.time() - t0
+
+    mem = compiled.memory_analysis()
+
+    # loop-algebra cost measurement
+    fa, ba, ca = _sa_measure(obj, cfg, mesh, 1, 1)
+    fb, bb, cb = _sa_measure(obj, cfg, mesh, 1, 2)
+    fc, bc, cc = _sa_measure(obj, cfg, mesh, 2, 1)
+    L, N = cfg.n_levels, cfg.N
+
+    def extrap(a, b_, c):
+        step = max(b_ - a, 0.0)
+        lvl = max(c - a - step, 0.0)
+        fixed = max(a - lvl - step, 0.0)
+        return fixed + L * lvl + L * N * step
+
+    flops = extrap(fa, fb, fc)
+    bytes_acc = extrap(ba, bb, bc)
+    kinds = set(ca) | set(cb) | set(cc)
+    coll = {k: extrap(ca.get(k, 0), cb.get(k, 0), cc.get(k, 0)) for k in kinds}
+    terms = roofline_terms(flops, bytes_acc, coll, n_chips)
+    rec = {
+        "arch": f"sa-schwefel-{dim}", "shape": f"chains_{n_chains}",
+        "mesh": list(mesh.shape.values()), "multi_pod": multi_pod,
+        "n_chips": n_chips, "kind": "sa", "tag": tag,
+        "exchange": exchange, "n_evals": cfg.n_evals,
+        "delta_eval": use_delta_eval, "levels": L, "N": N,
+        "bytes_per_device": {"peak": getattr(mem, "peak_memory_in_bytes", 0)},
+        "hlo_flops": flops, "hlo_bytes": bytes_acc,
+        "collectives": coll, "roofline": terms,
+        "compile_s": t_all,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    rec["bottleneck"] = dom.replace("_s", "")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = ("multi" if multi_pod else "single") + (f"_{tag}" if tag else "")
+    dl = "_delta" if use_delta_eval else ""
+    path = out_dir / f"sa_schwefel{dim}__{exchange}{dl}__{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    print(f"[ok] SA {exchange} chains={n_chains} dim={dim} {suffix} "
+          f"compute={terms['compute_s']:.3e}s memory={terms['memory_s']:.3e}s "
+          f"coll={terms['collective_s']:.3e}s dom={rec['bottleneck']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--sa", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    from repro.configs import ARCH_IDS, get_arch
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    jobs = []
+    if args.sa:
+        for mp in meshes:
+            jobs.append(("sa", None, mp))
+    if args.all:
+        for aid in ARCH_IDS:
+            for shape_name, _ in get_arch(aid).shapes():
+                for mp in meshes:
+                    jobs.append((aid, shape_name, mp))
+    elif args.arch:
+        shapes = ([args.shape] if args.shape
+                  else [s for s, _ in get_arch(args.arch).shapes()])
+        for s in shapes:
+            for mp in meshes:
+                jobs.append((args.arch, s, mp))
+
+    failures = []
+    for aid, shape_name, mp in jobs:
+        suffix = "multi" if mp else "single"
+        if args.skip_existing and aid != "sa":
+            p = out_dir / f"{aid}__{shape_name}__{suffix}.json"
+            if p.exists():
+                print(f"[skip] {aid} {shape_name} {suffix}")
+                continue
+        try:
+            if aid == "sa":
+                run_sa_cell(multi_pod=mp, out_dir=out_dir)
+            else:
+                run_cell(aid, shape_name, multi_pod=mp, out_dir=out_dir)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            failures.append((aid, shape_name, mp, repr(e)))
+            print(f"[FAIL] {aid} {shape_name} {suffix}: {e!r}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,268 @@
+"""Post-optimization HLO text analysis for roofline terms.
+
+XLA's ``cost_analysis()['bytes accessed']`` sums operand bytes of *every*
+op including those inside fusion bodies — a pre-fusion figure that wildly
+overestimates HBM traffic.  This module parses the optimized HLO text and
+counts only **top-level buffers** (ENTRY + while-body computations), i.e.
+what actually materializes between fusions:
+
+  hbm_bytes  = Σ over top-level ops (output write + operand reads),
+               skipping parameter/constant/tuple-plumbing lines;
+  wire_bytes = per-collective-kind ICI traffic with a ring model:
+               all-gather: out·(n-1)/n     all-reduce: 2·in·(n-1)/n
+               reduce-scatter: in·(n-1)/n  all-to-all: in·(n-1)/n
+               collective-permute: in
+
+This is still an approximation of a real TPU compiler's fusion choices
+(documented in EXPERIMENTS.md §Methodology), but it is *post-fusion* and
+self-consistent across cells — the right property for identifying the
+dominant roofline term and for before/after hillclimb deltas.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# Ops that force a buffer to materialize in HBM on a fusing compiler
+# (XLA:TPU fuses elementwise/broadcast/convert/select chains into these).
+# Everything NOT in this set is treated as fused (zero HBM traffic) — the
+# optimistic-TPU model; the pre-fusion figure is recorded alongside.
+_MATERIALIZING = {
+    "dot", "convolution", "fusion", "reduce", "reduce-window", "sort",
+    "gather", "scatter", "dynamic-slice", "dynamic-update-slice", "copy",
+    "transpose", "concatenate", "pad", "slice", "reverse",
+    "select-and-scatter", "rng", "rng-bit-generator", "cholesky",
+    "triangular-solve", "all-gather", "all-reduce", "reduce-scatter",
+    "all-to-all", "collective-permute", "custom-call",
+}
+_SKIP_READ_OPS = {"get-tuple-element", "tuple", "bitcast", "while",
+                  "conditional", "call"}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{")
+_OP_LINE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[\w\[\],\s\{\}\/]+?\)?)\s+([\w\-]+)\(")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BODY = re.compile(r"(?:body|condition)=%?([\w\.\-]+)")
+_REPL_GROUPS = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# Op kinds a fusing compiler melts into neighbours: a fusion whose body is
+# made ONLY of these is treated as free (its consumers read its inputs'
+# buffers directly).  XLA:CPU emits thousands of such micro-fusions that
+# XLA:TPU would merge into the surrounding dot/reduce.
+_ELEMENTWISE = {
+    "parameter", "constant", "broadcast", "convert", "add", "subtract",
+    "multiply", "divide", "select", "compare", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "tanh", "rsqrt", "sqrt", "log",
+    "log-plus-one", "negate", "abs", "power", "and", "or", "xor", "not",
+    "sign", "cosine", "sine", "clamp", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "is-finite", "reshape", "bitcast", "iota",
+    "remainder", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "popcnt", "count-leading-zeros", "atan2", "expm1", "log1p", "logistic",
+    "cbrt", "erf", "real", "imag", "tuple",
+}
+
+# Pure layout/data-movement ops: XLA:TPU's layout assignment folds these
+# into the producing/consuming dot or fusion (verified empirically: on the
+# unrolled XLA:CPU HLO they account for ~88% of naive "materializing" bytes
+# — counting them would model a TPU that never assigns layouts).  A fusion
+# whose non-elementwise body ops are ONLY these is melted like an
+# elementwise fusion; standalone instances are melted too (except `copy`,
+# which XLA emits for buffer donation/aliasing — a real HBM write).
+_LAYOUT_ONLY = {"transpose", "slice", "pad", "reverse"}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_hlo_costs(hlo: str) -> dict:
+    """Returns {'hbm_bytes': float, 'wire': {kind: bytes}, 'group_size': int}."""
+    # 1) split into computations
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        m = _COMP_HDR.match(line)
+        if m and line.endswith("{"):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and "=" in line:
+            comps[cur].append(line)
+
+    # 2) classify: computations referenced by calls=/to_apply= are fused/inner;
+    #    while bodies are real (counted once — callers use unrolled programs).
+    inner = set()
+    for lines in comps.values():
+        for line in lines:
+            for m in _CALLS.finditer(line):
+                inner.add(m.group(1))
+    top = [c for c in comps if c not in inner]
+
+    def _body_is_elementwise(cname: str) -> bool:
+        for line in comps.get(cname, ()):
+            m = _OP_LINE.match(line)
+            if not m:
+                continue
+            op = m.group(3)
+            if op not in _ELEMENTWISE and op not in _LAYOUT_ONLY:
+                return False
+        return True
+
+    elementwise_fusions = {c for c in inner if _body_is_elementwise(c)}
+
+    _INDEXED = {"scatter", "dynamic-update-slice", "gather", "dynamic-slice"}
+
+    def _body_is_aliased_update(cname: str) -> bool:
+        """Fusion whose only materializing body ops are indexed accesses
+        (scatter/DUS: in-place aliased updates; gather/dynamic-slice: reads
+        of just the indexed elements): the big operand buffer is NOT
+        streamed; traffic is the touched elements + side inputs."""
+        found = False
+        for line in comps.get(cname, ()):
+            m = _OP_LINE.match(line)
+            if not m:
+                continue
+            op = m.group(3)
+            if op in _INDEXED:
+                found = True
+            elif op == "concatenate":
+                pass  # index-packing concats; accounted via output size
+            elif op not in _ELEMENTWISE and op not in _LAYOUT_ONLY:
+                return False
+        return found
+
+    aliased_fusions = {c for c in inner if _body_is_aliased_update(c)}
+
+    hbm = 0.0
+    wire: dict[str, float] = defaultdict(float)
+    by_op: dict[str, float] = defaultdict(float)  # hbm census per op kind
+
+    for cname in top:
+        lines = comps[cname]
+        sizes: dict[str, int] = {}
+        # pre-pass: record every defined op's output bytes
+        parsed = []
+        for line in lines:
+            m = _OP_LINE.match(line)
+            if not m:
+                continue
+            name, shape_str, op = m.group(1), m.group(2), m.group(3)
+            out_b = _shape_bytes(shape_str)
+            sizes[name] = out_b
+            parsed.append((name, shape_str, op, out_b, line))
+
+        for name, shape_str, op, out_b, line in parsed:
+            if not any(op == m or op.startswith(m + ".") for m in _MATERIALIZING):
+                continue
+            if op in _LAYOUT_ONLY:
+                continue  # folded by TPU layout assignment
+            aliased_update_fusion = False
+            if op == "fusion":
+                cm = _CALLS.search(line)
+                if cm and cm.group(1) in elementwise_fusions:
+                    continue  # melted into neighbours on a fusing compiler
+                if cm and cm.group(1) in aliased_fusions:
+                    aliased_update_fusion = True
+            # operand reads
+            call = line.split("(", 1)[1] if "(" in line else ""
+            call = call.split(", calls=")[0].split(", to_apply=")[0]
+            in_b = 0
+            if op not in _SKIP_READ_OPS:
+                seen = set()
+                for om in _OPERAND.finditer(call):
+                    o = om.group(1)
+                    if o in sizes and o not in seen:
+                        seen.add(o)
+                        in_b += sizes[o]
+            if op == "dynamic-update-slice":
+                # XLA aliases input->output for DUS (donation): traffic is
+                # the updated slice, not the whole buffer.  Count the update
+                # operand (2nd) once for read and once for write.
+                ops_ = [om.group(1) for om in _OPERAND.finditer(call)]
+                upd_b = sizes.get(ops_[1], 0) if len(ops_) > 1 else 0
+                hbm += 2 * upd_b
+                by_op[op] += 2 * upd_b
+                continue
+            if op == "scatter":
+                # Same in-place aliasing for scatter: traffic = indices read
+                # + updates read + scattered-elements write (not the buffer).
+                ops_ = [om.group(1) for om in _OPERAND.finditer(call)]
+                idx_b = sizes.get(ops_[1], 0) if len(ops_) > 1 else 0
+                upd_b = sizes.get(ops_[2], 0) if len(ops_) > 2 else 0
+                hbm += idx_b + 2 * upd_b
+                by_op[op] += idx_b + 2 * upd_b
+                continue
+            if aliased_update_fusion:
+                # indexed-access fusion: traffic = side inputs (indices,
+                # update values) + the touched elements; the big buffer
+                # (largest operand) is aliased / sparsely read, not streamed.
+                seen = set()
+                opers = []
+                for om_ in _OPERAND.finditer(call):
+                    o = om_.group(1)
+                    if o in sizes and o not in seen:
+                        seen.add(o)
+                        opers.append(sizes[o])
+                big = max(opers) if opers else 0
+                side = sum(opers) - big
+                touched = out_b if out_b < big else 0  # gather-style output
+                hbm += 2 * side + 2 * touched
+                by_op["fusion-aliased-update"] += 2 * side + 2 * touched
+                continue
+            if op in ("gather", "dynamic-slice"):
+                # indexed read: traffic = indices + gathered elements (the
+                # output), not the source buffer.
+                ops_ = [om.group(1) for om in _OPERAND.finditer(call)]
+                idx_b = sum(sizes.get(o, 0) for o in ops_[1:])
+                hbm += idx_b + 2 * out_b
+                by_op[op] += idx_b + 2 * out_b
+                continue
+            coll = next((k for k in _COLLECTIVES if op.startswith(k)), None)
+            if coll:
+                g = _REPL_GROUPS.search(line)
+                n = len(g.group(1).split(",")) if g else 2
+                frac = (n - 1) / n if n > 1 else 0.0
+                if coll == "all-gather":
+                    wire[coll] += out_b * frac
+                elif coll == "all-reduce":
+                    wire[coll] += 2 * in_b * frac
+                elif coll == "reduce-scatter":
+                    wire[coll] += in_b * frac
+                elif coll == "all-to-all":
+                    wire[coll] += in_b * frac
+                else:  # collective-permute
+                    wire[coll] += in_b
+            if op != "parameter":
+                hbm += out_b
+                by_op[op] += out_b
+            hbm += in_b
+            by_op[op] += in_b
+
+    return {"hbm_bytes": hbm, "wire": dict(wire), "by_op": dict(by_op)}

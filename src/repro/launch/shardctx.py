@@ -1,0 +1,37 @@
+"""Activation-sharding context: lets the model apply
+``with_sharding_constraint`` at key points without threading mesh/specs
+through every layer signature.
+
+steps.py installs a policy dict (name -> NamedSharding); model.py calls
+``constrain(x, "hidden")`` etc.  Outside any policy (CPU smoke tests) it is
+an identity.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_tls = threading.local()
+
+
+def current() -> dict:
+    return getattr(_tls, "policy", None) or {}
+
+
+@contextlib.contextmanager
+def activation_sharding(policy: dict):
+    prev = getattr(_tls, "policy", None)
+    _tls.policy = policy
+    try:
+        yield
+    finally:
+        _tls.policy = prev
+
+
+def constrain(x, name: str):
+    s = current().get(name)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)

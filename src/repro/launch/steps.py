@@ -1,0 +1,388 @@
+"""Sharded train/prefill/serve steps + PartitionSpec rules for every arch.
+
+Sharding policy (DESIGN.md §6):
+  * FSDP: params/grads/opt-state sharded over ('pod','data') (storage axes);
+  * TP  : q-heads / d_ff / vocab / experts over 'model' when divisible,
+          KV heads replicated when Hkv < tp (Megatron-GQA convention);
+  * EP  : MoE expert axis over 'model' with all_to_all dispatch;
+  * SP  : long-context (batch=1) caches shard the sequence axis over DP axes.
+
+All step functions are built by ``make_step`` and lowered either with real
+arrays (examples/tests) or ShapeDtypeStructs (dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.configs.common import SHAPES, ArchSpec
+from repro.launch import shardctx
+from repro.launch.mesh import dp_axes
+from repro.models import model as M
+from repro.optim import OptConfig, init_opt_state, opt_update, apply_updates
+
+
+# ----------------------------------------------------------- spec assignment
+def _fit(size: int, axes: tuple, mesh) -> Optional[Any]:
+    """Largest prefix of ``axes`` whose product divides ``size``."""
+    out = []
+    prod = 1
+    for a in axes:
+        if size % (prod * mesh.shape[a]) == 0:
+            out.append(a)
+            prod *= mesh.shape[a]
+    if not out:
+        return None
+    return tuple(out) if len(out) > 1 else out[0]
+
+
+_BASE_NDIM = {
+    "wq": 3, "wk": 3, "wv": 3, "wo": 3, "w_uk": 3, "w_uv": 3, "A_log": 2,
+    "w_dkv": 2, "w_kr": 2, "router": 2, "in_proj": 2, "out_proj": 2,
+    "x_proj": 2, "dt_proj": 2, "conv_w": 2, "conv_b": 1, "dt_bias": 1,
+    "D": 1, "norm1": 1, "norm2": 1, "normc": 1, "final_norm": 1,
+    "embed": 2, "lm_head": 2, "pos_embed": 2,
+    "w_gate": 2, "w_up": 2, "w_down": 2,
+}
+
+
+def param_specs(params_shapes, cfg: M.ModelConfig, mesh):
+    """PartitionSpec pytree mirroring the param pytree."""
+    fsdp = dp_axes(mesh)
+    tp = mesh.shape["model"]
+
+    def tpm(size):  # 'model' when divisible
+        return "model" if size % tp == 0 else None
+
+    def spec_for(path, leaf):
+        name = None
+        for k in reversed(path):
+            if isinstance(k, DictKey):
+                name = k.key
+                break
+        shape = leaf.shape
+        nd = len(shape)
+        base = _BASE_NDIM.get(name, nd)
+        is_moe = False
+        if name in ("w_gate", "w_up", "w_down") and nd >= 3 \
+                and cfg.n_experts and shape[nd - 3] == cfg.n_experts:
+            base = 3
+            is_moe = True
+        lead = (None,) * (nd - base)
+        t = shape[nd - base:] if base else ()
+
+        def f(size):  # FSDP axes that fit
+            return _fit(size, fsdp, mesh)
+
+        if name in ("wq",):
+            s = (f(t[0]), tpm(t[1]), None)
+        elif name in ("wk", "wv"):
+            s = (f(t[0]), tpm(t[1]), None)
+        elif name == "wo":
+            s = (tpm(t[0]), None, f(t[2]))
+        elif name in ("w_uk", "w_uv"):
+            s = (None, tpm(t[1]), None)
+        elif name in ("w_dkv", "w_kr"):
+            s = (f(t[0]), None)
+        elif name == "router":
+            s = (f(t[0]), None)
+        elif name in ("w_gate", "w_up"):
+            s = (tpm(t[0]), f(t[1]), None) if is_moe else (f(t[0]), tpm(t[1]))
+        elif name == "w_down":
+            s = (tpm(t[0]), None, f(t[2])) if is_moe else (tpm(t[0]), f(t[1]))
+        elif name == "in_proj":
+            s = (f(t[0]), tpm(t[1]))
+        elif name == "out_proj":
+            s = (tpm(t[0]), f(t[1]))
+        elif name in ("x_proj",):
+            s = (tpm(t[0]), None)
+        elif name in ("dt_proj",):
+            s = (None, tpm(t[1]))
+        elif name == "conv_w":
+            s = (None, tpm(t[1]))
+        elif name in ("conv_b", "dt_bias", "D"):
+            s = (tpm(t[0]),)
+        elif name == "A_log":
+            s = (tpm(t[0]), None)
+        elif name == "embed":
+            s = (tpm(t[0]), f(t[1]))
+        elif name == "lm_head":
+            s = (f(t[0]), tpm(t[1]))
+        elif name == "pos_embed":
+            s = (None, f(t[1]))
+        else:  # norms and anything unknown: replicated
+            s = (None,) * base
+        return P(*(lead + tuple(s)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shapes)
+
+
+def _lookup(tree, keys):
+    for k in keys:
+        tree = tree[k]
+    return tree
+
+
+def state_specs(state_shapes, pspecs):
+    """Specs for {'params':…, 'opt':…} train state (opt mirrors params;
+    adafactor factored stats drop the corresponding param dim)."""
+    def go(path, leaf):
+        keys = [k.key if isinstance(k, DictKey) else k.idx for k in path]
+        if keys[0] == "params":
+            return _lookup(pspecs, keys[1:])
+        assert keys[0] == "opt"
+        if keys[1] == "step":
+            return P()
+        sub = keys[2:]
+        if keys[1] == "m":
+            return _lookup(pspecs, sub)
+        # keys[1] == 'v': AdamW mirrors the param tree directly; Adafactor
+        # nests {'v'} (vector-like) or {'vr','vc'} (factored) dicts.
+        try:
+            spec = _lookup(pspecs, sub)
+            if isinstance(spec, P):
+                return spec            # AdamW: v sharded exactly like p
+        except (KeyError, TypeError, IndexError):
+            pass
+        last = sub[-1]
+        if last == "v":
+            return _lookup(pspecs, sub[:-1])
+        base = tuple(_lookup(pspecs, sub[:-1]))
+        if last == "vr":
+            return P(*base[:-1])
+        if last == "vc":
+            return P(*(base[:-2] + base[-1:]))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(go, state_shapes)
+
+
+def cache_specs(cfg: M.ModelConfig, mesh, batch: int):
+    """Specs mirroring init_cache. batch=1 -> sequence-parallel caches."""
+    fsdp = dp_axes(mesh)
+    tp = mesh.shape["model"]
+    bspec = _fit(batch, fsdp, mesh)
+    seq_par = bspec is None  # long-context: shard the sequence axis instead
+
+    def layer_spec(spec: M.LayerSpec):
+        if spec.kind == "mamba":
+            c = {"conv": P(bspec, None, "model" if cfg.d_inner % tp == 0 else None),
+                 "h": P(bspec, "model" if cfg.d_inner % tp == 0 else None, None)}
+        elif spec.kind == "mla":
+            sq = fsdp if seq_par else None
+            if sq is None and cfg.seq_shard_kv:
+                sq = "model"  # flash-decode layout: latent cache seq-sharded
+            c = {"c_kv": P(bspec, sq, None),
+                 "k_rope": P(bspec, sq, None),
+                 "pos_k": P(bspec, sq)}
+        else:
+            kvs = "model" if cfg.n_kv_heads % tp == 0 else None
+            sq = fsdp if seq_par else None
+            if kvs is None and sq is None and cfg.seq_shard_kv \
+                    and spec.window is None:
+                # flash-decode layout: KV heads don't divide TP, so shard the
+                # cache SEQUENCE over 'model' instead of replicating 16x.
+                # GSPMD turns the softmax/PV reductions into tiny psums.
+                sq = "model"
+            c = {"k": P(bspec, sq, kvs, None),
+                 "v": P(bspec, sq, kvs, None),
+                 "pos_k": P(bspec, sq)}
+        if spec.cross_attn:
+            hs = "model" if cfg.n_heads % tp == 0 else None
+            c["ck"] = P(bspec, None, hs, None)
+            c["cv"] = P(bspec, None, hs, None)
+        return c
+
+    out = []
+    for pattern, reps in cfg.blocks:
+        out.append(tuple(
+            jax.tree.map(lambda s: P(*((None,) + tuple(s))), layer_spec(sp),
+                         is_leaf=lambda x: isinstance(x, P))
+            for sp in pattern))
+    return out
+
+
+# ------------------------------------------------------------- input structs
+def batch_struct(cfg: M.ModelConfig, seq: int, batch: int):
+    """ShapeDtypeStructs for one training/prefill batch."""
+    text = seq
+    b = {}
+    if cfg.frontend == "vision_stub":
+        text = seq - cfg.frontend_len
+        b["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_len, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+    if cfg.kind == "encdec":
+        b["audio_frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_len, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+    b["tokens"] = jax.ShapeDtypeStruct((batch, text + 1), jnp.int32)
+    return b
+
+
+def batch_specs(cfg: M.ModelConfig, mesh, batch: int):
+    dp = _fit(batch, dp_axes(mesh), mesh)
+    b = {"tokens": P(dp, None)}
+    if cfg.frontend == "vision_stub":
+        b["patch_embeds"] = P(dp, None, None)
+    if cfg.kind == "encdec":
+        b["audio_frames"] = P(dp, None, None)
+    return b
+
+
+def activation_policy(cfg, mesh, batch):
+    dp = _fit(batch, dp_axes(mesh), mesh)
+    pol = {
+        "hidden": NamedSharding(mesh, P(dp, None, None)),
+        "logits": NamedSharding(mesh, P(dp, None,
+                                        "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None)),
+    }
+    if cfg.seq_parallel:
+        pol["hidden_sp"] = NamedSharding(mesh, P(dp, "model", None))
+    if cfg.seq_shard_kv:
+        pol["kv_sp"] = NamedSharding(mesh, P(dp, "model", None, None))
+        pol["kvpos_sp"] = NamedSharding(mesh, P(dp, "model"))
+        pol["scores_sp"] = NamedSharding(mesh, P(dp, None, None, "model"))
+    return pol
+
+
+# ------------------------------------------------------------------- steps
+def make_train_step(cfg: M.ModelConfig, ocfg: OptConfig, mesh, batch: int):
+    def train_step(state, batch_data):
+        with shardctx.activation_sharding(activation_policy(cfg, mesh, batch)):
+            loss, grads = jax.value_and_grad(M.lm_loss)(
+                state["params"], cfg, batch_data, mesh)
+        updates, opt = opt_update(grads, state["params"], state["opt"], ocfg)
+        params = apply_updates(state["params"], updates)
+        return {"params": params, "opt": opt}, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: M.ModelConfig, mesh, batch: int, s_max: int):
+    def prefill_step(params, batch_data, caches):
+        kw = {}
+        if cfg.frontend == "vision_stub":
+            kw["embeds"] = batch_data["patch_embeds"]
+        if cfg.kind == "encdec":
+            kw["enc_frames"] = batch_data["audio_frames"]
+        with shardctx.activation_sharding(activation_policy(cfg, mesh, batch)):
+            logits, caches = M.forward(params, cfg, batch_data["tokens"][:, :-1],
+                                       caches=caches, mode="prefill",
+                                       mesh=mesh, **kw)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1)
+        return next_tok.astype(jnp.int32), caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: M.ModelConfig, mesh, batch: int):
+    def serve_step(params, caches, tokens, pos):
+        positions = jnp.broadcast_to(pos[:, None], tokens.shape).astype(jnp.int32)
+        with shardctx.activation_sharding(activation_policy(cfg, mesh, batch)):
+            logits, caches = M.forward(params, cfg, tokens, positions=positions,
+                                       caches=caches, mode="decode", mesh=mesh)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return next_tok.astype(jnp.int32), caches
+
+    return serve_step
+
+
+# ------------------------------------------------------------ cell assembly
+@dataclasses.dataclass
+class Cell:
+    """One (arch × shape × mesh) dry-run unit: jitted fn + abstract args."""
+    arch_id: str
+    shape_name: str
+    kind: str
+    fn: Any          # jitted
+    args: tuple      # ShapeDtypeStructs
+    model_cfg: M.ModelConfig
+
+
+def _dryrun_model_cfg(spec: ArchSpec, shape_name: str, mesh,
+                      overrides: Optional[dict] = None) -> M.ModelConfig:
+    seq, batch, kind = SHAPES[shape_name]
+    over = dict(
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        remat="dots" if kind == "train" else "none",
+        moe_ep=bool(spec.model.n_experts) and batch >= 16,
+    )
+    over.update(overrides or {})
+    return dataclasses.replace(spec.model, **over)
+
+
+def build_cell(spec: ArchSpec, shape_name: str, mesh,
+               ocfg: Optional[OptConfig] = None,
+               overrides: Optional[dict] = None) -> Cell:
+    """Construct the jitted step + abstract inputs for one cell."""
+    seq, batch, kind = SHAPES[shape_name]
+    cfg = _dryrun_model_cfg(spec, shape_name, mesh, overrides)
+    if ocfg is None:
+        big = cfg.param_count()[0] > 50e9
+        ocfg = OptConfig(kind="adafactor" if big else "adamw",
+                         moment_dtype="bfloat16" if big else "float32")
+
+    # abstract params / state
+    pshapes = jax.eval_shape(partial(M.init_params, cfg=cfg),
+                             jax.random.PRNGKey(0))
+    pspecs = param_specs(pshapes, cfg, mesh)
+    if kind != "train" and cfg.serve_params_tp_only:
+        # Serving layout: strip the FSDP axes so weights are TP-sharded and
+        # DP-replicated — no per-step weight all-gather (§Perf H-i3).
+        def _tp_only(spec):
+            return P(*(a if a == "model" else None for a in spec))
+        pspecs = jax.tree.map(_tp_only, pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+    psharding = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    if kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda p: {"params": p, "opt": init_opt_state(p, ocfg)}, pshapes)
+        sspecs = state_specs(state_shapes, pspecs)
+        ssharding = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs)
+        bstruct = batch_struct(cfg, seq, batch)
+        bsharding = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                 batch_specs(cfg, mesh, batch))
+        fn = jax.jit(make_train_step(cfg, ocfg, mesh, batch),
+                     in_shardings=(ssharding, bsharding),
+                     out_shardings=(ssharding, NamedSharding(mesh, P())),
+                     donate_argnums=(0,))
+        args = (state_shapes, bstruct)
+    else:
+        enc_len = cfg.frontend_len if cfg.kind == "encdec" else 0
+        cshapes = jax.eval_shape(
+            partial(M.init_cache, cfg, batch, seq,
+                    dtype=jnp.dtype(cfg.compute_dtype), enc_len=enc_len))
+        cspecs = cache_specs(cfg, mesh, batch)
+        csharding = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        if kind == "prefill":
+            bstruct = batch_struct(cfg, seq, batch)
+            bsharding = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                     batch_specs(cfg, mesh, batch))
+            fn = jax.jit(make_prefill_step(cfg, mesh, batch, seq),
+                         in_shardings=(psharding, bsharding, csharding),
+                         out_shardings=None,
+                         donate_argnums=(2,))
+            args = (pshapes, bstruct, cshapes)
+        else:  # decode
+            dp = _fit(batch, dp_axes(mesh), mesh)
+            tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+            fn = jax.jit(make_serve_step(cfg, mesh, batch),
+                         in_shardings=(psharding, csharding,
+                                       NamedSharding(mesh, P(dp, None)),
+                                       NamedSharding(mesh, P(dp))),
+                         out_shardings=None,
+                         donate_argnums=(1,))
+            args = (pshapes, cshapes, tok, pos)
+
+    return Cell(arch_id=spec.arch_id, shape_name=shape_name, kind=kind,
+                fn=fn, args=args, model_cfg=cfg)

@@ -1,0 +1,475 @@
+"""Neural substrate layers: RMSNorm, RoPE, GQA/MLA attention (with KV and
+sliding-window circular caches), SwiGLU MLP, top-k MoE (capacity + all_to_all
+expert parallelism), Mamba-1 selective SSM (chunked scan).
+
+Pure-JAX (no flax): params are plain pytrees built by the ``init_*``
+functions; apply functions are shape-polymorphic over a leading batch axis.
+Sharding is applied at the train/serve-step level (launch/steps.py) — these
+layers only use ``shard_map`` internally where explicit collectives are
+required (MoE dispatch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+Params = Any
+
+
+# --------------------------------------------------------------------- utils
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(x, positions, *, theta: float = 10000.0):
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq  # (...,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+# ----------------------------------------------------------------- attention
+def init_attention(key, d_model, n_heads, n_kv_heads, head_dim, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": _init(k1, (d_model, n_heads, head_dim), dtype=dtype),
+        "wk": _init(k2, (d_model, n_kv_heads, head_dim), dtype=dtype),
+        "wv": _init(k3, (d_model, n_kv_heads, head_dim), dtype=dtype),
+        "wo": _init(k4, (n_heads, head_dim, d_model),
+                    scale=1.0 / np.sqrt(n_heads * head_dim), dtype=dtype),
+    }
+
+
+def _gqa_scores(q, k, n_rep):
+    """q: (B,S,H,hd), k: (B,T,Hkv,hd) -> (B,S,H,T) with GQA head grouping.
+
+    Grouped einsum (q reshaped to (..., Hkv, n_rep, hd)) instead of
+    ``jnp.repeat``-ing K to H heads: the repeat materializes an n_rep x copy
+    of the whole KV block every call — at decode time that is n_rep x the
+    entire cache in HBM traffic per token (§Perf H-i2).  Reshapes on q are
+    layout-free; KV stays at Hkv heads.
+    """
+    hd = q.shape[-1]
+    if n_rep > 1:
+        B, S, H, _ = q.shape
+        qg = q.reshape(B, S, H // n_rep, n_rep, hd)
+        s = jnp.einsum("bsgrk,btgk->bsgrt", qg, k,
+                       preferred_element_type=jnp.float32)
+        return s.reshape(B, S, H, k.shape[1]) / np.sqrt(hd)
+    return jnp.einsum("bshk,bthk->bsht", q, k,
+                      preferred_element_type=jnp.float32) / np.sqrt(hd)
+
+
+def _gqa_out(p, v, n_rep):
+    """p: (B,S,H,T), v: (B,T,Hkv,hd) -> (B,S,H,hd)."""
+    if n_rep > 1:
+        B, S, H, T = p.shape
+        pg = p.reshape(B, S, H // n_rep, n_rep, T)
+        o = jnp.einsum("bsgrt,btgk->bsgrk", pg, v)
+        return o.reshape(B, S, H, v.shape[-1])
+    return jnp.einsum("bsht,bthk->bshk", p, v)
+
+
+def _softmax(scores, mask):
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def attention(params, x, positions, *, n_rep: int, window: Optional[int],
+              rope_theta: float = 10000.0, use_rope: bool = True,
+              cache=None, decode: bool = False):
+    """GQA attention with optional sliding window and KV cache.
+
+    Train/prefill: x (B,S,D), causal (+window) mask; returns (out, new_cache)
+    where new_cache is populated iff ``cache`` is given (prefill).
+    Decode: x (B,1,D); ``cache`` = dict(k, v, pos_k, pos) with circular
+    buffer of length W (window layers) or S_max (global layers).
+    """
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if use_rope:
+        q = rope(q, positions, theta=rope_theta)
+        k = rope(k, positions, theta=rope_theta)
+
+    if not decode:
+        kk, vv, pos_k = k, v, positions
+        scores = _gqa_scores(q, kk, n_rep)
+        causal = pos_k[:, None, :] <= positions[:, :, None]  # (B,S,T)
+        mask = causal
+        if window is not None:
+            mask = mask & (pos_k[:, None, :] > positions[:, :, None] - window)
+        out = _gqa_out(_softmax(scores, mask[:, :, None, :]), vv, n_rep)
+        new_cache = None
+        if cache is not None:  # prefill into the cache buffer
+            C = cache["k"].shape[1]
+            if window is not None and C < S:
+                # Keep only the last C positions (circular layout by pos % C).
+                sl = slice(S - C, S)
+                kc, vc, pc = k[:, sl], v[:, sl], positions[:, sl]
+                roll_to = (positions[:, S - C] % C)
+                # Place so that slot = pos % C: roll right by pos0 % C.
+                kc = jax.vmap(lambda a, r: jnp.roll(a, r, axis=0))(kc, roll_to)
+                vc = jax.vmap(lambda a, r: jnp.roll(a, r, axis=0))(vc, roll_to)
+                pc = jax.vmap(lambda a, r: jnp.roll(a, r, axis=0))(pc, roll_to)
+            else:
+                pad = C - S
+                kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                pc = jnp.pad(positions, ((0, 0), (0, pad)),
+                             constant_values=jnp.iinfo(jnp.int32).max)
+            new_cache = {"k": kc.astype(cache["k"].dtype),
+                         "v": vc.astype(cache["v"].dtype), "pos_k": pc}
+    else:
+        # Single-token decode against the circular cache.
+        C = cache["k"].shape[1]
+        pos = positions[:, 0]  # (B,)
+        slot = (pos % C).astype(jnp.int32)
+        upd = lambda buf, new: jax.vmap(
+            lambda b, n, s: lax.dynamic_update_slice_in_dim(b, n, s, axis=0)
+        )(buf, new.astype(buf.dtype), slot)
+        kc = upd(cache["k"], k)
+        vc = upd(cache["v"], v)
+        pc = jax.vmap(
+            lambda b, n, s: lax.dynamic_update_slice_in_dim(b, n, s, axis=0)
+        )(cache["pos_k"], pos[:, None], slot)
+        # flash-decode: pin cache + scores to the sequence-sharded layout so
+        # GSPMD computes partial softmax/PV per shard (tiny psums) instead of
+        # resharding the cache to its preferred head layout every step.
+        from repro.launch.shardctx import constrain
+        kc = constrain(kc, "kv_sp")
+        vc = constrain(vc, "kv_sp")
+        pc = constrain(pc, "kvpos_sp")
+        scores = constrain(_gqa_scores(q, kc, n_rep), "scores_sp")  # (B,1,H,C)
+        valid = (pc <= pos[:, None])
+        if window is not None:
+            valid = valid & (pc > (pos[:, None] - window))
+        out = _gqa_out(_softmax(scores, valid[:, None, None, :]), vc, n_rep)
+        new_cache = {"k": kc, "v": vc, "pos_k": pc}
+
+    proj = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), params["wo"])
+    return proj, new_cache
+
+
+# ----------------------------------------------------------------------- MLA
+def init_mla(key, d_model, n_heads, *, kv_lora, d_nope, d_rope, d_v, dtype):
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "wq": _init(k1, (d_model, n_heads, d_nope + d_rope), dtype=dtype),
+        "w_dkv": _init(k2, (d_model, kv_lora), dtype=dtype),
+        "w_kr": _init(k3, (d_model, d_rope), dtype=dtype),
+        "w_uk": _init(k4, (kv_lora, n_heads, d_nope), dtype=dtype),
+        "w_uv": _init(k5, (kv_lora, n_heads, d_v), dtype=dtype),
+        "wo": _init(k6, (n_heads, d_v, d_model),
+                    scale=1.0 / np.sqrt(n_heads * d_v), dtype=dtype),
+    }
+
+
+def mla_attention(params, x, positions, *, d_nope: int, d_rope: int,
+                  rope_theta: float = 10000.0, cache=None, decode=False):
+    """DeepSeek-V2 Multi-head Latent Attention.
+
+    Cache holds the *compressed* per-token state (c_kv, k_rope) — the MLA
+    memory advantage.  Decode uses the absorbed form: W_uk folds into the
+    query, W_uv folds into the output, so scores are rank-``kv_lora`` inner
+    products against the compressed cache directly.
+    """
+    B, S, D = x.shape
+    H = params["wq"].shape[1]
+    scale = 1.0 / np.sqrt(d_nope + d_rope).astype(np.float32)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_n, q_r = q[..., :d_nope], q[..., d_nope:]
+    q_r = rope(q_r, positions, theta=rope_theta)
+
+    c_kv = jnp.einsum("bsd,dc->bsc", x, params["w_dkv"])  # (B,S,Ckv)
+    k_r = rope(jnp.einsum("bsd,dr->bsr", x, params["w_kr"])[:, :, None, :],
+               positions, theta=rope_theta)[:, :, 0, :]  # (B,S,dr)
+
+    if not decode:
+        k_n = jnp.einsum("bsc,chk->bshk", c_kv, params["w_uk"])
+        v = jnp.einsum("bsc,chk->bshk", c_kv, params["w_uv"])
+        scores = (jnp.einsum("bshk,bthk->bsht", q_n, k_n)
+                  + jnp.einsum("bshr,btr->bsht", q_r, k_r)) * scale
+        causal = positions[:, None, :] <= positions[:, :, None]
+        p = _softmax(scores, causal[:, :, None, :])
+        out = jnp.einsum("bsht,bthk->bshk", p, v).astype(x.dtype)
+        new_cache = None
+        if cache is not None:
+            C = cache["c_kv"].shape[1]
+            pad = C - S
+            new_cache = {
+                "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))).astype(cache["c_kv"].dtype),
+                "k_rope": jnp.pad(k_r, ((0, 0), (0, pad), (0, 0))).astype(cache["k_rope"].dtype),
+                "pos_k": jnp.pad(positions, ((0, 0), (0, pad)),
+                                 constant_values=jnp.iinfo(jnp.int32).max),
+            }
+    else:
+        C = cache["c_kv"].shape[1]
+        pos = positions[:, 0]
+        slot = (pos % C).astype(jnp.int32)
+        upd = lambda buf, new: jax.vmap(
+            lambda b, n, s: lax.dynamic_update_slice_in_dim(b, n, s, axis=0)
+        )(buf, new.astype(buf.dtype), slot)
+        ckv = upd(cache["c_kv"], c_kv)
+        krc = upd(cache["k_rope"], k_r)
+        pc = jax.vmap(
+            lambda b, n, s: lax.dynamic_update_slice_in_dim(b, n, s, axis=0)
+        )(cache["pos_k"], pos[:, None], slot)
+        # Absorbed: q_abs (B,1,H,Ckv) = q_n @ W_uk^T
+        q_abs = jnp.einsum("bshk,chk->bshc", q_n, params["w_uk"])
+        scores = (jnp.einsum("bshc,btc->bsht", q_abs, ckv)
+                  + jnp.einsum("bshr,btr->bsht", q_r, krc)) * scale
+        valid = pc <= pos[:, None]
+        p = _softmax(scores, valid[:, None, None, :])
+        ctx = jnp.einsum("bsht,btc->bshc", p, ckv)  # compressed context
+        out = jnp.einsum("bshc,chk->bshk", ctx, params["w_uv"]).astype(x.dtype)
+        new_cache = {"c_kv": ckv, "k_rope": krc, "pos_k": pc}
+
+    proj = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return proj, new_cache
+
+
+# ----------------------------------------------------------------------- MLP
+def init_mlp(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": _init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": _init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp_apply(params, x):
+    return swiglu(x, params["w_gate"], params["w_up"], params["w_down"])
+
+
+# ----------------------------------------------------------------------- MoE
+def init_moe(key, d_model, d_ff_expert, n_experts, n_shared, d_ff_shared, dtype):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": _init(k1, (d_model, n_experts), scale=0.02, dtype=jnp.float32),
+        "w_gate": _init(k2, (n_experts, d_model, d_ff_expert), dtype=dtype),
+        "w_up": _init(k3, (n_experts, d_model, d_ff_expert), dtype=dtype),
+        "w_down": _init(k4, (n_experts, d_ff_expert, d_model), dtype=dtype),
+    }
+    if n_shared:
+        p["shared"] = init_mlp(k5, d_model, n_shared * d_ff_shared, dtype)
+    return p
+
+
+def moe_apply(params, x, *, top_k: int, capacity_factor: float = 1.25,
+              ep_axis: Optional[str] = None, ep_size: int = 1):
+    """Top-k MoE with capacity-based dispatch.
+
+    Local form (ep_axis=None): experts computed locally (smoke tests,
+    single device).  EP form: called inside ``shard_map``; the expert axis is
+    sharded over ``ep_axis`` and tokens move via ``all_to_all`` — the
+    production TPU dispatch (DESIGN.md §6).
+
+    x: (B, S, D) -> (B, S, D).
+    """
+    B, S, D = x.shape
+    E = params["router"].shape[-1]
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = lax.top_k(probs, top_k)  # (T,k)
+    gate = (gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    # --- capacity-slot assignment (per local shard) -------------------------
+    # O(T·k log) argsort-based ranking instead of the O(T·k·E) one-hot
+    # cumsum: at kimi-k2 scale the one-hot would be ~1 GB per layer.
+    C = int(np.ceil(T * top_k / E * capacity_factor))
+    C = max(C, top_k)
+    flat_e = eidx.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    first = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype), side="left")
+    slot_sorted = jnp.arange(T * top_k, dtype=jnp.int32) - first[se].astype(jnp.int32)
+    slot = jnp.zeros_like(slot_sorted).at[order].set(slot_sorted)
+    keep = slot < C
+    dest = jnp.where(keep, flat_e * C + slot, E * C)  # overflow -> dropped row
+
+    # scatter tokens into (E*C+1, D) dispatch buffer
+    buf = jnp.zeros((E * C + 1, D), x.dtype)
+    src = jnp.repeat(xt, top_k, axis=0)  # (T*k, D)
+    buf = buf.at[dest].set(src)  # last row collects dropped tokens
+    buf = buf[: E * C].reshape(E, C, D)
+
+    if ep_axis is not None and ep_size > 1:
+        # (E, C, D) -> experts sharded: each shard keeps E/ep experts,
+        # gathering that expert's slots from every peer.  The all_to_all is
+        # kept SYMMETRIC (split_axis == concat_axis): its transpose is
+        # another symmetric all_to_all of identical shape, so the VJP is
+        # well-defined; the axis shuffle is a local transpose instead.
+        buf = buf.reshape(ep_size, E // ep_size, C, D)
+        buf = lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=0,
+                             tiled=False)
+        # [j, e, c] = peer j's slot c for my local expert e
+        buf = buf.transpose(1, 0, 2, 3).reshape(E // ep_size, ep_size * C, D)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+    if ep_axis is not None and ep_size > 1:
+        out_buf = out_buf.reshape(E // ep_size, ep_size, C, D)
+        out_buf = out_buf.transpose(1, 0, 2, 3)  # (ep, E/ep, C, D)
+        out_buf = lax.all_to_all(out_buf, ep_axis, split_axis=0,
+                                 concat_axis=0, tiled=False)
+        out_buf = out_buf.reshape(E, C, D)
+
+    # gather back + weighted combine
+    out_flat = out_buf.reshape(E * C, D)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((1, D), x.dtype)], axis=0)
+    tok_out = out_flat[dest].reshape(T, top_k, D)
+    y = jnp.einsum("tkd,tk->td", tok_out, gate.astype(tok_out.dtype))
+    # NOTE: the shared-expert MLP (if any) is applied *outside* this function
+    # (model.py), at jit level, so it gets TP sharding instead of being
+    # replicated across the EP shard_map region.
+    return y.reshape(B, S, D)
+
+
+# -------------------------------------------------------------------- Mamba1
+def init_mamba(key, d_model, *, d_state, d_conv, expand, dt_rank, dtype):
+    d_inner = expand * d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": _init(ks[0], (d_model, 2 * d_inner), dtype=dtype),
+        "conv_w": _init(ks[1], (d_conv, d_inner), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": _init(ks[2], (d_inner, dt_rank + 2 * d_state), dtype=dtype),
+        "dt_proj": _init(ks[3], (dt_rank, d_inner), dtype=dtype),
+        "dt_bias": jnp.full((d_inner,), -4.0, dtype),  # softplus ~= small dt
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_inner, d_state))).astype(dtype),
+        "D": jnp.ones((d_inner,), dtype),
+        "out_proj": _init(ks[4], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def _ssm_chunk_scan(dA, dBx, h0, chunk: int):
+    """Chunked linear scan h_t = dA_t * h_{t-1} + dBx_t over axis 1.
+
+    dA, dBx: (B, S, Di, N); h0: (B, Di, N).  Returns (ys, h_final).
+    Materializes only one (B, chunk, Di, N) block at a time (TPU adaptation
+    of the fused Mamba GPU kernel — DESIGN.md §2).
+    """
+    B, S, Di, N = dA.shape
+    n_chunks = S // chunk
+    dA = dA.reshape(B, n_chunks, chunk, Di, N)
+    dBx = dBx.reshape(B, n_chunks, chunk, Di, N)
+
+    def outer(h, blk):
+        a, bx = blk  # (B, chunk, Di, N)
+        # within-chunk associative scan on (a, b) pairs
+        def comb(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+        aa, bb = lax.associative_scan(comb, (a, bx), axis=1)
+        hs = aa * h[:, None] + bb  # (B, chunk, Di, N)
+        return hs[:, -1], hs
+
+    h_last, ys = lax.scan(outer, h0, (dA.transpose(1, 0, 2, 3, 4),
+                                      dBx.transpose(1, 0, 2, 3, 4)))
+    ys = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, Di, N)
+    return ys, h_last
+
+
+def mamba_apply(params, x, *, d_state: int, d_conv: int, chunk: int = 256,
+                cache=None, decode=False):
+    """Mamba-1 selective SSM. x: (B,S,D).
+
+    Cache (decode): {"conv": (B, d_conv-1, Di), "h": (B, Di, N)}.
+    """
+    B, S, D = x.shape
+    d_inner = params["in_proj"].shape[-1] // 2
+    dt_rank = params["dt_proj"].shape[0]
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xin, z = xz[..., :d_inner], xz[..., d_inner:]
+
+    # causal depthwise conv (kernel d_conv)
+    if not decode:
+        pad = jnp.zeros((B, d_conv - 1, d_inner), xin.dtype)
+        xpad = jnp.concatenate([pad, xin], axis=1)
+        conv = sum(xpad[:, i:i + S] * params["conv_w"][i]
+                   for i in range(d_conv))
+        new_conv_state = xpad[:, S:S + d_conv - 1] if S >= d_conv - 1 else None
+        if cache is not None and new_conv_state is None:
+            new_conv_state = jnp.concatenate([cache["conv"], xin], 1)[:, -(d_conv - 1):]
+    else:
+        hist = jnp.concatenate([cache["conv"], xin], axis=1)  # (B, d_conv, Di)
+        conv = jnp.einsum("bki,ki->bi", hist, params["conv_w"])[:, None, :]
+        new_conv_state = hist[:, 1:]
+    conv = jax.nn.silu(conv + params["conv_b"])
+
+    proj = jnp.einsum("bsi,ir->bsr", conv, params["x_proj"])
+    dt_r = proj[..., :dt_rank]
+    Bmat = proj[..., dt_rank:dt_rank + d_state]           # (B,S,N)
+    Cmat = proj[..., dt_rank + d_state:]                   # (B,S,N)
+    dt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt_r, params["dt_proj"])
+                         + params["dt_bias"])              # (B,S,Di)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))      # (Di,N)
+
+    dA = jnp.exp(dt[..., None] * A)                        # (B,S,Di,N) f32
+    # keep the recurrence in f32: mixed bf16/f32 leaves break
+    # associative_scan's internal concatenate, and the state accumulates.
+    dBx = ((dt * conv)[..., None] * Bmat[:, :, None, :]).astype(dA.dtype)
+
+    if not decode:
+        h0 = jnp.zeros((B, d_inner, d_state), dA.dtype)
+        if S % chunk == 0 and S >= chunk:
+            hs, h_last = _ssm_chunk_scan(dA, dBx, h0, chunk)
+        else:
+            def step(h, ab):
+                a, bx = ab
+                h = a * h + bx
+                return h, h
+            h_last, hs = lax.scan(step, h0, (dA.transpose(1, 0, 2, 3),
+                                             dBx.transpose(1, 0, 2, 3)))
+            hs = hs.transpose(1, 0, 2, 3)
+        y = jnp.einsum("bsin,bsn->bsi", hs, Cmat)
+    else:
+        h = cache["h"] * dA[:, 0] + dBx[:, 0]
+        y = jnp.einsum("bin,bn->bi", h, Cmat[:, 0])[:, None, :]
+        h_last = h
+
+    y = y + conv * params["D"]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y.astype(x.dtype), params["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv_state.astype(cache["conv"].dtype),
+                     "h": h_last.astype(cache["h"].dtype)}
+    return out, new_cache

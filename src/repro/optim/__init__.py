@@ -1,0 +1,12 @@
+"""Optimizers (pure pytree implementations): AdamW and Adafactor.
+
+Adafactor (factored second moment + bf16 first moment) is the default for
+≥100B-parameter configs: AdamW state at kimi-k2 scale would need ~16 TB
+(> 512 × 16 GB HBM), Adafactor needs ~4.5 bytes/param (DESIGN.md §6).
+"""
+from repro.optim.optimizers import (OptConfig, adafactor_init, adamw_init,
+                                    apply_updates, global_norm, init_opt_state,
+                                    opt_update)
+
+__all__ = ["OptConfig", "adamw_init", "adafactor_init", "init_opt_state",
+           "opt_update", "apply_updates", "global_norm"]

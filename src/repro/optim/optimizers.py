@@ -1,0 +1,166 @@
+"""AdamW and Adafactor as pure pytree transforms.
+
+State layout mirrors the param pytree so the same PartitionSpecs shard the
+optimizer state (ZeRO-style: state is FSDP-sharded exactly like its param).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"        # 'adamw' | 'adafactor'
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999          # adafactor: decay for factored 2nd moment
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "float32"   # 'bfloat16' halves 1st-moment memory
+
+
+def schedule_lr(cfg: OptConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    # (step+1): the first step must not see lr=0 (off-by-one guard)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(np.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+# ------------------------------------------------------------------- AdamW
+def adamw_init(params, cfg: OptConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros_like(p, mdt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros_like(p, mdt), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _adamw_update(g, p, m, v, lr, cfg: OptConfig, step):
+    g = g.astype(jnp.float32)
+    m1 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+    v1 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+    t = step.astype(jnp.float32) + 1.0
+    mh = m1 / (1 - cfg.b1 ** t)
+    vh = v1 / (1 - cfg.b2 ** t)
+    upd = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+    return -lr * upd, m1, v1
+
+
+# --------------------------------------------------------------- Adafactor
+def _factored_dims(shape):
+    """Last two non-trivial dims get factored; else None (vector-like)."""
+    if len(shape) < 2 or shape[-1] <= 1 or shape[-2] <= 1:
+        return None
+    return len(shape) - 2, len(shape) - 1
+
+
+def adafactor_init(params, cfg: OptConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def vstate(p):
+        f = _factored_dims(p.shape)
+        if f is None:
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        r, c = f
+        vr = jnp.zeros(p.shape[:-1], jnp.float32)            # row stats
+        vc = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)  # col stats
+        return {"vr": vr, "vc": vc}
+
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros_like(p, mdt), params),
+        "v": jax.tree.map(vstate, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _adafactor_update(g, p, m, v, lr, cfg: OptConfig, step):
+    g = g.astype(jnp.float32)
+    t = step.astype(jnp.float32) + 1.0
+    beta2 = 1.0 - t ** -0.8  # Adafactor's schedule-free decay
+    g2 = g * g + 1e-30
+    f = _factored_dims(g.shape)
+    if f is None:
+        v1 = {"v": beta2 * v["v"] + (1 - beta2) * g2}
+        pre = g / (jnp.sqrt(v1["v"]) + cfg.eps)
+        vout = v1
+    else:
+        r, c = f
+        vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+        vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+        rfac = vr / jnp.clip(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+        pre = g * jax.lax.rsqrt(rfac[..., None] + cfg.eps) \
+            * jax.lax.rsqrt(vc[..., None, :] + cfg.eps)
+        vout = {"vr": vr, "vc": vc}
+    # update clipping (RMS <= 1) per Adafactor
+    rms = jnp.sqrt(jnp.mean(pre * pre) + 1e-30)
+    pre = pre / jnp.maximum(1.0, rms)
+    m1 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * pre
+    upd = m1 + cfg.weight_decay * p.astype(jnp.float32)
+    return -lr * upd, m1, vout
+
+
+# ------------------------------------------------------------------ driver
+def init_opt_state(params, cfg: OptConfig):
+    return (adafactor_init if cfg.kind == "adafactor" else adamw_init)(params, cfg)
+
+
+def opt_update(grads, params, state, cfg: OptConfig):
+    """Returns (updates, new_state). Applies grad clip + lr schedule."""
+    step = state["step"]
+    lr = schedule_lr(cfg, step)
+    if cfg.grad_clip:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    mdt = jnp.dtype(cfg.moment_dtype)
+    upd_fn = _adafactor_update if cfg.kind == "adafactor" else _adamw_update
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params)
+    flat_m = jax.tree.leaves(state["m"])
+    if cfg.kind == "adafactor":
+        # v is a tree of dicts — flatten at the param level
+        flat_v = tdef.flatten_up_to(state["v"])
+    else:
+        flat_v = jax.tree.leaves(state["v"])
+
+    ups, ms, vs = [], [], []
+    for g, p, m, v in zip(flat_g, flat_p, flat_m, flat_v):
+        u, m1, v1 = upd_fn(g, p, m, v, lr, cfg, step)
+        ups.append(u)
+        ms.append(m1.astype(mdt))
+        vs.append(v1)
+    updates = jax.tree.unflatten(tdef, ups)
+    new_state = {
+        "m": jax.tree.unflatten(tdef, ms),
+        "v": jax.tree.unflatten(tdef, vs),
+        "step": step + 1,
+    }
+    return updates, new_state
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)

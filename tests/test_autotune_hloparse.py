@@ -1,0 +1,81 @@
+"""Sharding autotuner (SA-on-the-framework) + HLO roofline parser."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.distributed.autotune import (TuneProblem, autotune, decode_point,
+                                        exhaustive_best, make_objective)
+from repro.launch.hloparse import parse_hlo_costs
+
+
+def test_autotune_matches_exhaustive():
+    prob = TuneProblem(cfg=get_arch("stablelm-1.6b").model, seq=4096,
+                       batch=256, chips=64)
+    choice, cost = autotune(prob, n_chains=128, seed=0)
+    _, best = exhaustive_best(prob)
+    assert cost <= best * 1.02, (cost, best)
+
+
+def test_cost_model_penalizes_oom():
+    """kimi-k2 (1T params) pure-DP must be penalized (doesn't fit HBM)."""
+    prob = TuneProblem(cfg=get_arch("kimi-k2-1t-a32b").model, seq=4096,
+                       batch=256, chips=256)
+    obj = make_objective(prob)
+    dps = prob.dp_choices()
+    x_dp_only = np.array([(dps.index(256) + 0.5) / len(dps), 0.1, 0.1,
+                          0.1, 0.1])  # dp=256, no remat
+    x_mixed = np.array([(dps.index(16) + 0.5) / len(dps), 0.5, 0.9,
+                        0.9, 0.5])    # dp=16/tp=16, dots remat, ep, mb8
+    f_dp = float(obj(jnp.asarray(x_dp_only)[None])[0])
+    f_mix = float(obj(jnp.asarray(x_mixed)[None])[0])
+    assert f_mix < f_dp, "OOM penalty must dominate the pure-DP point"
+
+
+def test_decode_point_roundtrip():
+    prob = TuneProblem(cfg=get_arch("deepseek-v2-lite-16b").model, seq=4096,
+                       batch=256, chips=256)
+    d = decode_point(prob, np.array([0.0, 0.99, 0.99, 0.99, 0.0]))
+    assert d["dp"] == prob.dp_choices()[0]
+    assert d["remat"] == "full" and d["ep"] is True
+    assert d["microbatch"] == 8 and d["compress"] == "fp32"
+    assert d["dp"] * d["tp"] == 256
+
+
+_HLO = """
+HloModule test
+
+ENTRY %main (p0: f32[128,256], p1: f32[256,256]) -> f32[128,256] {
+  %p0 = f32[128,256] parameter(0)
+  %p1 = f32[256,256] parameter(1)
+  %dot = f32[128,256] dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[256,256] all-gather(%p1), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[128,256] all-reduce(%dot), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %copy = f32[128,256] copy(%ar)
+}
+"""
+
+
+def test_hloparse_wire_model():
+    out = parse_hlo_costs(_HLO)
+    wire = out["wire"]
+    # all-gather: output 256*256*4 bytes * (n-1)/n with n=4
+    assert wire["all-gather"] == pytest.approx(256 * 256 * 4 * 3 / 4)
+    # all-reduce: 2 * in * (n-1)/n
+    assert wire["all-reduce"] == pytest.approx(2 * 128 * 256 * 4 * 3 / 4)
+    assert out["hbm_bytes"] > 0
+
+
+def test_hloparse_skips_fused_elementwise():
+    hlo = """
+HloModule t
+
+ENTRY %main (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64] parameter(0)
+  %add = f32[64] add(%p0, %p0)
+  ROOT %copy = f32[64] copy(%add)
+}
+"""
+    out = parse_hlo_costs(hlo)
+    # elementwise add is fusible: only the copy materializes (read + write)
+    assert out["hbm_bytes"] == 64 * 4 * 2

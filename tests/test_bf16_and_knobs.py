@@ -1,0 +1,112 @@
+"""bf16-compute smoke for every arch family (the dry-run runs bf16; fp32
+smoke alone missed a mamba dtype bug) + layout-knob code paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch, shrink
+from repro.models import model as M
+
+# one representative per family keeps runtime low; mamba/moe/mla/encdec and
+# a windowed dense arch are the distinct numeric paths.
+_BF16_ARCHS = ["gemma3-4b", "falcon-mamba-7b", "jamba-v0.1-52b",
+               "deepseek-v2-lite-16b", "whisper-base", "internvl2-2b"]
+
+
+def _batch(cfg, key, batch=2, seq=16):
+    ks = jax.random.split(key, 3)
+    b = {"tokens": jax.random.randint(ks[0], (batch, seq + 1), 0,
+                                      cfg.vocab_size)}
+    if cfg.frontend == "vision_stub":
+        b["patch_embeds"] = jax.random.normal(
+            ks[1], (batch, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+    if cfg.kind == "encdec":
+        b["audio_frames"] = jax.random.normal(
+            ks[2], (batch, 8, cfg.d_model), jnp.bfloat16)
+    return b
+
+
+@pytest.mark.parametrize("arch_id", _BF16_ARCHS)
+def test_bf16_train_step(arch_id):
+    cfg = shrink(get_arch(arch_id).model, param_dtype="bfloat16",
+                 compute_dtype="bfloat16")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    loss, grads = jax.value_and_grad(M.lm_loss)(params, cfg, _batch(cfg, key))
+    assert np.isfinite(float(loss)), f"{arch_id}: bf16 loss not finite"
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("knobs", [
+    {"seq_parallel": True},
+    {"seq_shard_kv": True, "serve_params_tp_only": True},
+])
+def test_layout_knob_paths_run_on_cpu(knobs):
+    """The §Perf knobs must be inert-correct without a mesh policy."""
+    import dataclasses
+    cfg = shrink(get_arch("internlm2-20b").model)
+    cfg = dataclasses.replace(cfg, **{k: v for k, v in knobs.items()
+                                      if hasattr(cfg, k)})
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(key, cfg)
+    loss = M.lm_loss(params, cfg, _batch(cfg, key))
+    assert np.isfinite(float(loss))
+
+    # decode path with the flash-decode constraints active (identity on CPU)
+    caches = M.init_cache(cfg, 2, 32, dtype=jnp.float32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    pos = jnp.zeros((2, 1), jnp.int32)
+    logits, caches = M.forward(params, cfg, tok, positions=pos,
+                               caches=caches, mode="decode")
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_knob_cells_build_on_production_mesh():
+    """Sharding specs for the knob variants are constructible (no compile)."""
+    from repro.launch.steps import cache_specs, param_specs
+    import dataclasses
+
+    class FakeMesh:  # spec construction only consults shape/axis_names
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    cfg = dataclasses.replace(get_arch("internlm2-20b").model,
+                              seq_shard_kv=True)
+    specs = cache_specs(cfg, FakeMesh(), batch=128)
+    k_spec = specs[0][0]["k"]  # P(reps=None, batch, seq, kv_heads, head_dim)
+    assert k_spec[2] == "model", "cache seq axis must shard over model"
+
+
+def test_adamw_second_moment_is_sharded_like_param():
+    """Regression: state_specs must shard AdamW's v exactly like its param
+    (a replicated-v bug cost 100+ GiB/device on 20B-class train cells)."""
+    from functools import partial
+    from repro.launch.steps import param_specs, state_specs
+    from repro.optim import OptConfig, init_opt_state
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    cfg = get_arch("granite-20b").model
+    pshapes = jax.eval_shape(partial(M.init_params, cfg=cfg),
+                             jax.random.PRNGKey(0))
+    pspecs = param_specs(pshapes, cfg, FakeMesh())
+    ss = jax.eval_shape(
+        lambda p: {"params": p, "opt": init_opt_state(p, OptConfig())},
+        pshapes)
+    sspecs = state_specs(ss, pspecs)
+    flat_p = jax.tree_util.tree_leaves_with_path(pspecs,
+        is_leaf=lambda x: hasattr(x, "_normalized_spec_for_aval") or
+                          type(x).__name__ == "PartitionSpec")
+    # v and m mirror the param tree: compare leaf-by-leaf
+    pv = jax.tree_util.tree_leaves(sspecs["opt"]["v"],
+        is_leaf=lambda x: type(x).__name__ == "PartitionSpec")
+    pm = jax.tree_util.tree_leaves(sspecs["opt"]["m"],
+        is_leaf=lambda x: type(x).__name__ == "PartitionSpec")
+    pp = jax.tree_util.tree_leaves(pspecs,
+        is_leaf=lambda x: type(x).__name__ == "PartitionSpec")
+    assert pv == pp and pm == pp

@@ -1,0 +1,108 @@
+"""Metropolis-sweep invariants (paper §2.1 semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metropolis
+from repro.objectives import functions as F
+
+
+def _setup(obj, chains, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = obj.sample_uniform(key, (chains,)).astype(jnp.float32)
+    return jax.random.PRNGKey(seed + 1), x, obj(x)
+
+
+def test_fx_consistent_with_x():
+    """After any sweep, carried fx equals objective(x)."""
+    obj = F.schwefel(8)
+    key, x, fx = _setup(obj, 32)
+    key, x1, fx1 = metropolis.sweep_full(key, x, fx, 5.0,
+                                         objective=obj, n_steps=50)
+    np.testing.assert_allclose(np.asarray(fx1), np.asarray(obj(x1)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bounds_respected():
+    obj = F.rastrigin(6)
+    key, x, fx = _setup(obj, 64)
+    key, x1, _ = metropolis.sweep_full(key, x, fx, 100.0,
+                                       objective=obj, n_steps=200)
+    lo, hi = obj.bounds
+    assert bool(jnp.all(x1 >= lo - 1e-6)) and bool(jnp.all(x1 <= hi + 1e-6))
+
+
+def test_greedy_at_zero_temperature():
+    """T -> 0: only downhill moves accepted => fx non-increasing."""
+    obj = F.schwefel(8)
+    key, x, fx = _setup(obj, 64)
+    cur = fx
+    k = key
+    for _ in range(5):
+        k, x, f_new = metropolis.sweep_full(k, x, cur, 1e-12,
+                                            objective=obj, n_steps=10)
+        assert bool(jnp.all(f_new <= cur + 1e-4)), "uphill move at T=0"
+        cur = f_new
+
+
+def test_hot_temperature_accepts_everything():
+    """T -> inf: acceptance ratio ~1 (every proposal taken)."""
+    obj = F.schwefel(8)
+    key, x, fx = _setup(obj, 256)
+    key, x1, _ = metropolis.sweep_full(key, x, fx, 1e12,
+                                       objective=obj, n_steps=1)
+    # with 1 step and certain acceptance, exactly one coordinate changed
+    changed = jnp.sum(x1 != x, axis=1)
+    frac = float(jnp.mean((changed == 1).astype(jnp.float32)))
+    assert frac > 0.95, f"only {frac:.2%} chains moved at T=inf"
+
+
+@pytest.mark.parametrize("maker,dim", [(F.schwefel, 8), (F.rastrigin, 16),
+                                       (F.ackley, 8), (F.griewank, 16),
+                                       (F.cosine_mixture, 4),
+                                       (F.exponential, 4)])
+def test_delta_equals_full_trajectory(maker, dim):
+    """Identical random stream => identical accepted trajectory for the
+    O(1) delta-eval and the paper-faithful full evaluation."""
+    obj = maker(dim)
+    if obj.decomposable is None:
+        pytest.skip("not decomposable")
+    key, x, fx = _setup(obj, 16, seed=7)
+    k1, xa, fa = metropolis.sweep_full(key, x, fx, 2.0,
+                                       objective=obj, n_steps=60)
+    k2, xb, fb = metropolis.sweep_delta(key, x, fx, 2.0,
+                                        objective=obj, n_steps=60)
+    np.testing.assert_allclose(np.asarray(xa), np.asarray(xb),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(fa), np.asarray(fb),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), temp=st.floats(0.01, 100.0),
+       steps=st.integers(1, 30))
+def test_property_detailed_balance_monotone_stats(seed, temp, steps):
+    """Statistical property: mean energy after a sweep at low T is <= mean
+    energy at very high T (the Boltzmann ordering), and fx stays consistent."""
+    obj = F.schwefel(4)
+    key, x, fx = _setup(obj, 128, seed=seed)
+    _, x_cold, f_cold = metropolis.sweep_full(key, x, fx, 0.01,
+                                              objective=obj, n_steps=steps)
+    _, x_hot, f_hot = metropolis.sweep_full(key, x, fx, 1e6,
+                                            objective=obj, n_steps=steps)
+    assert float(jnp.mean(f_cold)) <= float(jnp.mean(f_hot)) + 1e-3
+    np.testing.assert_allclose(np.asarray(f_cold), np.asarray(obj(x_cold)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_unroll_matches_fori_loop():
+    obj = F.ackley(8)
+    key, x, fx = _setup(obj, 8)
+    _, xa, fa = metropolis.sweep_full(key, x, fx, 1.0, objective=obj,
+                                      n_steps=7, unroll=False)
+    _, xb, fb = metropolis.sweep_full(key, x, fx, 1.0, objective=obj,
+                                      n_steps=7, unroll=True)
+    np.testing.assert_allclose(np.asarray(xa), np.asarray(xb), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(fa), np.asarray(fb), rtol=1e-6)

@@ -1,0 +1,57 @@
+"""Nelder-Mead local minimizer + hybrid SA->NM (paper §4.2)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SAConfig, hybrid_minimize, nelder_mead
+from repro.objectives import functions as F
+
+
+def test_nm_quadratic_bowl():
+    obj = F.exponential(4)  # smooth unimodal, min at origin
+    x0 = np.full(4, 0.4, np.float32)
+    res = nelder_mead(obj, x0, max_iters=2000)
+    assert abs(res.f_best - obj.f_opt) < 1e-6
+    assert np.linalg.norm(res.x_best) < 1e-3
+
+
+def test_nm_rosenbrock_valley():
+    obj = F.rosenbrock(4)
+    x0 = np.full(4, 0.5, np.float32)
+    res = nelder_mead(obj, x0, max_iters=8000)
+    assert res.f_best < 1e-3
+
+
+def test_nm_himmelblau_reaches_a_global_minimum():
+    obj = F.himmelblau()
+    res = nelder_mead(obj, np.array([2.5, 2.5], np.float32), max_iters=2000)
+    assert res.f_best < 1e-8
+
+
+def test_nm_respects_box():
+    obj = F.schwefel(2)
+    res = nelder_mead(obj, np.array([500.0, 500.0], np.float32),
+                      max_iters=500)
+    assert np.all(res.x_best >= obj.lower - 1e-6)
+    assert np.all(res.x_best <= obj.upper + 1e-6)
+
+
+def test_nm_converged_flag():
+    obj = F.exponential(4)
+    res = nelder_mead(obj, np.full(4, 0.1, np.float32), max_iters=5000,
+                      fatol=1e-8, xatol=1e-8)
+    assert res.converged
+    assert res.n_iters < 5000
+
+
+def test_hybrid_improves_on_premature_sa():
+    """Paper Table 10's claim at reduced scale."""
+    obj = F.schwefel(16)
+    cfg = SAConfig(T0=50.0, T_min=2.0, rho=0.8, N=20, n_chains=256,
+                   exchange="sync", seed=0, record_history=False)
+    hyb = hybrid_minimize(obj, cfg, key=jax.random.PRNGKey(0),
+                          nm_max_iters=5000)
+    e_sa = abs(hyb.sa.f_best - obj.f_opt)
+    e_h = abs(hyb.f_best - obj.f_opt)
+    assert e_h <= e_sa
+    assert e_h < 1e-2, (e_sa, e_h)

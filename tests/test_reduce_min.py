@@ -1,0 +1,40 @@
+"""reduce_min Pallas kernel vs jnp oracle: shape/dtype/tie sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.reduce_min import argmin_reduce, block_argmin_pallas
+
+
+@pytest.mark.parametrize("n,blk", [(64, 8), (256, 64), (1024, 128),
+                                   (4096, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_argmin_matches_oracle(n, blk, dtype):
+    f = jax.random.normal(jax.random.PRNGKey(n + blk), (n,)).astype(dtype)
+    m, i = argmin_reduce(f, blk=blk, use_pallas=True, interpret=True)
+    m0, i0 = argmin_reduce(f, use_pallas=False)
+    assert int(i) == int(i0)
+    assert float(m) == float(m0)
+
+
+def test_ties_pick_first_index():
+    f = jnp.asarray([3.0, 1.0, 1.0, 2.0, 1.0, 5.0, 7.0, 8.0])
+    m, i = argmin_reduce(f, blk=4, use_pallas=True, interpret=True)
+    assert int(i) == 1 and float(m) == 1.0
+
+
+def test_cross_block_ties_pick_first_block():
+    f = jnp.full((32,), 2.0).at[20].set(1.0).at[28].set(1.0)
+    m, i = argmin_reduce(f, blk=8, use_pallas=True, interpret=True)
+    assert int(i) == 20
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_random_vectors(seed):
+    f = jax.random.uniform(jax.random.PRNGKey(seed), (512,))
+    m, i = argmin_reduce(f, blk=64, use_pallas=True, interpret=True)
+    assert int(i) == int(jnp.argmin(f))
+    assert float(f[i]) == float(m)
