@@ -75,6 +75,50 @@ def exchange_none(key, x, fx, T, axis_names=None):
     return x, fx
 
 
+# ------------------------------------------------------------------ segmented
+# Multi-tenant serving (service/engine.py): chains from several independent
+# requests are packed into one device batch, so the champion reduce must be
+# *masked per request* — a tenant's chains may only ever see their own
+# champion, never another job's.  ``seg`` assigns every chain its request id.
+
+def segment_champion(x, fx, seg, num_segments: int):
+    """Per-segment (per-request) champion: masked argmin over each tenant.
+
+    Args:
+      x: (chains, dim) states; fx: (chains,) values.
+      seg: (chains,) int32 segment id per chain, in [0, num_segments).
+      num_segments: static segment count (the slot-pool size bounds it).
+
+    Returns (xb (num_segments, dim), fb (num_segments,), ib (num_segments,)):
+    champion state/value/chain-index per segment.  Segments with no chains
+    get ``fb = +inf`` and ``ib = chains`` (out of range — check before use).
+    """
+    n = fx.shape[0]
+    fb = jnp.full((num_segments,), jnp.inf, fx.dtype).at[seg].min(fx)
+    # First chain attaining its segment's min (deterministic tie-break).
+    hit = fx == fb[seg]
+    idx = jnp.where(hit, jnp.arange(n, dtype=jnp.int32), n)
+    ib = jnp.full((num_segments,), n, jnp.int32).at[seg].min(idx)
+    xb = x[jnp.minimum(ib, n - 1)]
+    return xb, fb, ib
+
+
+def exchange_sync_segmented(x, fx, seg, num_segments: int, adopt_mask=None):
+    """Paper-V2 minimum crossover, tenant-isolated: every chain restarts
+    from *its own request's* champion.  ``adopt_mask`` (chains,) lets the
+    engine mix policies in one batch (False = async request / free slot:
+    keep state untouched).
+
+    Returns (x, fx, xb, fb): the exchanged chain state plus the per-segment
+    champions, so callers can fold best-so-far without a second reduce."""
+    xb, fb, ib = segment_champion(x, fx, seg, num_segments)
+    valid = (ib < fx.shape[0])[seg]
+    adopt = valid if adopt_mask is None else (valid & adopt_mask)
+    x = jnp.where(adopt[:, None], xb[seg], x)
+    fx = jnp.where(adopt, fb[seg], fx)
+    return x, fx, xb, fb
+
+
 EXCHANGES = {
     "async": exchange_none,
     "sync": exchange_sync,

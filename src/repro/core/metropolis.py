@@ -42,7 +42,11 @@ def _proposal(key_d, key_u, x, lo, hi):
 
 def _accept(key_a, f0, f1, T):
     """Metropolis criterion, branchless. Accepts downhill moves always
-    (exp(+) >= 1 >= u) and uphill with probability exp(-df/T)."""
+    (exp(+) >= 1 >= u) and uphill with probability exp(-df/T).
+
+    ``T`` may be a scalar (one annealing job) or a ``(chains,)`` array —
+    per-chain temperatures, used by the multi-tenant serving engine where
+    co-batched chains belong to requests at different ladder depths."""
     u = jax.random.uniform(key_a, f0.shape, dtype=f0.dtype)
     # Clamp the exponent to avoid inf-inf NaNs under extreme df/T.
     ratio = jnp.exp(jnp.clip(-(f1 - f0) / T, -80.0, 80.0))
@@ -52,7 +56,9 @@ def _accept(key_a, f0, f1, T):
 @partial(jax.jit, static_argnames=("objective", "n_steps", "unroll"))
 def sweep_full(key, x, fx, T, *, objective: Objective, n_steps: int,
                unroll: bool = False):
-    """Paper-faithful Metropolis sweep with full objective evaluation."""
+    """Paper-faithful Metropolis sweep with full objective evaluation.
+
+    ``T``: scalar or (chains,) per-chain temperature array."""
     lo, hi = objective.bounds
     lo = lo.astype(x.dtype)
     hi = hi.astype(x.dtype)
@@ -87,6 +93,7 @@ def sweep_delta(key, x, fx, T, *, objective: Objective, n_steps: int,
 
     Accumulators are refreshed (recomputed exactly) at sweep entry, so fp
     drift from incremental updates is bounded by one temperature level.
+    ``T``: scalar or (chains,) per-chain temperature array.
     """
     spec: Optional[DecomposableSpec] = objective.decomposable
     assert spec is not None, f"{objective.name} has no decomposable structure"

@@ -18,10 +18,20 @@ Variants
 ``delta`` : beyond-paper — sum/product accumulators updated in O(1) per step
             (DESIGN.md §2); identical proposal/acceptance stream.
 
+Multi-tenant serving (service/engine.py) drives *heterogeneous* chain-blocks
+through one kernel launch: every SMEM control input (temperature, RNG seed,
+step counter, global chain-index base) is a per-block array indexed by
+``program_id``, so each block — one serving *slot* — anneals at its own
+temperature and draws from its own request's random stream regardless of
+which slot it was packed into.  Scalar inputs broadcast to all blocks, which
+keeps the original single-job call signature working unchanged.
+
 Block shape: ``(blk, dim)``; ``blk`` is a multiple of 8 (sublanes), ``dim``
 pads to the 128-lane VREG width. Chains are fully independent so the grid
 over chain-blocks is embarrassingly parallel ("arbitrary dimension" in
-Mosaic terms).
+Mosaic terms). A chain count that is not a multiple of ``blk`` is padded up
+(and sliced back) rather than rejected; padded chains burn VPU lanes but
+never perturb real chains' streams (counter-based RNG on the global index).
 """
 from __future__ import annotations
 
@@ -47,18 +57,19 @@ def _step_draws(seed, cidx, step0, i):
     return rng.draws3(seed, cidx, (step0 + i).astype(jnp.uint32))
 
 
-def _sweep_kernel(seed_ref, step0_ref, t_ref, x_ref, xo_ref, fo_ref,
+def _sweep_kernel(seed_ref, step0_ref, t_ref, base_ref, x_ref, xo_ref, fo_ref,
                   *, kid: int, n_steps: int, blk: int, variant: str):
     dim = x_ref.shape[-1]
     lo, hi = om.BOX[kid]
     lo = np.float32(lo)
     hi = np.float32(hi)
-    seed = seed_ref[0]
-    step0 = step0_ref[0]
-    T = t_ref[0]
 
     pid = pl.program_id(0)
-    cidx = (pid * blk + lax.broadcasted_iota(jnp.int32, (blk, 1), 0)).astype(jnp.uint32)
+    seed = seed_ref[pid]
+    step0 = step0_ref[pid]
+    T = t_ref[pid]
+    base = base_ref[pid]
+    cidx = base + lax.broadcasted_iota(jnp.int32, (blk, 1), 0).astype(jnp.uint32)
     coords = lax.broadcasted_iota(jnp.int32, (blk, dim), 1)
 
     x = x_ref[...]
@@ -115,37 +126,75 @@ def _sweep_kernel(seed_ref, step0_ref, t_ref, x_ref, xo_ref, fo_ref,
     fo_ref[...] = fx
 
 
+def _per_block(v, n_blocks: int, dtype, name: str):
+    """Broadcast a scalar — or validate a (n_blocks,) array — of SMEM input."""
+    a = jnp.asarray(v, dtype).reshape(-1)
+    if a.shape[0] == 1:
+        return jnp.broadcast_to(a, (n_blocks,))
+    if a.shape[0] != n_blocks:
+        raise ValueError(
+            f"{name} has {a.shape[0]} entries for a {n_blocks}-block grid; "
+            f"pass a scalar or one entry per chain-block")
+    return a
+
+
 def metropolis_sweep_pallas(x, T, seed, step0, *, kid: int, n_steps: int,
                             blk: int = 256, variant: str = "delta",
-                            interpret: bool = False):
+                            interpret: bool = False, chain_base=None):
     """Run an N-step Metropolis sweep for all chains.
 
     Args:
       x: (chains, dim) float32 chain states.
-      T: scalar temperature. seed/step0: RNG stream coordinates.
+      T: temperature — scalar, or (chains//blk,) array for per-block
+         (per-serving-slot) temperatures.
+      seed, step0: RNG stream coordinates; scalar or per-block arrays, so
+         co-scheduled requests keep independent, placement-invariant streams.
       kid: registry objective id (objective_math.KID_*).
       n_steps: Metropolis steps (paper's N).
       blk: chains per kernel block (multiple of 8).
       variant: 'delta' (O(1) updates) or 'full' (paper-faithful).
+      chain_base: optional per-block global chain-index base (uint32,
+         (chains//blk,)); defaults to ``block * blk`` (the single-job
+         layout). The RNG stream of chain c in block b is indexed by
+         ``chain_base[b] + c``, which is what makes a request's streams
+         identical no matter which slots the scheduler packed it into.
 
     Returns (x_out, f_out): (chains, dim) and (chains,).
     """
     chains, dim = x.shape
-    if chains % blk:
-        raise ValueError(f"chains={chains} must be a multiple of blk={blk}")
-    grid = (chains // blk,)
+    pad = (-chains) % blk
+    if pad:
+        if chain_base is not None or any(
+                jnp.ndim(v) and jnp.size(v) > 1 for v in (T, seed, step0)):
+            raise ValueError(
+                f"chains={chains} must be a multiple of blk={blk} when "
+                "per-block control arrays are given")
+        # Pad with in-box dummy chains; their streams use indices >= chains
+        # so real chains are untouched. Sliced off below.
+        lo, _ = om.BOX[kid]
+        x = jnp.concatenate(
+            [x, jnp.full((pad, dim), lo, x.dtype)], axis=0)
+    n_chains_p = chains + pad
+    grid = (n_chains_p // blk,)
+    n_blocks = grid[0]
 
     kernel = functools.partial(
         _sweep_kernel, kid=kid, n_steps=n_steps, blk=blk, variant=variant)
 
-    seed_arr = jnp.asarray([seed], jnp.uint32).reshape((1,))
-    step0_arr = jnp.asarray([step0], jnp.uint32).reshape((1,))
-    t_arr = jnp.asarray([T], jnp.float32).reshape((1,))
+    seed_arr = _per_block(seed, n_blocks, jnp.uint32, "seed")
+    step0_arr = _per_block(step0, n_blocks, jnp.uint32, "step0")
+    t_arr = _per_block(T, n_blocks, jnp.float32, "T")
+    if chain_base is None:
+        base_arr = (jnp.arange(n_blocks, dtype=jnp.uint32)
+                    * np.uint32(blk))
+    else:
+        base_arr = _per_block(chain_base, n_blocks, jnp.uint32, "chain_base")
 
     x_out, f_out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -156,10 +205,10 @@ def metropolis_sweep_pallas(x, T, seed, step0, *, kid: int, n_steps: int,
             pl.BlockSpec((blk, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((chains, dim), x.dtype),
-            jax.ShapeDtypeStruct((chains, 1), x.dtype),
+            jax.ShapeDtypeStruct((n_chains_p, dim), x.dtype),
+            jax.ShapeDtypeStruct((n_chains_p, 1), x.dtype),
         ],
         interpret=interpret,
         name=f"metropolis_sweep_{variant}_k{kid}",
-    )(seed_arr, step0_arr, t_arr, x)
-    return x_out, f_out[:, 0]
+    )(seed_arr, step0_arr, t_arr, base_arr, x)
+    return x_out[:chains], f_out[:chains, 0]

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
+from jax import lax
 
 KID_SCHWEFEL = 0
 KID_RASTRIGIN = 1
@@ -49,9 +50,11 @@ def full_eval(kid: int, x, dim: int):
         f = (-20.0 * jnp.exp(-0.2 * jnp.sqrt(s1 / dim))
              - jnp.exp(s2 / dim) + 20.0 + _E)
     elif kid == KID_GRIEWANK:
-        i = jnp.sqrt(jnp.arange(1, dim + 1, dtype=x.dtype))
+        # In-trace iota (not a jnp.arange constant): Pallas kernels reject
+        # captured non-scalar constants, so the index vector must be an op.
+        i = lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1).astype(x.dtype)
         s = jnp.sum(x * x, -1, keepdims=True) / 4000.0
-        p = jnp.prod(jnp.cos(x / i), -1, keepdims=True)
+        p = jnp.prod(jnp.cos(x / jnp.sqrt(i + 1.0)), -1, keepdims=True)
         f = 1.0 + s - p
     else:
         raise ValueError(f"unknown kernel objective id {kid}")
@@ -76,8 +79,7 @@ def term(kid: int, xi, d):
 
 def init_acc(kid: int, x):
     """Exact O(dim) accumulator init from the state block x: (..., dim)."""
-    dim = x.shape[-1]
-    d = jnp.broadcast_to(jnp.arange(dim, dtype=x.dtype), x.shape)
+    d = lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1).astype(x.dtype)
     # term() over every coordinate: reshape to (..., dim, 1)
     s, p = term(kid, x[..., None], d[..., None])  # (..., dim, 2), (..., dim, 1)
     S = jnp.sum(s, axis=-2)

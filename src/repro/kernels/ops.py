@@ -46,6 +46,48 @@ def metropolis_sweep(x, T, seed, step0, *, kid: int, n_steps: int,
         x, T, seed, step0, kid=kid, n_steps=n_steps, variant=variant)
 
 
+@partial(jax.jit, static_argnames=("kid", "n_steps", "blk", "variant",
+                                   "use_pallas", "interpret"))
+def metropolis_sweep_slots(x, T_blocks, seeds, step0s, chain_base, *,
+                           kid: int, n_steps: int, blk: int,
+                           variant: str = "delta", use_pallas: bool = False,
+                           interpret: bool = False):
+    """Heterogeneous-slot Metropolis sweep: one serving slot per chain-block.
+
+    ``x`` is ``(n_blocks * blk, dim)`` — the packed states of every active
+    slot in a dispatch group — and each per-block control array has one entry
+    per slot: its request's temperature, RNG seed, Metropolis step counter
+    and global chain-index base.  On TPU this is a single Pallas launch with
+    the SMEM arrays indexed by ``program_id``; elsewhere the per-block arrays
+    expand to per-chain columns for the jnp oracle.  Both produce identical
+    streams, so slot placement never changes a request's trajectory.
+
+    Returns (x_out (n_blocks*blk, dim), f_out (n_blocks*blk,)).
+    """
+    chains = x.shape[0]
+    if chains % blk:
+        raise ValueError(
+            f"packed chains={chains} must be a multiple of blk={blk}")
+    if use_pallas:
+        from repro.kernels.metropolis_sweep import metropolis_sweep_pallas as mk
+        return mk(x, T_blocks, seeds, step0s, kid=kid, n_steps=n_steps,
+                  blk=blk, variant=variant, interpret=interpret,
+                  chain_base=chain_base)
+    n_blocks = chains // blk
+
+    def expand(a):
+        a = jnp.asarray(a).reshape(-1)
+        if a.shape[0] == 1:  # scalar input: same broadcast as the Pallas path
+            a = jnp.broadcast_to(a, (n_blocks,))
+        return jnp.repeat(a, blk)
+
+    lane = jnp.tile(jnp.arange(blk, dtype=jnp.uint32), n_blocks)
+    cidx = expand(chain_base).astype(jnp.uint32) + lane
+    return ref_mod.metropolis_sweep_ref(
+        x, expand(T_blocks), expand(seeds), expand(step0s),
+        kid=kid, n_steps=n_steps, variant=variant, cidx=cidx)
+
+
 def kid_for(objective) -> Optional[int]:
     """Registry kernel id for an Objective, or None."""
     return getattr(objective, "kernel_id", None)

@@ -6,6 +6,12 @@ Computes the *identical* floating-point recurrence as the Pallas kernel
 Because the RNG is counter-based on the global chain index, the kernel's
 chain-block decomposition does not change random streams, so kernel and
 oracle must agree to float tolerance.
+
+For the multi-tenant serving engine the control inputs generalize from
+scalars to per-chain arrays: ``T``, ``seed`` and ``step0`` may each be a
+scalar or a ``(chains,)`` array, and ``cidx`` optionally overrides the
+global chain indices — the per-chain analogue of the kernel's per-block
+SMEM arrays (a serving slot's chains all share one entry).
 """
 from __future__ import annotations
 
@@ -20,18 +26,29 @@ from repro.kernels import objective_math as om
 from repro.kernels import rng
 
 
+def _col(v, chains: int, dtype):
+    """Scalar or (chains,) input -> (chains, 1) column."""
+    a = jnp.asarray(v, dtype).reshape(-1)
+    if a.shape[0] == 1:
+        a = jnp.broadcast_to(a, (chains,))
+    return a[:, None]
+
+
 @partial(jax.jit, static_argnames=("kid", "n_steps", "variant"))
 def metropolis_sweep_ref(x, T, seed, step0, *, kid: int, n_steps: int,
-                         variant: str = "delta"):
+                         variant: str = "delta", cidx=None):
     chains, dim = x.shape
     lo, hi = om.BOX[kid]
     lo = np.float32(lo)
     hi = np.float32(hi)
-    cidx = jnp.arange(chains, dtype=jnp.uint32)[:, None]  # (chains, 1)
+    if cidx is None:
+        cidx = jnp.arange(chains, dtype=jnp.uint32)[:, None]  # (chains, 1)
+    else:
+        cidx = _col(cidx, chains, jnp.uint32)
     coords = jnp.broadcast_to(jnp.arange(dim, dtype=jnp.int32), (chains, dim))
-    seed = jnp.asarray(seed, jnp.uint32)
-    step0 = jnp.asarray(step0, jnp.uint32)
-    T = jnp.asarray(T, x.dtype)
+    seed = _col(seed, chains, jnp.uint32)
+    step0 = _col(step0, chains, jnp.uint32)
+    T = _col(T, chains, x.dtype)
 
     if variant == "delta":
         S, logP, sgnP = om.init_acc(kid, x)

@@ -1,0 +1,46 @@
+"""Multi-tenant SA serving engine: continuous batching for annealing jobs.
+
+The paper's synchronous SA (V2) is a single-job batch program.  This
+subsystem turns it into a *serving* system in the vLLM/LightLLM mold: a
+fixed pool of chain-block slots, an admission scheduler that packs a queue
+of heterogeneous optimization requests into free slots, one engine tick =
+one temperature level for every active slot, and immediate slot refill when
+a request's ladder (or budget, or accuracy target) completes.
+
+Layers
+------
+``request.py``   : :class:`SARequest` / :class:`RequestResult` schema.
+``slots.py``     : the slot pool — per-slot chain state + ownership.
+``scheduler.py`` : priority-with-aging admission, bounded backfill.
+``engine.py``    : the continuous-batching tick loop; per-slot temperature
+                   threaded to the Pallas kernel, champion exchange masked
+                   per request (tenant isolation).
+``serve_sa.py``  : CLI driver + synthetic heterogeneous load.
+
+Usage::
+
+    from repro.service import EngineConfig, SARequest, SAServeEngine
+
+    engine = SAServeEngine(EngineConfig(n_slots=8, chains_per_slot=32))
+    engine.submit(SARequest(req_id=0, objective="rastrigin", dim=8,
+                            n_chains=64, T0=100.0, T_min=0.5, rho=0.9, N=40))
+    engine.submit(SARequest(req_id=1, objective="ackley", dim=16,
+                            n_chains=32, T0=50.0, T_min=0.2, rho=0.95, N=25))
+    results = engine.run()          # both jobs co-annealed on one program
+    print(engine.stats())           # req/s, sweeps/s, slot occupancy
+
+Or from the shell::
+
+    PYTHONPATH=src python -m repro.service.serve_sa --requests 32 --slots 8
+"""
+from repro.service.engine import (EngineConfig, SAServeEngine, F_OPT,
+                                  run_standalone)
+from repro.service.request import RequestResult, SARequest, SERVABLE
+from repro.service.scheduler import AdmissionScheduler, SchedulerConfig
+from repro.service.slots import ActiveJob, SlotPool
+
+__all__ = [
+    "EngineConfig", "SAServeEngine", "run_standalone", "F_OPT",
+    "SARequest", "RequestResult", "SERVABLE",
+    "AdmissionScheduler", "SchedulerConfig", "SlotPool", "ActiveJob",
+]

@@ -1,0 +1,278 @@
+"""Continuous-batching SA serving engine.
+
+The annealing analogue of a vLLM/LightLLM decode loop (launch/serve.py):
+
+* a fixed pool of chain-block *slots* (slots.py) — the "decode batch";
+* an admission scheduler (scheduler.py) packs queued requests into free
+  slots — "prefill";
+* one engine **tick** advances every active slot by one temperature level
+  (one N-step Metropolis sweep at that slot's own temperature, then a
+  champion exchange masked per request);
+* a request whose ladder / budget / accuracy target completes frees its
+  slots *immediately* and the next queued request takes them — no tail
+  latency from stragglers sharing the batch.
+
+Heterogeneity is handled in two layers.  Per-slot *temperature, RNG seed,
+step cursor and chain base* are runtime arrays threaded down to the kernel
+(one SMEM entry per block, indexed by ``program_id``), so they never cause
+recompilation.  Per-slot *objective id, dimensionality and sweep length*
+are compile-time kernel constants, so active slots are grouped by
+``(kid, dim, N)`` each tick and dispatched as one device program per group
+(groups are padded to power-of-two block counts to bound the number of
+compiled signatures).  Champion reduces inside a packed group are segmented
+by request id — tenants never exchange states (core/exchange.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import exchange as exch
+from repro.kernels import objective_math as om
+from repro.kernels import ops
+from repro.service.request import RequestResult, SARequest
+from repro.service.scheduler import AdmissionScheduler, SchedulerConfig
+from repro.service.slots import ActiveJob, RidTable, SlotPool
+
+#: Known optima of the servable (registry) objectives, for accuracy targets.
+#: Schwefel is the paper's normalized form, so its optimum is dim-free.
+F_OPT = {
+    om.KID_SCHWEFEL: -418.982887,
+    om.KID_RASTRIGIN: 0.0,
+    om.KID_ACKLEY: 0.0,
+    om.KID_GRIEWANK: 0.0,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 8
+    chains_per_slot: int = 64   # chains per slot == kernel block size
+    variant: str = "delta"      # 'delta' (O(1) updates) | 'full' (paper)
+    use_pallas: object = "auto"  # True | False | 'auto' (TPU only)
+    interpret: bool = False     # Pallas interpret mode (tests on CPU)
+    scheduler: SchedulerConfig = dataclasses.field(
+        default_factory=SchedulerConfig)
+
+
+@partial(jax.jit, static_argnames=("kid", "n_steps", "blk", "variant",
+                                   "use_pallas", "interpret", "num_segments"))
+def _group_tick(x, T_blk, seed_blk, step0_blk, base_blk, seg, adopt, *,
+                kid: int, n_steps: int, blk: int, variant: str,
+                use_pallas: bool, interpret: bool, num_segments: int):
+    """One temperature level for one dispatch group, on device.
+
+    Sweep every block at its own temperature, then a segmented champion
+    reduce: chains adopt *their request's* champion iff their request runs
+    sync exchange (``adopt``); the champion is returned for every segment
+    either way so the host can fold best-so-far.
+    """
+    x, fx = ops.metropolis_sweep_slots(
+        x, T_blk, seed_blk, step0_blk, base_blk, kid=kid, n_steps=n_steps,
+        blk=blk, variant=variant, use_pallas=use_pallas, interpret=interpret)
+    return exch.exchange_sync_segmented(x, fx, seg, num_segments,
+                                        adopt_mask=adopt)
+
+
+class SAServeEngine:
+    """Multi-tenant annealing server over one device program per group."""
+
+    def __init__(self, cfg: EngineConfig = EngineConfig()):
+        self.cfg = cfg
+        self.pool = SlotPool(cfg.n_slots, cfg.chains_per_slot)
+        self.scheduler = AdmissionScheduler(cfg.scheduler)
+        self.rids = RidTable(cfg.n_slots)
+        self.results: List[RequestResult] = []
+        self.tick_count = 0
+        self.sweeps_done = 0          # block-sweeps (slot x level): also the
+                                      # occupancy numerator (active slot-ticks)
+        self.group_launches = 0
+        self._use_pallas = ops.resolve_use_pallas(cfg.use_pallas)
+        if self._use_pallas and cfg.chains_per_slot % 8:
+            raise ValueError(
+                f"chains_per_slot={cfg.chains_per_slot} must be a multiple "
+                "of 8 (TPU sublanes) on the Pallas path")
+
+    # ------------------------------------------------------------ frontend
+    def submit(self, req: SARequest) -> None:
+        need = req.slots_needed(self.cfg.chains_per_slot)
+        if need > self.cfg.n_slots:
+            raise ValueError(
+                f"request {req.req_id} needs {need} slots > pool "
+                f"{self.cfg.n_slots}; lower n_chains or grow the pool")
+        self.scheduler.submit(req, self.tick_count)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.rids.jobs)
+
+    @property
+    def done(self) -> bool:
+        return self.n_active == 0 and len(self.scheduler) == 0
+
+    # ----------------------------------------------------------- admission
+    def _admit(self) -> None:
+        entries = self.scheduler.admit(
+            self.pool.n_free, self.cfg.chains_per_slot, self.tick_count)
+        for req, submit_tick in entries:
+            job = ActiveJob(req=req, rid=-1, slots=[], T=req.T0,
+                            submit_tick=submit_tick,
+                            start_tick=self.tick_count)
+            self.rids.alloc(job)
+            job.slots = self.pool.assign(job.rid, req)
+            job.granted_chains = len(job.slots) * self.cfg.chains_per_slot
+
+    # ---------------------------------------------------------------- tick
+    def tick(self) -> None:
+        """Admit, then advance every active slot by one temperature level."""
+        self._admit()
+        if not self.rids.jobs:
+            self.tick_count += 1
+            return
+
+        groups: Dict[Tuple[int, int, int], List[ActiveJob]] = defaultdict(list)
+        for job in self.rids.jobs.values():
+            groups[(job.req.kid, job.req.dim, job.req.N)].append(job)
+
+        for (kid, dim, n_steps), jobs in sorted(groups.items()):
+            self._dispatch_group(kid, dim, n_steps, jobs)
+            self.group_launches += 1
+            for job in jobs:
+                self.sweeps_done += len(job.slots)
+                job.level += 1
+                job.steps_done += n_steps
+                job.evals += n_steps * job.granted_chains
+                job.T *= job.req.rho
+                reason = self._finish_reason(job)
+                if reason is not None:
+                    self._retire(job, reason)
+        self.tick_count += 1
+
+    def _dispatch_group(self, kid: int, dim: int, n_steps: int,
+                        jobs: List[ActiveJob]) -> None:
+        """Pack the group's slots, run one device program, scatter back."""
+        cps = self.cfg.chains_per_slot
+        slot_list: List[Tuple[int, ActiveJob]] = [
+            (s, job) for job in jobs for s in job.slots]
+        n_blocks = len(slot_list)
+        # Pad to a power of two of blocks so the number of compiled
+        # signatures per (kid, dim, N) is O(log n_slots), not O(n_slots).
+        n_padded = 1
+        while n_padded < n_blocks:
+            n_padded *= 2
+
+        x = np.empty((n_padded * cps, dim), np.float32)
+        T_blk = np.empty((n_padded,), np.float32)
+        seed_blk = np.empty((n_padded,), np.uint32)
+        step0_blk = np.empty((n_padded,), np.uint32)
+        base_blk = np.empty((n_padded,), np.uint32)
+        seg = np.empty((n_padded * cps,), np.int32)
+        adopt = np.empty((n_padded * cps,), bool)
+        for b, (s, job) in enumerate(slot_list):
+            x[b * cps:(b + 1) * cps] = self.pool.get_block(s)
+            T_blk[b] = job.T
+            seed_blk[b] = np.uint32(job.req.seed)
+            step0_blk[b] = np.uint32(job.steps_done)
+            base_blk[b] = self.pool.chain_base[s]
+            seg[b * cps:(b + 1) * cps] = job.rid
+            adopt[b * cps:(b + 1) * cps] = job.req.exchange == "sync"
+        # Dummy pad blocks: replicate block 0, claim the reserved segment
+        # n_slots, never adopt. They cost lanes, not correctness.
+        for b in range(n_blocks, n_padded):
+            x[b * cps:(b + 1) * cps] = x[:cps]
+            T_blk[b] = T_blk[0]
+            seed_blk[b] = seed_blk[0]
+            step0_blk[b] = step0_blk[0]
+            base_blk[b] = base_blk[0]
+            seg[b * cps:(b + 1) * cps] = self.cfg.n_slots
+            adopt[b * cps:(b + 1) * cps] = False
+
+        x2, fx2, xb, fb = _group_tick(
+            jnp.asarray(x), jnp.asarray(T_blk), jnp.asarray(seed_blk),
+            jnp.asarray(step0_blk), jnp.asarray(base_blk), jnp.asarray(seg),
+            jnp.asarray(adopt), kid=kid, n_steps=n_steps, blk=cps,
+            variant=self.cfg.variant, use_pallas=self._use_pallas,
+            interpret=self.cfg.interpret,
+            num_segments=self.cfg.n_slots + 1)
+        x2 = np.asarray(x2)
+        xb = np.asarray(xb)
+        fb = np.asarray(fb)
+
+        for b, (s, job) in enumerate(slot_list):
+            # Copy: a bare slice would alias (and pin) the whole padded buffer.
+            self.pool.set_block(s, x2[b * cps:(b + 1) * cps].copy())
+        for job in jobs:
+            f = float(fb[job.rid])
+            if f < job.best_f:
+                job.best_f = f
+                job.best_x = xb[job.rid].copy()
+
+    def _finish_reason(self, job: ActiveJob) -> Optional[str]:
+        req = job.req
+        if (req.target_error is not None
+                and job.best_f <= F_OPT[req.kid] + req.target_error):
+            return "target"
+        if req.max_evals is not None and job.evals >= req.max_evals:
+            return "budget"
+        if job.level >= req.n_levels:
+            return "ladder"
+        return None
+
+    def _retire(self, job: ActiveJob, reason: str) -> None:
+        self.results.append(RequestResult(
+            req_id=job.req.req_id, objective=job.req.objective,
+            dim=job.req.dim, x_best=job.best_x, f_best=job.best_f,
+            levels_run=job.level, n_evals=job.evals,
+            submit_tick=job.submit_tick, start_tick=job.start_tick,
+            finish_tick=self.tick_count, finish_reason=reason))
+        self.pool.release(job.rid)
+        self.rids.free(job.rid)
+
+    # ----------------------------------------------------------------- run
+    def run(self, max_ticks: Optional[int] = None) -> List[RequestResult]:
+        """Drive ticks until queue and pool drain (or ``max_ticks``)."""
+        t0 = time.time()
+        while not self.done:
+            if max_ticks is not None and self.tick_count >= max_ticks:
+                break
+            self.tick()
+        self.wall_s = time.time() - t0
+        return self.results
+
+    def stats(self) -> dict:
+        wall = getattr(self, "wall_s", float("nan"))
+        ticks = max(self.tick_count, 1)
+        evals = sum(r.n_evals for r in self.results)
+        per_s = lambda v: v / wall if wall and wall > 0 else 0.0
+        return {
+            "ticks": self.tick_count,
+            "group_launches": self.group_launches,
+            "completed": len(self.results),
+            "sweeps": self.sweeps_done,
+            "occupancy": self.sweeps_done / (ticks * self.cfg.n_slots),
+            "wall_s": wall,
+            "requests_per_s": per_s(len(self.results)),
+            "sweeps_per_s": per_s(self.sweeps_done),
+            "chain_steps_per_s": per_s(evals),
+        }
+
+
+def run_standalone(req: SARequest, cfg: EngineConfig) -> RequestResult:
+    """Serve ``req`` alone on a dedicated pool — the per-tenant baseline.
+
+    Placement-invariant RNG + segmented exchange make the packed engine
+    produce the *same* trajectory as this single-tenant run (bit-exact
+    champions for identical seeds); tests assert it, serve_sa --check
+    reports it.
+    """
+    alone = SAServeEngine(dataclasses.replace(
+        cfg, n_slots=req.slots_needed(cfg.chains_per_slot)))
+    alone.submit(req)
+    return alone.run()[0]

@@ -1,0 +1,92 @@
+"""Request/result schema for the multi-tenant SA serving engine.
+
+An :class:`SARequest` is one tenant's optimization job: which registry
+objective to minimize, at what dimensionality, with how many parallel
+chains, under which cooling schedule, and until which stopping condition.
+Heterogeneous requests are co-scheduled on one device program by the
+continuous-batching engine (engine.py); nothing here touches the device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.kernels import objective_math as om
+
+#: Objectives servable by the engine: the Pallas kernel registry.
+SERVABLE = tuple(sorted(om.KID_BY_NAME))
+
+
+@dataclasses.dataclass(frozen=True)
+class SARequest:
+    """One annealing job submitted to the serving engine.
+
+    The chain budget is rounded *up* to whole slots (blocks of
+    ``chains_per_slot`` chains) at admission; a request may span several
+    slots, which then exchange among themselves — never across tenants.
+    """
+
+    req_id: int
+    objective: str              # registry name: schwefel|rastrigin|ackley|griewank
+    dim: int                    # problem dimensionality
+    n_chains: int = 64          # chain budget (rounded up to slot granularity)
+    T0: float = 100.0           # initial temperature
+    T_min: float = 0.1          # stop temperature (ladder end)
+    rho: float = 0.95           # geometric cooling factor
+    N: int = 50                 # Metropolis steps per temperature level
+    seed: int = 0               # RNG stream seed (placement-invariant)
+    priority: int = 0           # higher = served sooner (aged for fairness)
+    exchange: str = "sync"      # 'sync' (paper V2) | 'async' (paper V1)
+    target_error: Optional[float] = None  # stop early once best_f - f_opt <= this
+    max_evals: Optional[int] = None       # objective-evaluation budget cap
+
+    def __post_init__(self):
+        if self.objective not in om.KID_BY_NAME:
+            raise ValueError(
+                f"objective {self.objective!r} not servable; one of {SERVABLE}")
+        if self.dim < 1 or self.n_chains < 1 or self.N < 1:
+            raise ValueError("dim, n_chains and N must be positive")
+        if not (0.0 < self.rho < 1.0) or self.T_min <= 0 or self.T0 <= self.T_min:
+            raise ValueError("need T0 > T_min > 0 and 0 < rho < 1")
+        if self.exchange not in ("sync", "async"):
+            raise ValueError("exchange must be 'sync' or 'async'")
+
+    @property
+    def kid(self) -> int:
+        return om.KID_BY_NAME[self.objective]
+
+    @property
+    def n_levels(self) -> int:
+        """Ladder length (the paper's do/while loop)."""
+        return max(1, int(math.ceil(math.log(self.T_min / self.T0)
+                                    / math.log(self.rho))))
+
+    def slots_needed(self, chains_per_slot: int) -> int:
+        return max(1, -(-self.n_chains // chains_per_slot))
+
+    def sample_x0(self, n_chains: int) -> np.ndarray:
+        """Deterministic initial states, independent of slot placement."""
+        lo, hi = om.BOX[self.kid]
+        r = np.random.default_rng(self.seed)
+        return (lo + r.random((n_chains, self.dim), dtype=np.float32)
+                * (hi - lo)).astype(np.float32)
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Terminal record for a served request."""
+
+    req_id: int
+    objective: str
+    dim: int
+    x_best: np.ndarray          # (dim,)
+    f_best: float
+    levels_run: int             # temperature levels actually executed
+    n_evals: int                # objective evaluations spent
+    submit_tick: int            # engine tick at submission
+    start_tick: int             # engine tick at admission (queueing delay)
+    finish_tick: int            # engine tick at completion
+    finish_reason: str          # 'ladder' | 'target' | 'budget'

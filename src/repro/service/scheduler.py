@@ -1,0 +1,87 @@
+"""Admission/packing scheduler for the SA serving engine.
+
+Continuous batching needs two decisions per tick: *which* queued requests to
+admit, and *whether* to hold slots back for a large request that cannot fit
+yet.  The policy here is priority-with-aging plus bounded backfill:
+
+* effective priority = static priority + ``aging`` x ticks queued, so a
+  low-priority request cannot starve forever (the fairness half of
+  Russkov-style replica redistribution: the pool keeps being re-packed as
+  ladders finish at different times);
+* requests are scanned in effective-priority order and admitted greedily
+  while they fit (*backfill*: a small request may overtake a large one that
+  is short on slots, keeping occupancy high);
+* once the head-of-line request has waited more than ``hol_patience`` ticks,
+  backfill past it stops, letting freed slots accumulate until it fits —
+  bounded head-of-line starvation instead of either extreme.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from repro.service.request import SARequest
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    policy: str = "priority"    # 'priority' (aged) | 'fifo'
+    aging: float = 0.05         # priority points per queued tick
+    hol_patience: int = 16      # ticks the head may starve before backfill stops
+
+    def __post_init__(self):
+        if self.policy not in ("priority", "fifo"):
+            raise ValueError("policy must be 'priority' or 'fifo'")
+
+
+class AdmissionScheduler:
+    """FIFO/priority queue with aging and bounded backfill."""
+
+    def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
+        self.cfg = cfg
+        self._queue: List[Tuple[SARequest, int]] = []  # (request, submit_tick)
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    @property
+    def pending(self) -> List[SARequest]:
+        return [r for r, _ in self._queue]
+
+    def submit(self, req: SARequest, tick: int) -> None:
+        self._queue.append((req, tick))
+
+    def effective_priority(self, req: SARequest, submit_tick: int,
+                           tick: int) -> float:
+        return req.priority + self.cfg.aging * (tick - submit_tick)
+
+    def _ordered(self, tick: int) -> List[Tuple[SARequest, int]]:
+        if self.cfg.policy == "fifo":
+            return list(self._queue)
+        # Stable sort: ties broken by submission order (list order).
+        return sorted(self._queue,
+                      key=lambda e: -self.effective_priority(e[0], e[1], tick))
+
+    def admit(self, free_slots: int, chains_per_slot: int,
+              tick: int) -> List[Tuple[SARequest, int]]:
+        """Pick requests to place into ``free_slots`` slots this tick.
+
+        Returns [(request, submit_tick)] in admission order and removes them
+        from the queue.  Never over-commits the pool.
+        """
+        admitted: List[Tuple[SARequest, int]] = []
+        blocked_head = False
+        for entry in self._ordered(tick):
+            req, sub = entry
+            need = req.slots_needed(chains_per_slot)
+            if need <= free_slots and not blocked_head:
+                admitted.append(entry)
+                free_slots -= need
+            elif need > free_slots and not blocked_head:
+                # Head-of-line can't fit. Backfill behind it only while it
+                # has not starved past patience.
+                if tick - sub > self.cfg.hol_patience:
+                    blocked_head = True
+        taken = {id(e) for e in admitted}
+        self._queue = [e for e in self._queue if id(e) not in taken]
+        return admitted

@@ -1,0 +1,122 @@
+"""Slot pool: the annealing analogue of a decode batch's KV-cache slots.
+
+The engine owns a fixed pool of ``n_slots`` chain-block *slots*.  One slot
+holds one block of ``chains_per_slot`` chains — exactly one Pallas kernel
+block — belonging to at most one request at a time.  A request spanning
+multiple slots keeps one slot per contiguous chunk of its chain budget;
+``chain_base`` records the chunk's global chain offset *within the request*
+so RNG streams are invariant to which physical slots the scheduler picked
+(launch/serve.py's SlotCache, with (x, T-ladder position, best) instead of
+KV rows).
+
+All state here is host-side numpy; device arrays are packed per dispatch
+group by the engine each tick.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.service.request import SARequest
+
+
+@dataclasses.dataclass
+class ActiveJob:
+    """Runtime state of an admitted request (one per tenant in residence)."""
+
+    req: SARequest
+    rid: int                    # segment id in [0, n_slots): tenant mask key
+    slots: List[int]            # pool slots held, in chain-offset order
+    level: int = 0              # temperature levels completed
+    T: float = 0.0              # current temperature
+    steps_done: int = 0         # Metropolis steps completed (RNG step cursor)
+    evals: int = 0              # objective evaluations spent
+    best_x: Optional[np.ndarray] = None
+    best_f: float = float("inf")
+    submit_tick: int = 0
+    start_tick: int = 0
+    granted_chains: int = 0     # chain budget rounded up to whole slots
+
+
+class SlotPool:
+    """Fixed pool of chain-block slots with per-slot ownership."""
+
+    def __init__(self, n_slots: int, chains_per_slot: int):
+        if n_slots < 1 or chains_per_slot < 1:
+            raise ValueError("n_slots and chains_per_slot must be positive")
+        self.n_slots = n_slots
+        self.chains_per_slot = chains_per_slot
+        self.owner = np.full((n_slots,), -1, np.int32)       # rid or -1
+        self.chain_base = np.zeros((n_slots,), np.uint32)    # request chain offset
+        self._x: List[Optional[np.ndarray]] = [None] * n_slots
+
+    # ------------------------------------------------------------- queries
+    @property
+    def n_free(self) -> int:
+        return int(np.sum(self.owner < 0))
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - self.n_free
+
+    def free_slots(self) -> List[int]:
+        return [int(s) for s in np.flatnonzero(self.owner < 0)]
+
+    def slots_of(self, rid: int) -> List[int]:
+        return [int(s) for s in np.flatnonzero(self.owner == rid)]
+
+    def get_block(self, slot: int) -> np.ndarray:
+        x = self._x[slot]
+        assert x is not None, f"slot {slot} is empty"
+        return x
+
+    def set_block(self, slot: int, x: np.ndarray) -> None:
+        self._x[slot] = x
+
+    # ---------------------------------------------------------- lifecycle
+    def assign(self, rid: int, req: SARequest) -> List[int]:
+        """Pack ``req`` into free slots; returns the slot list (chain order).
+
+        Splits the request's initial states into ``chains_per_slot`` blocks:
+        slot j of the request holds chains [j*cps, (j+1)*cps) and carries
+        ``chain_base = j*cps`` — the placement-invariant RNG index base.
+        """
+        cps = self.chains_per_slot
+        need = req.slots_needed(cps)
+        free = self.free_slots()
+        if need > len(free):
+            raise RuntimeError(
+                f"request {req.req_id} needs {need} slots, {len(free)} free")
+        chosen = free[:need]
+        x0 = req.sample_x0(need * cps)  # budget rounded up to whole slots
+        for j, s in enumerate(chosen):
+            self.owner[s] = rid
+            self.chain_base[s] = np.uint32(j * cps)
+            self._x[s] = x0[j * cps:(j + 1) * cps]
+        return chosen
+
+    def release(self, rid: int) -> None:
+        for s in self.slots_of(rid):
+            self.owner[s] = -1
+            self.chain_base[s] = 0
+            self._x[s] = None
+
+
+class RidTable:
+    """Recyclable request-id (segment-id) allocator, bounded by pool size."""
+
+    def __init__(self, capacity: int):
+        self._free = list(range(capacity - 1, -1, -1))
+        self.jobs: Dict[int, ActiveJob] = {}
+
+    def alloc(self, job: ActiveJob) -> int:
+        rid = self._free.pop()
+        job.rid = rid
+        self.jobs[rid] = job
+        return rid
+
+    def free(self, rid: int) -> None:
+        del self.jobs[rid]
+        self._free.append(rid)
