@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Docs link checker: every relative markdown link must resolve.
+
+Scans the repo's markdown files for ``[text](target)`` links and verifies
+that each relative target exists on disk (anchors are stripped; absolute
+URLs and mailto are skipped).  Exits non-zero listing every broken link —
+CI runs this so README/docs references cannot rot silently.
+
+  python scripts/check_doc_links.py [root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+#: inline markdown links; deliberately simple — no reference-style links in
+#: this repo, and nested parens in URLs don't occur.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+#: directories never scanned (vendored/derived content)
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
+
+
+def iter_markdown(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if not SKIP_DIRS.intersection(p.name for p in path.parents):
+            yield path
+
+
+def check(root: Path) -> list:
+    broken = []
+    for md in iter_markdown(root):
+        for m in LINK_RE.finditer(md.read_text(encoding="utf-8")):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (md.parent / rel).resolve()
+            if not resolved.exists():
+                broken.append((md.relative_to(root), target))
+    return broken
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    root = Path(argv[0]) if argv else Path(__file__).resolve().parents[1]
+    broken = check(root)
+    if broken:
+        print(f"{len(broken)} broken doc link(s):")
+        for md, target in broken:
+            print(f"  {md}: ({target})")
+        return 1
+    n = sum(1 for _ in iter_markdown(root))
+    print(f"doc links OK across {n} markdown files")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,12 +19,33 @@ Variants
             (DESIGN.md §2); identical proposal/acceptance stream.
 
 Multi-tenant serving (service/engine.py) drives *heterogeneous* chain-blocks
-through one kernel launch: every SMEM control input (temperature, RNG seed,
-step counter, global chain-index base) is a per-block array indexed by
-``program_id``, so each block — one serving *slot* — anneals at its own
-temperature and draws from its own request's random stream regardless of
-which slot it was packed into.  Scalar inputs broadcast to all blocks, which
-keeps the original single-job call signature working unchanged.
+through one kernel launch: every SMEM control input (objective id,
+temperature, RNG seed, step counter, global chain-index base) is a per-block
+array indexed by ``program_id``, so each block — one serving *slot* —
+anneals its own objective at its own temperature and draws from its own
+request's random stream regardless of which slot it was packed into.
+Scalar inputs broadcast to all blocks, which keeps the original single-job
+call signature working unchanged.
+
+Invariants
+----------
+* ``kid`` is a **runtime** input (per-block SMEM int32) whenever it is
+  passed as an array or traced value — the serving engine's path: one
+  compiled program serves every registry objective at a fixed
+  ``(dim, n_steps, blk, variant)``, dispatching inside the kernel with
+  branchless ``jnp.where`` chains (objective_math ``*_rt``).  Growing the
+  objective registry therefore never triggers a recompile — the serving
+  engine's compile-stability guarantee.  The runtime path evaluates all
+  ``N_KIDS`` branches per proposal and selects one; a *concrete Python
+  int* ``kid`` instead compiles the single branch (the pre-runtime
+  specialization — batch/benchmark callers keep 1x objective math, at the
+  old cost of one lowering per objective).
+* Runtime dispatch is bit-exact versus the static-``kid`` lowering: each
+  ``jnp.where`` branch is the identical floating-point expression, so the
+  two paths interleave freely (tests compare them directly).
+* One kernel invocation advances every chain by exactly ``n_steps``
+  proposals at its block's (fixed) temperature — the serving engine's
+  "one tick = one temperature level" contract bottoms out here.
 
 Block shape: ``(blk, dim)``; ``blk`` is a multiple of 8 (sublanes), ``dim``
 pads to the 128-lane VREG width. Chains are fully independent so the grid
@@ -57,14 +78,25 @@ def _step_draws(seed, cidx, step0, i):
     return rng.draws3(seed, cidx, (step0 + i).astype(jnp.uint32))
 
 
-def _sweep_kernel(seed_ref, step0_ref, t_ref, base_ref, x_ref, xo_ref, fo_ref,
-                  *, kid: int, n_steps: int, blk: int, variant: str):
+def _sweep_kernel(kid_ref, seed_ref, step0_ref, t_ref, base_ref, x_ref,
+                  xo_ref, fo_ref, *, kid_static, n_steps: int, blk: int,
+                  variant: str):
     dim = x_ref.shape[-1]
-    lo, hi = om.BOX[kid]
-    lo = np.float32(lo)
-    hi = np.float32(hi)
 
     pid = pl.program_id(0)
+    if kid_static is not None:
+        # Concrete objective: compile the single branch (pre-runtime-dispatch
+        # behavior — batch callers keep 1x objective math per proposal).
+        kid = kid_static
+        lo, hi = om.BOX[kid]
+        lo, hi = np.float32(lo), np.float32(hi)
+        init_acc, combine, term, full_eval = (
+            om.init_acc, om.combine, om.term, om.full_eval)
+    else:
+        kid = kid_ref[pid]      # runtime objective id: scalar per block
+        lo, hi = om.box_rt(kid)
+        init_acc, combine, term, full_eval = (
+            om.init_acc_rt, om.combine_rt, om.term_rt, om.full_eval_rt)
     seed = seed_ref[pid]
     step0 = step0_ref[pid]
     T = t_ref[pid]
@@ -75,8 +107,8 @@ def _sweep_kernel(seed_ref, step0_ref, t_ref, base_ref, x_ref, xo_ref, fo_ref,
     x = x_ref[...]
 
     if variant == "delta":
-        S, logP, sgnP = om.init_acc(kid, x)
-        fx = om.combine(kid, S, logP, sgnP, dim)
+        S, logP, sgnP = init_acc(kid, x)
+        fx = combine(kid, S, logP, sgnP, dim)
 
         def body(i, carry):
             x, fx, S, logP, sgnP = carry
@@ -86,15 +118,15 @@ def _sweep_kernel(seed_ref, step0_ref, t_ref, base_ref, x_ref, xo_ref, fo_ref,
             xi_old = jnp.sum(jnp.where(onehot, x, 0.0), axis=1, keepdims=True)
             newval = lo + uval * (hi - lo)
             df = d.astype(x.dtype)
-            s_old, p_old = om.term(kid, xi_old, df)
-            s_new, p_new = om.term(kid, newval, df)
+            s_old, p_old = term(kid, xi_old, df)
+            s_new, p_new = term(kid, newval, df)
             S1 = S - s_old + s_new
             logP1 = (logP
                      - jnp.log(jnp.maximum(jnp.abs(p_old), 1e-30))
                      + jnp.log(jnp.maximum(jnp.abs(p_new), 1e-30)))
             sg = jnp.where(p_old < 0, -1.0, 1.0) * jnp.where(p_new < 0, -1.0, 1.0)
             sgnP1 = sgnP * sg.astype(sgnP.dtype)
-            f1 = om.combine(kid, S1, logP1, sgnP1, dim)
+            f1 = combine(kid, S1, logP1, sgnP1, dim)
             acc = uacc <= _accept_prob(fx, f1, T)  # (blk, 1)
             x = jnp.where(onehot & acc, newval, x)
             fx = jnp.where(acc, f1, fx)
@@ -105,7 +137,7 @@ def _sweep_kernel(seed_ref, step0_ref, t_ref, base_ref, x_ref, xo_ref, fo_ref,
 
         x, fx, *_ = lax.fori_loop(0, n_steps, body, (x, fx, S, logP, sgnP))
     else:  # full: paper-faithful O(dim) evaluation per step
-        fx = om.full_eval(kid, x, dim)
+        fx = full_eval(kid, x, dim)
 
         def body(i, carry):
             x, fx = carry
@@ -114,7 +146,7 @@ def _sweep_kernel(seed_ref, step0_ref, t_ref, base_ref, x_ref, xo_ref, fo_ref,
             onehot = coords == d
             newval = lo + uval * (hi - lo)
             x1 = jnp.where(onehot, newval, x)
-            f1 = om.full_eval(kid, x1, dim)
+            f1 = full_eval(kid, x1, dim)
             acc = uacc <= _accept_prob(fx, f1, T)
             x = jnp.where(acc, x1, x)
             fx = jnp.where(acc, f1, fx)
@@ -138,7 +170,24 @@ def _per_block(v, n_blocks: int, dtype, name: str):
     return a
 
 
-def metropolis_sweep_pallas(x, T, seed, step0, *, kid: int, n_steps: int,
+def _validate_kid(kid) -> None:
+    """Reject out-of-range objective ids while they are still concrete.
+
+    Runtime dispatch would otherwise fall through the ``jnp.where`` chains
+    to kid 0 and silently anneal Schwefel.  Traced values can't be checked
+    here — inside jit the serving engine's ids are already validated by
+    SARequest, which is the only path that reaches this under a tracer.
+    """
+    if isinstance(kid, jax.core.Tracer):
+        return
+    arr = np.asarray(kid)
+    if arr.size and bool(((arr < 0) | (arr >= om.N_KIDS)).any()):
+        raise ValueError(
+            f"objective id(s) {arr.tolist()} outside the kernel registry "
+            f"[0, {om.N_KIDS})")
+
+
+def metropolis_sweep_pallas(x, T, seed, step0, *, kid, n_steps: int,
                             blk: int = 256, variant: str = "delta",
                             interpret: bool = False, chain_base=None):
     """Run an N-step Metropolis sweep for all chains.
@@ -149,7 +198,10 @@ def metropolis_sweep_pallas(x, T, seed, step0, *, kid: int, n_steps: int,
          (per-serving-slot) temperatures.
       seed, step0: RNG stream coordinates; scalar or per-block arrays, so
          co-scheduled requests keep independent, placement-invariant streams.
-      kid: registry objective id (objective_math.KID_*).
+      kid: registry objective id (objective_math.KID_*) — a **runtime**
+         input: scalar, or (chains//blk,) int32 array for per-block
+         (per-serving-slot) objectives.  Not baked into the compiled
+         program; one lowering serves every registry objective.
       n_steps: Metropolis steps (paper's N).
       blk: chains per kernel block (multiple of 8).
       variant: 'delta' (O(1) updates) or 'full' (paper-faithful).
@@ -162,25 +214,32 @@ def metropolis_sweep_pallas(x, T, seed, step0, *, kid: int, n_steps: int,
     Returns (x_out, f_out): (chains, dim) and (chains,).
     """
     chains, dim = x.shape
+    _validate_kid(kid)
     pad = (-chains) % blk
     if pad:
         if chain_base is not None or any(
-                jnp.ndim(v) and jnp.size(v) > 1 for v in (T, seed, step0)):
+                jnp.ndim(v) and jnp.size(v) > 1 for v in (T, seed, step0, kid)):
             raise ValueError(
                 f"chains={chains} must be a multiple of blk={blk} when "
                 "per-block control arrays are given")
-        # Pad with in-box dummy chains; their streams use indices >= chains
-        # so real chains are untouched. Sliced off below.
-        lo, _ = om.BOX[kid]
+        # Pad with dummy chains at the origin — inside every registry box
+        # (a static om.BOX[kid] lookup is no longer possible: kid may be
+        # traced).  Their streams use indices >= chains so real chains are
+        # untouched. Sliced off below.
         x = jnp.concatenate(
-            [x, jnp.full((pad, dim), lo, x.dtype)], axis=0)
+            [x, jnp.zeros((pad, dim), x.dtype)], axis=0)
     n_chains_p = chains + pad
     grid = (n_chains_p // blk,)
     n_blocks = grid[0]
 
+    # Concrete scalar kid -> compile the single objective branch; array or
+    # traced kid -> runtime SMEM dispatch (one lowering for all objectives).
+    kid_static = int(kid) if isinstance(kid, (int, np.integer)) else None
     kernel = functools.partial(
-        _sweep_kernel, kid=kid, n_steps=n_steps, blk=blk, variant=variant)
+        _sweep_kernel, kid_static=kid_static, n_steps=n_steps, blk=blk,
+        variant=variant)
 
+    kid_arr = _per_block(kid, n_blocks, jnp.int32, "kid")
     seed_arr = _per_block(seed, n_blocks, jnp.uint32, "seed")
     step0_arr = _per_block(step0, n_blocks, jnp.uint32, "step0")
     t_arr = _per_block(T, n_blocks, jnp.float32, "T")
@@ -198,6 +257,7 @@ def metropolis_sweep_pallas(x, T, seed, step0, *, kid: int, n_steps: int,
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((blk, dim), lambda i: (i, 0)),
         ],
         out_specs=[
@@ -209,6 +269,7 @@ def metropolis_sweep_pallas(x, T, seed, step0, *, kid: int, n_steps: int,
             jax.ShapeDtypeStruct((n_chains_p, 1), x.dtype),
         ],
         interpret=interpret,
-        name=f"metropolis_sweep_{variant}_k{kid}",
-    )(seed_arr, step0_arr, t_arr, base_arr, x)
+        name=(f"metropolis_sweep_{variant}" if kid_static is None
+              else f"metropolis_sweep_{variant}_k{kid_static}"),
+    )(kid_arr, seed_arr, step0_arr, t_arr, base_arr, x)
     return x_out[:chains], f_out[:chains, 0]

@@ -7,6 +7,21 @@ Accumulator layout (uniform across objectives, unused slots stay zero):
   S    : (..., 2)  sum accumulators
   logP : (..., 1)  log-magnitude of the product accumulator
   sgnP : (..., 1)  sign (+-1) of the product accumulator
+
+Two dispatch surfaces per primitive:
+
+* static (``full_eval``, ``term``, ``init_acc``, ``combine``, ``BOX``) —
+  ``kid`` is a Python int, one branch is traced.  Compile-time specialised;
+  adding an objective recompiles every caller.
+* runtime (``*_rt``, ``box_rt``) — ``kid`` is a traced int32 (a scalar read
+  from SMEM in the kernel, a per-chain column in the oracle).  Every
+  registry branch is evaluated and the right one is chosen with a
+  branchless ``jnp.where`` chain, so one compiled program serves all
+  registry objectives and growing the registry never costs a recompile.
+  Each branch computes the *identical* floating-point expression as its
+  static counterpart, so runtime dispatch is bit-exact versus the
+  equivalent static call (select returns the branch value verbatim;
+  garbage in unselected branches is discarded, never propagated).
 """
 from __future__ import annotations
 
@@ -32,6 +47,7 @@ BOX = {
     KID_ACKLEY: (-30.0, 30.0),
     KID_GRIEWANK: (-600.0, 600.0),
 }
+N_KIDS = len(KID_BY_NAME)
 
 _PI = np.float32(np.pi)
 _E = np.float32(np.e)
@@ -101,3 +117,57 @@ def combine(kid: int, S, logP, sgnP, dim: int):
         P = sgnP * jnp.exp(logP)
         return 1.0 + S[..., 0:1] - P
     raise ValueError(f"unknown kernel objective id {kid}")
+
+
+# --------------------------------------------------------------------------
+# Runtime dispatch: kid is a traced int32, not a Python int.  Every branch
+# below is the *static* implementation above, so a select at runtime yields
+# the same bits as compiling the branch in.  Branchless by construction —
+# no lax.switch — which keeps the Pallas TPU lowering trivial (the VPU has
+# no divergence to worry about, only redundant lanes).
+def box_rt(kid, dtype=jnp.float32):
+    """Per-kid box bounds. kid: traced int (any shape). Returns (lo, hi)
+    broadcast to kid's shape."""
+    lo = jnp.full_like(kid, BOX[0][0], dtype=dtype)
+    hi = jnp.full_like(kid, BOX[0][1], dtype=dtype)
+    for k in range(1, N_KIDS):
+        lo = jnp.where(kid == k, np.float32(BOX[k][0]), lo)
+        hi = jnp.where(kid == k, np.float32(BOX[k][1]), hi)
+    return lo, hi
+
+
+def full_eval_rt(kid, x, dim: int):
+    """Runtime-kid full_eval; kid broadcastable to (..., 1)."""
+    f = full_eval(0, x, dim)
+    for k in range(1, N_KIDS):
+        f = jnp.where(kid == k, full_eval(k, x, dim), f)
+    return f
+
+
+def term_rt(kid, xi, d):
+    """Runtime-kid term; kid broadcastable to (..., 1)."""
+    s, p = term(0, xi, d)
+    for k in range(1, N_KIDS):
+        sk, pk = term(k, xi, d)
+        s = jnp.where(kid == k, sk, s)
+        p = jnp.where(kid == k, pk, p)
+    return s, p
+
+
+def init_acc_rt(kid, x):
+    """Runtime-kid init_acc; kid broadcastable to (..., 1)."""
+    S, logP, sgnP = init_acc(0, x)
+    for k in range(1, N_KIDS):
+        Sk, logPk, sgnPk = init_acc(k, x)
+        S = jnp.where(kid == k, Sk, S)
+        logP = jnp.where(kid == k, logPk, logP)
+        sgnP = jnp.where(kid == k, sgnPk, sgnP)
+    return S, logP, sgnP
+
+
+def combine_rt(kid, S, logP, sgnP, dim: int):
+    """Runtime-kid combine; kid broadcastable to (..., 1)."""
+    f = combine(0, S, logP, sgnP, dim)
+    for k in range(1, N_KIDS):
+        f = jnp.where(kid == k, combine(k, S, logP, sgnP, dim), f)
+    return f

@@ -11,6 +11,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import objective_math as om
 from repro.kernels import ref as ref_mod
@@ -27,15 +28,34 @@ def resolve_use_pallas(use_pallas) -> bool:
     return bool(use_pallas)
 
 
-@partial(jax.jit, static_argnames=("kid", "n_steps", "variant", "blk",
-                                   "use_pallas", "interpret"))
-def metropolis_sweep(x, T, seed, step0, *, kid: int, n_steps: int,
+def metropolis_sweep(x, T, seed, step0, *, kid, n_steps: int,
                      variant: str = "delta", blk: int = 256,
                      use_pallas: bool = False, interpret: bool = False):
     """N-step Metropolis sweep over all chains (see metropolis_sweep.py).
 
+    A concrete Python-int ``kid`` compiles the single objective branch
+    (1x objective math, one program per objective — the batch/benchmark
+    path); an array or jnp scalar ``kid`` is a runtime input dispatched
+    inside one compiled program that serves every registry objective.
+    Concrete out-of-registry ids are rejected eagerly — inside jit they
+    would otherwise fall through the runtime dispatch to kid 0.
+
     Returns (x_out (chains, dim), f_out (chains,)).
     """
+    from repro.kernels.metropolis_sweep import _validate_kid
+    _validate_kid(kid)
+    if isinstance(kid, (int, np.integer)):
+        return _metropolis_sweep_static(
+            x, T, seed, step0, kid=int(kid), n_steps=n_steps,
+            variant=variant, blk=blk, use_pallas=use_pallas,
+            interpret=interpret)
+    return _metropolis_sweep(x, T, seed, step0, kid=kid, n_steps=n_steps,
+                             variant=variant, blk=blk, use_pallas=use_pallas,
+                             interpret=interpret)
+
+
+def _metropolis_sweep_impl(x, T, seed, step0, *, kid, n_steps, variant, blk,
+                           use_pallas, interpret):
     if use_pallas:
         chains = x.shape[0]
         eff_blk = min(blk, chains)
@@ -46,31 +66,53 @@ def metropolis_sweep(x, T, seed, step0, *, kid: int, n_steps: int,
         x, T, seed, step0, kid=kid, n_steps=n_steps, variant=variant)
 
 
-@partial(jax.jit, static_argnames=("kid", "n_steps", "blk", "variant",
-                                   "use_pallas", "interpret"))
-def metropolis_sweep_slots(x, T_blocks, seeds, step0s, chain_base, *,
-                           kid: int, n_steps: int, blk: int,
+_metropolis_sweep = partial(jax.jit, static_argnames=(
+    "n_steps", "variant", "blk", "use_pallas",
+    "interpret"))(_metropolis_sweep_impl)
+_metropolis_sweep_static = partial(jax.jit, static_argnames=(
+    "kid", "n_steps", "variant", "blk", "use_pallas",
+    "interpret"))(_metropolis_sweep_impl)
+
+
+def metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, chain_base, *,
+                           n_steps: int, blk: int,
                            variant: str = "delta", use_pallas: bool = False,
                            interpret: bool = False):
     """Heterogeneous-slot Metropolis sweep: one serving slot per chain-block.
 
     ``x`` is ``(n_blocks * blk, dim)`` — the packed states of every active
     slot in a dispatch group — and each per-block control array has one entry
-    per slot: its request's temperature, RNG seed, Metropolis step counter
-    and global chain-index base.  On TPU this is a single Pallas launch with
-    the SMEM arrays indexed by ``program_id``; elsewhere the per-block arrays
-    expand to per-chain columns for the jnp oracle.  Both produce identical
-    streams, so slot placement never changes a request's trajectory.
+    per slot: its request's objective id (``kids``, runtime int32 — mixed
+    objectives co-batch in one launch and never recompile), temperature, RNG
+    seed, Metropolis step counter and global chain-index base.  On TPU this
+    is a single Pallas launch with the SMEM arrays indexed by
+    ``program_id``; elsewhere the per-block arrays expand to per-chain
+    columns for the jnp oracle.  Both produce identical streams, so slot
+    placement never changes a request's trajectory.
 
     Returns (x_out (n_blocks*blk, dim), f_out (n_blocks*blk,)).
     """
+    from repro.kernels.metropolis_sweep import _validate_kid
+    _validate_kid(kids)
+    return _metropolis_sweep_slots(
+        x, kids, T_blocks, seeds, step0s, chain_base, n_steps=n_steps,
+        blk=blk, variant=variant, use_pallas=use_pallas, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("n_steps", "blk", "variant",
+                                   "use_pallas", "interpret"))
+def _metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, chain_base, *,
+                            n_steps: int, blk: int,
+                            variant: str = "delta",
+                            use_pallas: bool = False,
+                            interpret: bool = False):
     chains = x.shape[0]
     if chains % blk:
         raise ValueError(
             f"packed chains={chains} must be a multiple of blk={blk}")
     if use_pallas:
         from repro.kernels.metropolis_sweep import metropolis_sweep_pallas as mk
-        return mk(x, T_blocks, seeds, step0s, kid=kid, n_steps=n_steps,
+        return mk(x, T_blocks, seeds, step0s, kid=kids, n_steps=n_steps,
                   blk=blk, variant=variant, interpret=interpret,
                   chain_base=chain_base)
     n_blocks = chains // blk
@@ -85,7 +127,7 @@ def metropolis_sweep_slots(x, T_blocks, seeds, step0s, chain_base, *,
     cidx = expand(chain_base).astype(jnp.uint32) + lane
     return ref_mod.metropolis_sweep_ref(
         x, expand(T_blocks), expand(seeds), expand(step0s),
-        kid=kid, n_steps=n_steps, variant=variant, cidx=cidx)
+        kid=expand(kids), n_steps=n_steps, variant=variant, cidx=cidx)
 
 
 def kid_for(objective) -> Optional[int]:

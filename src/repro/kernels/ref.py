@@ -8,10 +8,18 @@ chain-block decomposition does not change random streams, so kernel and
 oracle must agree to float tolerance.
 
 For the multi-tenant serving engine the control inputs generalize from
-scalars to per-chain arrays: ``T``, ``seed`` and ``step0`` may each be a
-scalar or a ``(chains,)`` array, and ``cidx`` optionally overrides the
+scalars to per-chain arrays: ``kid``, ``T``, ``seed`` and ``step0`` may each
+be a scalar or a ``(chains,)`` array, and ``cidx`` optionally overrides the
 global chain indices — the per-chain analogue of the kernel's per-block
 SMEM arrays (a serving slot's chains all share one entry).
+
+Like the kernel, the objective id ``kid`` is a *runtime* input when passed
+as an array or traced value (dispatched with branchless ``jnp.where``
+chains — objective_math ``*_rt``), so one compiled oracle serves every
+registry objective at a fixed ``(dim, n_steps, variant)`` and
+mixed-objective batches are legal.  A concrete Python-int ``kid`` compiles
+the single objective branch instead (1x objective math for batch callers;
+both paths are bit-exact against each other by construction).
 """
 from __future__ import annotations
 
@@ -34,13 +42,44 @@ def _col(v, chains: int, dtype):
     return a[:, None]
 
 
-@partial(jax.jit, static_argnames=("kid", "n_steps", "variant"))
-def metropolis_sweep_ref(x, T, seed, step0, *, kid: int, n_steps: int,
+def metropolis_sweep_ref(x, T, seed, step0, *, kid, n_steps: int,
                          variant: str = "delta", cidx=None):
-    chains, dim = x.shape
+    from repro.kernels.metropolis_sweep import _validate_kid
+    _validate_kid(kid)
+    # Concrete scalar kid -> single-branch specialization (1x objective
+    # math, one jit cache entry per objective — the pre-runtime behavior);
+    # array/traced kid -> runtime jnp.where dispatch, one entry total.
+    if isinstance(kid, (int, np.integer)):
+        return _metropolis_sweep_ref_static(
+            x, T, seed, step0, kid=int(kid), n_steps=n_steps,
+            variant=variant, cidx=cidx)
+    return _metropolis_sweep_ref(x, T, seed, step0, kid=kid, n_steps=n_steps,
+                                 variant=variant, cidx=cidx)
+
+
+@partial(jax.jit, static_argnames=("kid", "n_steps", "variant"))
+def _metropolis_sweep_ref_static(x, T, seed, step0, *, kid: int,
+                                 n_steps: int, variant: str = "delta",
+                                 cidx=None):
     lo, hi = om.BOX[kid]
-    lo = np.float32(lo)
-    hi = np.float32(hi)
+    return _sweep_ref_body(x, T, seed, step0, kid, np.float32(lo),
+                           np.float32(hi), om.init_acc, om.combine, om.term,
+                           om.full_eval, n_steps, variant, cidx)
+
+
+@partial(jax.jit, static_argnames=("n_steps", "variant"))
+def _metropolis_sweep_ref(x, T, seed, step0, *, kid, n_steps: int,
+                          variant: str = "delta", cidx=None):
+    kid = _col(kid, x.shape[0], jnp.int32)
+    lo, hi = om.box_rt(kid, dtype=x.dtype)  # (chains, 1) box bounds
+    return _sweep_ref_body(x, T, seed, step0, kid, lo, hi, om.init_acc_rt,
+                           om.combine_rt, om.term_rt, om.full_eval_rt,
+                           n_steps, variant, cidx)
+
+
+def _sweep_ref_body(x, T, seed, step0, kid, lo, hi, init_acc, combine, term,
+                    full_eval, n_steps, variant, cidx):
+    chains, dim = x.shape
     if cidx is None:
         cidx = jnp.arange(chains, dtype=jnp.uint32)[:, None]  # (chains, 1)
     else:
@@ -51,8 +90,8 @@ def metropolis_sweep_ref(x, T, seed, step0, *, kid: int, n_steps: int,
     T = _col(T, chains, x.dtype)
 
     if variant == "delta":
-        S, logP, sgnP = om.init_acc(kid, x)
-        fx = om.combine(kid, S, logP, sgnP, dim)
+        S, logP, sgnP = init_acc(kid, x)
+        fx = combine(kid, S, logP, sgnP, dim)
 
         def body(i, carry):
             x, fx, S, logP, sgnP = carry
@@ -62,15 +101,15 @@ def metropolis_sweep_ref(x, T, seed, step0, *, kid: int, n_steps: int,
             xi_old = jnp.sum(jnp.where(onehot, x, 0.0), axis=1, keepdims=True)
             newval = lo + uval * (hi - lo)
             df = d.astype(x.dtype)
-            s_old, p_old = om.term(kid, xi_old, df)
-            s_new, p_new = om.term(kid, newval, df)
+            s_old, p_old = term(kid, xi_old, df)
+            s_new, p_new = term(kid, newval, df)
             S1 = S - s_old + s_new
             logP1 = (logP
                      - jnp.log(jnp.maximum(jnp.abs(p_old), 1e-30))
                      + jnp.log(jnp.maximum(jnp.abs(p_new), 1e-30)))
             sg = jnp.where(p_old < 0, -1.0, 1.0) * jnp.where(p_new < 0, -1.0, 1.0)
             sgnP1 = sgnP * sg.astype(sgnP.dtype)
-            f1 = om.combine(kid, S1, logP1, sgnP1, dim)
+            f1 = combine(kid, S1, logP1, sgnP1, dim)
             acc = uacc <= jnp.exp(jnp.clip(-(f1 - fx) / T, -80.0, 80.0))
             x = jnp.where(onehot & acc, newval, x)
             fx = jnp.where(acc, f1, fx)
@@ -81,7 +120,7 @@ def metropolis_sweep_ref(x, T, seed, step0, *, kid: int, n_steps: int,
 
         x, fx, *_ = lax.fori_loop(0, n_steps, body, (x, fx, S, logP, sgnP))
     else:
-        fx = om.full_eval(kid, x, dim)
+        fx = full_eval(kid, x, dim)
 
         def body(i, carry):
             x, fx = carry
@@ -90,7 +129,7 @@ def metropolis_sweep_ref(x, T, seed, step0, *, kid: int, n_steps: int,
             onehot = coords == d
             newval = lo + uval * (hi - lo)
             x1 = jnp.where(onehot, newval, x)
-            f1 = om.full_eval(kid, x1, dim)
+            f1 = full_eval(kid, x1, dim)
             acc = uacc <= jnp.exp(jnp.clip(-(f1 - fx) / T, -80.0, 80.0))
             x = jnp.where(acc, x1, x)
             fx = jnp.where(acc, f1, fx)

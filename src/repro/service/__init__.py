@@ -9,13 +9,18 @@ a request's ladder (or budget, or accuracy target) completes.
 
 Layers
 ------
-``request.py``   : :class:`SARequest` / :class:`RequestResult` schema.
+``request.py``   : :class:`SARequest` / :class:`RequestResult` schema,
+                   lifecycle timestamps + derived latencies.
 ``slots.py``     : the slot pool — per-slot chain state + ownership.
 ``scheduler.py`` : priority-with-aging admission, bounded backfill.
-``engine.py``    : the continuous-batching tick loop; per-slot temperature
-                   threaded to the Pallas kernel, champion exchange masked
-                   per request (tenant isolation).
-``serve_sa.py``  : CLI driver + synthetic heterogeneous load.
+``arrivals.py``  : open-loop arrival processes (seeded Poisson / trace /
+                   batch) + latency percentile summaries.
+``engine.py``    : the continuous-batching tick loop; per-slot objective id
+                   (runtime — no recompile per objective), temperature,
+                   seed and step cursor threaded to the Pallas kernel,
+                   champion exchange masked per request (tenant isolation).
+``serve_sa.py``  : CLI driver + synthetic heterogeneous load, closed- or
+                   open-loop (``--arrivals poisson --rate ...``).
 
 Usage::
 
@@ -33,6 +38,7 @@ Or from the shell::
 
     PYTHONPATH=src python -m repro.service.serve_sa --requests 32 --slots 8
 """
+from repro.service.arrivals import ArrivalProcess, latency_summary
 from repro.service.engine import (EngineConfig, SAServeEngine, F_OPT,
                                   run_standalone)
 from repro.service.request import RequestResult, SARequest, SERVABLE
@@ -43,4 +49,5 @@ __all__ = [
     "EngineConfig", "SAServeEngine", "run_standalone", "F_OPT",
     "SARequest", "RequestResult", "SERVABLE",
     "AdmissionScheduler", "SchedulerConfig", "SlotPool", "ActiveJob",
+    "ArrivalProcess", "latency_summary",
 ]

@@ -1,0 +1,126 @@
+"""Arrival processes for open-loop serving (the streaming frontend).
+
+The PR-1 engine was *closed-loop*: the whole request mix was enqueued up
+front, so queueing delay only measured pool contention.  Open-loop serving
+offers requests on a timeline instead — the load generator does not wait
+for the system — which is how serving systems are actually benchmarked
+(and how Russkov et al.'s replica-redistribution setting measures admission
+latency under live load).
+
+Time is measured in **engine ticks**: one tick = one temperature level for
+every active slot, the engine's natural clock.  Arrival timestamps may be
+fractional; a request with arrival time ``t`` becomes visible to the
+scheduler at the first tick ``>= t``.  Everything here is host-side numpy
+and deterministic under a fixed seed, so latency distributions are
+reproducible bit-for-bit — tests assert on them.
+
+Three constructors:
+
+* :meth:`ArrivalProcess.poisson` — exponential inter-arrival gaps at
+  ``rate`` requests/tick (the M/G/c-style offered load).
+* :meth:`ArrivalProcess.trace`  — explicit timestamps (replay a recorded
+  trace).
+* :meth:`ArrivalProcess.batch`  — everything at t=0 (the closed-loop
+  special case; ``engine.run`` is equivalent).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.service.request import RequestResult, SARequest
+
+
+class ArrivalProcess:
+    """A time-ordered stream of ``(arrival_time, SARequest)`` pairs."""
+
+    def __init__(self, requests: Sequence[SARequest],
+                 times: Sequence[float]):
+        if len(requests) != len(times):
+            raise ValueError(
+                f"{len(requests)} requests vs {len(times)} arrival times")
+        order = np.argsort(np.asarray(times, np.float64), kind="stable")
+        self._items: List[Tuple[float, SARequest]] = [
+            (float(times[i]), requests[i]) for i in order]
+        self._next = 0
+
+    # ------------------------------------------------------------- factories
+    @classmethod
+    def poisson(cls, requests: Sequence[SARequest], rate: float,
+                seed: int = 0) -> "ArrivalProcess":
+        """Seeded Poisson arrivals at ``rate`` requests per engine tick."""
+        if rate <= 0:
+            raise ValueError(f"rate must be positive, got {rate}")
+        rng = np.random.default_rng(seed)
+        gaps = rng.exponential(1.0 / rate, size=len(requests))
+        return cls(requests, np.cumsum(gaps))
+
+    @classmethod
+    def trace(cls, requests: Sequence[SARequest],
+              times: Iterable[float]) -> "ArrivalProcess":
+        """Replay explicit arrival timestamps (ticks)."""
+        return cls(requests, list(times))
+
+    @classmethod
+    def batch(cls, requests: Sequence[SARequest]) -> "ArrivalProcess":
+        """All requests offered at t=0 — the closed-loop special case."""
+        return cls(requests, [0.0] * len(requests))
+
+    # --------------------------------------------------------------- queries
+    def __len__(self) -> int:
+        return len(self._items)
+
+    @property
+    def exhausted(self) -> bool:
+        return self._next >= len(self._items)
+
+    @property
+    def next_time(self) -> float:
+        """Arrival time of the next undelivered request (inf if none)."""
+        if self.exhausted:
+            return float("inf")
+        return self._items[self._next][0]
+
+    def due(self, now: float) -> List[Tuple[float, SARequest]]:
+        """Pop every request with ``arrival_time <= now`` (time order)."""
+        out: List[Tuple[float, SARequest]] = []
+        while not self.exhausted and self._items[self._next][0] <= now:
+            out.append(self._items[self._next])
+            self._next += 1
+        return out
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """np.percentile with an empty-input guard (returns nan)."""
+    arr = np.asarray([v for v in values if np.isfinite(v)], np.float64)
+    return float(np.percentile(arr, q)) if arr.size else float("nan")
+
+
+def latency_summary(results: Sequence[RequestResult],
+                    ticks: int = 0) -> Dict[str, float]:
+    """Aggregate open-loop latency metrics over completed requests.
+
+    Tick-clock percentiles (p50/p99 queueing delay, time-to-first-tick,
+    end-to-end latency) are deterministic under a fixed arrival seed;
+    goodput is completed requests per tick.  Wall-clock medians ride along
+    for operators (nan when requests were submitted without wall stamps).
+    """
+    qd = [r.queue_delay_ticks for r in results]
+    tt = [r.ttft_ticks for r in results]
+    lat = [r.latency_ticks for r in results]
+    return {
+        "completed": len(results),
+        "queue_delay_p50": percentile(qd, 50),
+        "queue_delay_p99": percentile(qd, 99),
+        "ttft_p50": percentile(tt, 50),
+        "ttft_p99": percentile(tt, 99),
+        "latency_p50": percentile(lat, 50),
+        "latency_p99": percentile(lat, 99),
+        "goodput_req_per_tick": (len(results) / ticks) if ticks else
+        float("nan"),
+        "queue_delay_wall_p50_s": percentile(
+            [r.queue_delay_wall_s for r in results], 50),
+        "latency_wall_p50_s": percentile(
+            [r.latency_wall_s for r in results], 50),
+    }

@@ -12,19 +12,34 @@ The annealing analogue of a vLLM/LightLLM decode loop (launch/serve.py):
   slots *immediately* and the next queued request takes them — no tail
   latency from stragglers sharing the batch.
 
-Heterogeneity is handled in two layers.  Per-slot *temperature, RNG seed,
-step cursor and chain base* are runtime arrays threaded down to the kernel
-(one SMEM entry per block, indexed by ``program_id``), so they never cause
-recompilation.  Per-slot *objective id, dimensionality and sweep length*
-are compile-time kernel constants, so active slots are grouped by
-``(kid, dim, N)`` each tick and dispatched as one device program per group
-(groups are padded to power-of-two block counts to bound the number of
-compiled signatures).  Champion reduces inside a packed group are segmented
-by request id — tenants never exchange states (core/exchange.py).
+Invariants
+----------
+* **One tick = one temperature level** for every active slot; a request's
+  temperature ladder position is exactly its count of ticks in residence.
+* **kid is runtime**: per-slot *objective id, temperature, RNG seed, step
+  cursor and chain base* are runtime arrays threaded down to the kernel
+  (one SMEM entry per block, indexed by ``program_id``) — none of them can
+  cause recompilation.  Only *dimensionality and sweep length* remain
+  compile-time constants, so active slots are grouped by ``(dim, N)`` each
+  tick and dispatched as one device program per group: one compiled sweep
+  program serves every registry objective, and growing ``SERVABLE`` never
+  costs a recompile.  (Groups are additionally padded to power-of-two
+  block counts to bound the number of compiled shapes.)
+* **Tenant isolation**: champion reduces inside a packed group are
+  segmented by request id — tenants never exchange states
+  (core/exchange.py) — and placement-invariant RNG makes a request's
+  trajectory bit-identical to its standalone single-tenant run.
+* **Open-loop serving**: :meth:`SAServeEngine.run_stream` interleaves
+  admission of an :class:`~repro.service.arrivals.ArrivalProcess` (e.g.
+  seeded Poisson) with in-flight progress, stamping per-request lifecycle
+  events (submit / admit / first-tick / complete, in both tick-time and
+  wall-time) from which queueing-delay and time-to-first-tick percentiles
+  are derived (see docs/serving.md).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import defaultdict
 from functools import partial
@@ -62,20 +77,22 @@ class EngineConfig:
         default_factory=SchedulerConfig)
 
 
-@partial(jax.jit, static_argnames=("kid", "n_steps", "blk", "variant",
+@partial(jax.jit, static_argnames=("n_steps", "blk", "variant",
                                    "use_pallas", "interpret", "num_segments"))
-def _group_tick(x, T_blk, seed_blk, step0_blk, base_blk, seg, adopt, *,
-                kid: int, n_steps: int, blk: int, variant: str,
+def _group_tick(x, kid_blk, T_blk, seed_blk, step0_blk, base_blk, seg, adopt,
+                *, n_steps: int, blk: int, variant: str,
                 use_pallas: bool, interpret: bool, num_segments: int):
     """One temperature level for one dispatch group, on device.
 
-    Sweep every block at its own temperature, then a segmented champion
-    reduce: chains adopt *their request's* champion iff their request runs
-    sync exchange (``adopt``); the champion is returned for every segment
-    either way so the host can fold best-so-far.
+    Sweep every block on its own objective (``kid_blk`` is a runtime
+    input — mixed-objective groups share one lowering) at its own
+    temperature, then a segmented champion reduce: chains adopt *their
+    request's* champion iff their request runs sync exchange (``adopt``);
+    the champion is returned for every segment either way so the host can
+    fold best-so-far.
     """
     x, fx = ops.metropolis_sweep_slots(
-        x, T_blk, seed_blk, step0_blk, base_blk, kid=kid, n_steps=n_steps,
+        x, kid_blk, T_blk, seed_blk, step0_blk, base_blk, n_steps=n_steps,
         blk=blk, variant=variant, use_pallas=use_pallas, interpret=interpret)
     return exch.exchange_sync_segmented(x, fx, seg, num_segments,
                                         adopt_mask=adopt)
@@ -99,14 +116,36 @@ class SAServeEngine:
             raise ValueError(
                 f"chains_per_slot={cfg.chains_per_slot} must be a multiple "
                 "of 8 (TPU sublanes) on the Pallas path")
+        self._epoch = time.perf_counter()
+        #: req_id -> (arrival_time in ticks, submit wall time): lifecycle
+        #: info that must survive the queue (the scheduler only keeps the
+        #: submit tick).
+        self._submit_info: Dict[int, Tuple[float, float]] = {}
+
+    def _now(self) -> float:
+        """Wall seconds since engine construction (the engine epoch)."""
+        return time.perf_counter() - self._epoch
 
     # ------------------------------------------------------------ frontend
-    def submit(self, req: SARequest) -> None:
+    def submit(self, req: SARequest, arrival_time: Optional[float] = None
+               ) -> None:
+        """Enqueue ``req``.  ``arrival_time`` (in ticks, may be fractional)
+        is the offered-load timestamp for open-loop runs; it defaults to
+        the submit tick (closed-loop batch submission)."""
         need = req.slots_needed(self.cfg.chains_per_slot)
         if need > self.cfg.n_slots:
             raise ValueError(
                 f"request {req.req_id} needs {need} slots > pool "
                 f"{self.cfg.n_slots}; lower n_chains or grow the pool")
+        if (req.req_id in self._submit_info
+                or any(j.req.req_id == req.req_id
+                       for j in self.rids.jobs.values())):
+            raise ValueError(
+                f"request id {req.req_id} is already queued or in flight; "
+                "req_ids must be unique among live requests")
+        self._submit_info[req.req_id] = (
+            float(self.tick_count if arrival_time is None else arrival_time),
+            self._now())
         self.scheduler.submit(req, self.tick_count)
 
     @property
@@ -122,9 +161,14 @@ class SAServeEngine:
         entries = self.scheduler.admit(
             self.pool.n_free, self.cfg.chains_per_slot, self.tick_count)
         for req, submit_tick in entries:
+            arrival, submit_wall = self._submit_info.pop(
+                req.req_id, (float(submit_tick), float("nan")))
             job = ActiveJob(req=req, rid=-1, slots=[], T=req.T0,
                             submit_tick=submit_tick,
-                            start_tick=self.tick_count)
+                            start_tick=self.tick_count,
+                            arrival_time=arrival,
+                            submit_wall=submit_wall,
+                            admit_wall=self._now())
             self.rids.alloc(job)
             job.slots = self.pool.assign(job.rid, req)
             job.granted_chains = len(job.slots) * self.cfg.chains_per_slot
@@ -137,14 +181,20 @@ class SAServeEngine:
             self.tick_count += 1
             return
 
-        groups: Dict[Tuple[int, int, int], List[ActiveJob]] = defaultdict(list)
+        # Dispatch groups are keyed by shape alone — (dim, N) — because the
+        # objective id is a runtime kernel input; mixed-objective groups
+        # share one compiled program.
+        groups: Dict[Tuple[int, int], List[ActiveJob]] = defaultdict(list)
         for job in self.rids.jobs.values():
-            groups[(job.req.kid, job.req.dim, job.req.N)].append(job)
+            groups[(job.req.dim, job.req.N)].append(job)
 
-        for (kid, dim, n_steps), jobs in sorted(groups.items()):
-            self._dispatch_group(kid, dim, n_steps, jobs)
+        for (dim, n_steps), jobs in sorted(groups.items()):
+            self._dispatch_group(dim, n_steps, jobs)
             self.group_launches += 1
             for job in jobs:
+                if job.first_tick < 0:
+                    job.first_tick = self.tick_count
+                    job.first_tick_wall = self._now()
                 self.sweeps_done += len(job.slots)
                 job.level += 1
                 job.steps_done += n_steps
@@ -155,7 +205,7 @@ class SAServeEngine:
                     self._retire(job, reason)
         self.tick_count += 1
 
-    def _dispatch_group(self, kid: int, dim: int, n_steps: int,
+    def _dispatch_group(self, dim: int, n_steps: int,
                         jobs: List[ActiveJob]) -> None:
         """Pack the group's slots, run one device program, scatter back."""
         cps = self.cfg.chains_per_slot
@@ -163,12 +213,13 @@ class SAServeEngine:
             (s, job) for job in jobs for s in job.slots]
         n_blocks = len(slot_list)
         # Pad to a power of two of blocks so the number of compiled
-        # signatures per (kid, dim, N) is O(log n_slots), not O(n_slots).
+        # signatures per (dim, N) is O(log n_slots), not O(n_slots).
         n_padded = 1
         while n_padded < n_blocks:
             n_padded *= 2
 
         x = np.empty((n_padded * cps, dim), np.float32)
+        kid_blk = np.empty((n_padded,), np.int32)
         T_blk = np.empty((n_padded,), np.float32)
         seed_blk = np.empty((n_padded,), np.uint32)
         step0_blk = np.empty((n_padded,), np.uint32)
@@ -177,6 +228,7 @@ class SAServeEngine:
         adopt = np.empty((n_padded * cps,), bool)
         for b, (s, job) in enumerate(slot_list):
             x[b * cps:(b + 1) * cps] = self.pool.get_block(s)
+            kid_blk[b] = np.int32(job.req.kid)
             T_blk[b] = job.T
             seed_blk[b] = np.uint32(job.req.seed)
             step0_blk[b] = np.uint32(job.steps_done)
@@ -187,6 +239,7 @@ class SAServeEngine:
         # n_slots, never adopt. They cost lanes, not correctness.
         for b in range(n_blocks, n_padded):
             x[b * cps:(b + 1) * cps] = x[:cps]
+            kid_blk[b] = kid_blk[0]
             T_blk[b] = T_blk[0]
             seed_blk[b] = seed_blk[0]
             step0_blk[b] = step0_blk[0]
@@ -195,9 +248,10 @@ class SAServeEngine:
             adopt[b * cps:(b + 1) * cps] = False
 
         x2, fx2, xb, fb = _group_tick(
-            jnp.asarray(x), jnp.asarray(T_blk), jnp.asarray(seed_blk),
-            jnp.asarray(step0_blk), jnp.asarray(base_blk), jnp.asarray(seg),
-            jnp.asarray(adopt), kid=kid, n_steps=n_steps, blk=cps,
+            jnp.asarray(x), jnp.asarray(kid_blk), jnp.asarray(T_blk),
+            jnp.asarray(seed_blk), jnp.asarray(step0_blk),
+            jnp.asarray(base_blk), jnp.asarray(seg),
+            jnp.asarray(adopt), n_steps=n_steps, blk=cps,
             variant=self.cfg.variant, use_pallas=self._use_pallas,
             interpret=self.cfg.interpret,
             num_segments=self.cfg.n_slots + 1)
@@ -231,17 +285,60 @@ class SAServeEngine:
             dim=job.req.dim, x_best=job.best_x, f_best=job.best_f,
             levels_run=job.level, n_evals=job.evals,
             submit_tick=job.submit_tick, start_tick=job.start_tick,
-            finish_tick=self.tick_count, finish_reason=reason))
+            finish_tick=self.tick_count, finish_reason=reason,
+            arrival_time=job.arrival_time, first_tick=job.first_tick,
+            submit_wall=job.submit_wall, admit_wall=job.admit_wall,
+            first_tick_wall=job.first_tick_wall, finish_wall=self._now()))
         self.pool.release(job.rid)
         self.rids.free(job.rid)
 
     # ----------------------------------------------------------------- run
     def run(self, max_ticks: Optional[int] = None) -> List[RequestResult]:
-        """Drive ticks until queue and pool drain (or ``max_ticks``)."""
+        """Drive ticks until queue and pool drain (or ``max_ticks``).
+
+        Closed-loop: serves whatever was already :meth:`submit`-ted — the
+        degenerate open-loop run with an empty (exhausted) arrival stream.
+        """
+        from repro.service.arrivals import ArrivalProcess
+        return self.run_stream(ArrivalProcess.batch([]), max_ticks=max_ticks)
+
+    def run_stream(self, arrivals, max_ticks: Optional[int] = None
+                   ) -> List[RequestResult]:
+        """Open-loop serving: admit from an arrival process while ticking.
+
+        ``arrivals`` is an :class:`~repro.service.arrivals.ArrivalProcess`
+        (or anything with ``due(now)`` / ``exhausted``).  Each tick first
+        submits every request whose arrival time has come due, then
+        advances all in-flight work one temperature level; idle ticks (no
+        active jobs, next arrival in the future) still advance the clock,
+        so arrival timestamps stay on the tick axis.  Per-request
+        lifecycle events (submit/admit/first-tick/complete) are stamped in
+        both tick-time (deterministic under a fixed arrival seed) and
+        wall-time.
+        """
         t0 = time.time()
-        while not self.done:
+        while True:
             if max_ticks is not None and self.tick_count >= max_ticks:
                 break
+            for t_arr, req in arrivals.due(self.tick_count):
+                self.submit(req, arrival_time=t_arr)
+            if self.done:
+                if arrivals.exhausted:
+                    break
+                # Idle: fast-forward the clock to the next arrival instead
+                # of spinning empty ticks (low offered load would otherwise
+                # execute one no-op tick per time unit).  ceil() lands on
+                # the first tick >= next_time — identical tick-axis
+                # semantics to ticking through, since due(t) is <=-t.
+                # Sources without next_time just tick through idle time.
+                nxt = getattr(arrivals, "next_time", None)
+                if nxt is not None and math.isfinite(nxt):
+                    jump = int(math.ceil(nxt))
+                    if max_ticks is not None:
+                        jump = min(jump, max_ticks)
+                    if jump > self.tick_count:
+                        self.tick_count = jump
+                        continue
             self.tick()
         self.wall_s = time.time() - t0
         return self.results

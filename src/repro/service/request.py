@@ -77,7 +77,19 @@ class SARequest:
 
 @dataclasses.dataclass
 class RequestResult:
-    """Terminal record for a served request."""
+    """Terminal record for a served request.
+
+    Lifecycle timestamps come in two clocks:
+
+    * **tick-time** (``arrival_time`` .. ``finish_tick``): deterministic
+      under a fixed arrival seed — what latency *tests* assert on;
+    * **wall-time** (``*_wall``, seconds since the engine epoch): what a
+      deployment actually observes — surfaced by ``serve_sa --json``.
+
+    Derived latencies (``queue_delay_ticks`` etc.) are properties so the
+    definitions live in exactly one place; see docs/serving.md for the
+    event diagram.
+    """
 
     req_id: int
     objective: str
@@ -90,3 +102,66 @@ class RequestResult:
     start_tick: int             # engine tick at admission (queueing delay)
     finish_tick: int            # engine tick at completion
     finish_reason: str          # 'ladder' | 'target' | 'budget'
+    # ---- lifecycle events (streaming/open-loop serving) ----
+    arrival_time: float = 0.0   # offered-load timestamp, in (fractional) ticks
+    first_tick: int = -1        # tick of the first sweep (== start_tick today)
+    submit_wall: float = float("nan")      # wall s since engine epoch
+    admit_wall: float = float("nan")
+    first_tick_wall: float = float("nan")
+    finish_wall: float = float("nan")
+
+    # ---- derived latencies: tick clock (deterministic) ----
+    @property
+    def queue_delay_ticks(self) -> float:
+        """Arrival -> admission, in ticks."""
+        return self.start_tick - self.arrival_time
+
+    @property
+    def ttft_ticks(self) -> float:
+        """Arrival -> end of the first temperature level, in ticks
+        (time-to-first-tick: first visible annealing progress)."""
+        return self.first_tick + 1 - self.arrival_time
+
+    @property
+    def latency_ticks(self) -> float:
+        """Arrival -> end of the completing temperature level, in ticks.
+
+        Same end-of-tick convention as ``ttft_ticks`` (progress at tick t
+        is visible at t+1), so latency >= ttft always holds — a request
+        finishing on its first tick has latency == ttft.
+        """
+        return self.finish_tick + 1 - self.arrival_time
+
+    # ---- derived latencies: wall clock ----
+    @property
+    def queue_delay_wall_s(self) -> float:
+        return self.admit_wall - self.submit_wall
+
+    @property
+    def ttft_wall_s(self) -> float:
+        return self.first_tick_wall - self.submit_wall
+
+    @property
+    def latency_wall_s(self) -> float:
+        return self.finish_wall - self.submit_wall
+
+    def to_dict(self, include_x: bool = False) -> dict:
+        """JSON-ready record (``serve_sa --json``)."""
+        d = {
+            "req_id": self.req_id, "objective": self.objective,
+            "dim": self.dim, "f_best": float(self.f_best),
+            "levels_run": self.levels_run, "n_evals": self.n_evals,
+            "finish_reason": self.finish_reason,
+            "arrival_time": self.arrival_time,
+            "submit_tick": self.submit_tick, "start_tick": self.start_tick,
+            "first_tick": self.first_tick, "finish_tick": self.finish_tick,
+            "queue_delay_ticks": self.queue_delay_ticks,
+            "ttft_ticks": self.ttft_ticks,
+            "latency_ticks": self.latency_ticks,
+            "queue_delay_wall_s": self.queue_delay_wall_s,
+            "ttft_wall_s": self.ttft_wall_s,
+            "latency_wall_s": self.latency_wall_s,
+        }
+        if include_x:
+            d["x_best"] = np.asarray(self.x_best).tolist()
+        return d

@@ -14,6 +14,22 @@ yet.  The policy here is priority-with-aging plus bounded backfill:
 * once the head-of-line request has waited more than ``hol_patience`` ticks,
   backfill past it stops, letting freed slots accumulate until it fits —
   bounded head-of-line starvation instead of either extreme.
+
+Invariants
+----------
+* The scheduler never over-commits: the sum of ``slots_needed`` over one
+  ``admit()`` batch is <= the ``free_slots`` it was offered.
+* Admission order is deterministic: effective-priority sort is stable with
+  ties broken by submission order, so a fixed (request mix, arrival seed)
+  reproduces the exact same packing — the foundation of the engine's
+  reproducible latency distributions.
+* Scheduling is objective-blind.  Since the kernel dispatches the objective
+  id at runtime, co-batching never constrains *which* requests may share a
+  device program — only shape ``(dim, N)`` does, and that grouping happens
+  downstream in the engine.
+* The scheduler holds only ``(request, submit_tick)``; open-loop arrival
+  timestamps live in the engine's lifecycle records (engine.py), so queue
+  policy and load generation stay decoupled.
 """
 from __future__ import annotations
 

@@ -1,23 +1,31 @@
 """CLI driver for the multi-tenant SA serving engine.
 
 Generates a deterministic heterogeneous request mix (all four registry
-objectives, several dims, several cooling schedules and priorities), serves
-it through the continuous-batching engine, and reports throughput, slot
-occupancy, and — with ``--check`` — every request's champion against its
-standalone single-tenant run (placement invariance makes them bit-exact).
+objectives, several dims, several cooling schedules and priorities) and
+serves it through the continuous-batching engine — either closed-loop
+(the whole queue up front) or open-loop (``--arrivals poisson``: requests
+stream in on a seeded Poisson timeline and queueing delay / time-to-first-
+tick percentiles are reported).  With ``--check`` every request's champion
+is compared against its standalone single-tenant run (placement invariance
+makes them bit-exact); with ``--json`` the full per-request lifecycle
+(tick-time and wall-time latencies) is emitted as one JSON document.
 
 Usage::
 
   PYTHONPATH=src python -m repro.service.serve_sa --requests 32 --slots 8
   PYTHONPATH=src python -m repro.service.serve_sa --requests 8 --slots 4 \
       --chains-per-slot 16 --no-check        # quick smoke
+  PYTHONPATH=src python -m repro.service.serve_sa --arrivals poisson \
+      --rate 0.5 --requests 16 --slots 4 --chains-per-slot 16 --json
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import numpy as np
 
+from repro.service.arrivals import ArrivalProcess, latency_summary
 from repro.service.engine import (EngineConfig, SAServeEngine, run_standalone)
 from repro.service.request import SARequest
 from repro.service.scheduler import SchedulerConfig
@@ -33,6 +41,32 @@ MIX_SCHEDULES = [
     dict(T0=50.0, T_min=0.2, rho=0.90, N=25),
     dict(T0=200.0, T_min=1.0, rho=0.80, N=60),
 ]
+
+_EPILOG = """\
+flag groups:
+  load shape      --requests (mix size), --max-slots-per-req (request
+                  footprint), --seed (mix generator: objectives, dims,
+                  schedules, priorities are all derived from it).
+  pool shape      --slots (pool size), --chains-per-slot (kernel block
+                  size; multiple of 8 on TPU), --variant (delta = O(1)
+                  incremental evaluation, full = paper-faithful O(dim)).
+  admission       --policy priority (aged, default) | fifo.
+  arrivals        --arrivals batch (closed-loop, everything at t=0,
+                  default) | poisson (open-loop at --rate requests/tick,
+                  seeded by --arrival-seed — deterministic timeline).
+                  --max-ticks bounds the run either way.
+  reporting       --check (default) re-runs every request standalone and
+                  exits 1 unless all champions are bit-exact — the
+                  placement-invariance oracle; --no-check skips it.
+                  --json replaces the human report with one JSON document:
+                  config, engine stats, p50/p99 queueing delay +
+                  time-to-first-tick + latency (tick clock, deterministic
+                  under fixed seeds) and per-request lifecycle records
+                  (plus wall-clock latencies for operators).
+
+The tick clock is the engine's native time axis: one tick = one
+temperature level for every active slot.  See docs/serving.md.
+"""
 
 
 def make_mix(n_requests: int, chains_per_slot: int, seed: int = 0,
@@ -52,16 +86,54 @@ def make_mix(n_requests: int, chains_per_slot: int, seed: int = 0,
     return reqs
 
 
+def make_arrivals(reqs, kind: str, rate: float, seed: int) -> ArrivalProcess:
+    if kind == "poisson":
+        return ArrivalProcess.poisson(reqs, rate=rate, seed=seed)
+    return ArrivalProcess.batch(reqs)
+
+
+def _jsonable(obj):
+    """Map non-finite floats to None so --json is strict RFC 8259 JSON
+    (bare NaN tokens break jq / JSON.parse / Go decoders)."""
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return None
+    return obj
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--requests", type=int, default=32)
-    ap.add_argument("--slots", type=int, default=8)
-    ap.add_argument("--chains-per-slot", type=int, default=32)
-    ap.add_argument("--variant", default="delta", choices=["delta", "full"])
-    ap.add_argument("--seed", type=int, default=0)
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0], epilog=_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--requests", type=int, default=32,
+                    help="number of requests in the synthetic mix")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="slot-pool size (concurrent chain blocks)")
+    ap.add_argument("--chains-per-slot", type=int, default=32,
+                    help="chains per slot == kernel block size")
+    ap.add_argument("--variant", default="delta", choices=["delta", "full"],
+                    help="objective evaluation: O(1) delta or O(dim) full")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="request-mix generator seed")
     ap.add_argument("--policy", default="priority",
-                    choices=["priority", "fifo"])
-    ap.add_argument("--max-slots-per-req", type=int, default=2)
+                    choices=["priority", "fifo"],
+                    help="admission policy (priority is aged)")
+    ap.add_argument("--max-slots-per-req", type=int, default=2,
+                    help="largest request footprint in the mix, in slots")
+    ap.add_argument("--arrivals", default="batch",
+                    choices=["batch", "poisson"],
+                    help="closed-loop batch or open-loop Poisson stream")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="offered load for --arrivals poisson, requests/tick")
+    ap.add_argument("--arrival-seed", type=int, default=0,
+                    help="seed for the Poisson arrival timeline")
+    ap.add_argument("--max-ticks", type=int, default=None,
+                    help="hard tick budget (default: run to drain)")
+    ap.add_argument("--json", dest="as_json", action="store_true",
+                    help="emit one JSON document instead of the text report")
     ap.add_argument("--check", dest="check", action="store_true",
                     default=True,
                     help="compare every champion vs a standalone run")
@@ -75,37 +147,84 @@ def main(argv=None):
     engine = SAServeEngine(cfg)
     reqs = make_mix(args.requests, args.chains_per_slot, seed=args.seed,
                     max_slots_per_req=min(args.max_slots_per_req, args.slots))
-    for r in reqs:
-        engine.submit(r)
+    arrivals = make_arrivals(reqs, args.arrivals, args.rate,
+                             args.arrival_seed)
 
-    results = engine.run()
+    results = engine.run_stream(arrivals, max_ticks=args.max_ticks)
     stats = engine.stats()
-    print(f"[serve_sa] {stats['completed']}/{args.requests} requests in "
-          f"{stats['ticks']} ticks, {stats['wall_s']:.2f}s | "
-          f"{stats['requests_per_s']:.2f} req/s, "
-          f"{stats['sweeps_per_s']:.1f} sweeps/s, "
-          f"{stats['chain_steps_per_s']:.3g} chain-steps/s | "
-          f"occupancy {stats['occupancy']:.1%}")
+    lat = latency_summary(results, ticks=engine.tick_count)
 
     by_id = {r.req_id: r for r in results}
+    served = [req for req in reqs if req.req_id in by_id]
+    unserved = [req.req_id for req in reqs if req.req_id not in by_id]
     n_exact = 0
-    for req in reqs:
-        res = by_id[req.req_id]
-        line = (f"  req{req.req_id:>3} {req.objective:<10} d={req.dim:<3} "
-                f"f_best={res.f_best:+.5f} levels={res.levels_run} "
-                f"wait={res.start_tick - res.submit_tick}t [{res.finish_reason}]")
-        if args.check:
-            solo = run_standalone(req, cfg)
-            exact = (res.f_best == solo.f_best)
-            n_exact += exact
-            line += ("  == standalone" if exact
-                     else f"  != standalone ({solo.f_best:+.5f})")
-        print(line)
+    mismatched = {}             # req_id -> report line
     if args.check:
-        print(f"[serve_sa] {n_exact}/{len(reqs)} champions bit-exact vs "
-              "standalone")
-        if n_exact != len(reqs):
-            raise SystemExit(1)
+        for req in served:
+            solo = run_standalone(req, cfg)
+            if by_id[req.req_id].f_best == solo.f_best:
+                n_exact += 1
+            else:
+                mismatched[req.req_id] = (
+                    f"req{req.req_id}: packed {by_id[req.req_id].f_best:+.5f}"
+                    f" != standalone {solo.f_best:+.5f}")
+    # The check must not pass vacuously: a truncated run (--max-ticks) that
+    # served nothing is a coverage failure, not a success.
+    check_failed = args.check and (n_exact != len(served) or unserved)
+
+    if args.as_json:
+        doc = {
+            "config": {
+                "requests": args.requests, "slots": args.slots,
+                "chains_per_slot": args.chains_per_slot,
+                "variant": args.variant, "policy": args.policy,
+                "seed": args.seed, "arrivals": args.arrivals,
+                "rate": args.rate, "arrival_seed": args.arrival_seed,
+            },
+            "stats": stats,
+            "latency": lat,
+            "results": [by_id[r.req_id].to_dict()
+                        for r in sorted(served, key=lambda q: q.req_id)],
+        }
+        if args.check:
+            doc["check"] = {"bit_exact": n_exact, "served": len(served),
+                            "unserved_req_ids": unserved,
+                            "mismatches": sorted(mismatched.values())}
+        print(json.dumps(_jsonable(doc), indent=2, sort_keys=True,
+                         allow_nan=False))
+    else:
+        print(f"[serve_sa] {stats['completed']}/{args.requests} requests in "
+              f"{stats['ticks']} ticks, {stats['wall_s']:.2f}s | "
+              f"{stats['requests_per_s']:.2f} req/s, "
+              f"{stats['sweeps_per_s']:.1f} sweeps/s, "
+              f"{stats['chain_steps_per_s']:.3g} chain-steps/s | "
+              f"occupancy {stats['occupancy']:.1%}")
+        if args.arrivals != "batch":
+            print(f"[serve_sa] open loop @ {args.rate} req/tick: "
+                  f"queue delay p50/p99 = {lat['queue_delay_p50']:.1f}/"
+                  f"{lat['queue_delay_p99']:.1f} ticks, "
+                  f"ttft p50/p99 = {lat['ttft_p50']:.1f}/"
+                  f"{lat['ttft_p99']:.1f} ticks, "
+                  f"goodput {lat['goodput_req_per_tick']:.3f} req/tick")
+        for req in served:
+            res = by_id[req.req_id]
+            line = (f"  req{req.req_id:>3} {req.objective:<10} d={req.dim:<3} "
+                    f"f_best={res.f_best:+.5f} levels={res.levels_run} "
+                    f"wait={res.queue_delay_ticks:.1f}t "
+                    f"[{res.finish_reason}]")
+            if args.check:
+                line += ("  != standalone" if req.req_id in mismatched
+                         else "  == standalone")
+            print(line)
+        if args.check:
+            tail = f" ({len(unserved)} never served)" if unserved else ""
+            print(f"[serve_sa] {n_exact}/{len(served)} champions bit-exact "
+                  f"vs standalone{tail}")
+            for rid in sorted(mismatched):
+                print("  " + mismatched[rid])
+
+    if check_failed:
+        raise SystemExit(1)
     return results
 
 

@@ -38,6 +38,15 @@ class ActiveJob:
     submit_tick: int = 0
     start_tick: int = 0
     granted_chains: int = 0     # chain budget rounded up to whole slots
+    # Lifecycle timestamps (see docs/serving.md): arrival on the tick axis
+    # (fractional under open-loop Poisson load), the rest wall-clock seconds
+    # since the engine epoch.  first_tick is the tick of the job's first
+    # sweep (-1 until it runs).
+    arrival_time: float = 0.0
+    first_tick: int = -1
+    submit_wall: float = float("nan")
+    admit_wall: float = float("nan")
+    first_tick_wall: float = float("nan")
 
 
 class SlotPool:

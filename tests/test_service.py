@@ -250,3 +250,83 @@ def test_make_mix_is_heterogeneous():
     assert len({r.objective for r in reqs}) >= 3
     assert len({r.dim for r in reqs}) >= 2
     assert len({(r.T0, r.rho, r.N) for r in reqs}) >= 2
+
+
+# ------------------------------------------------------ runtime kid dispatch
+def test_kernel_per_block_kid_matches_scalar_calls():
+    """(blk0 on rastrigin, blk1 on ackley) in ONE launch == two scalar-kid
+    launches — mixed-objective co-batches are bit-exact."""
+    from repro.kernels import objective_math as om
+    rng = np.random.default_rng(3)
+    x = np.empty((16, 4), np.float32)
+    for half, kid in ((slice(0, 8), om.KID_RASTRIGIN),
+                      (slice(8, 16), om.KID_ACKLEY)):
+        lo, hi = om.BOX[kid]
+        x[half] = lo + rng.random((8, 4), dtype=np.float32) * (hi - lo)
+    kids = jnp.asarray([om.KID_RASTRIGIN, om.KID_ACKLEY], jnp.int32)
+    xa, fa = metropolis_sweep_pallas(jnp.asarray(x), 2.0, 7, 0, kid=kids,
+                                     n_steps=8, blk=8, variant="delta",
+                                     interpret=True)
+    x1, f1 = metropolis_sweep_pallas(jnp.asarray(x[:8]), 2.0, 7, 0,
+                                     kid=om.KID_RASTRIGIN, n_steps=8, blk=8,
+                                     variant="delta", interpret=True)
+    x2, f2 = metropolis_sweep_pallas(jnp.asarray(x[8:]), 2.0, 7, 0,
+                                     kid=om.KID_ACKLEY, n_steps=8, blk=8,
+                                     variant="delta", interpret=True,
+                                     chain_base=jnp.asarray([8], jnp.uint32))
+    np.testing.assert_array_equal(np.asarray(xa[:8]), np.asarray(x1))
+    np.testing.assert_array_equal(np.asarray(xa[8:]), np.asarray(x2))
+    np.testing.assert_array_equal(np.asarray(fa),
+                                  np.asarray(jnp.concatenate([f1, f2])))
+
+
+@pytest.mark.parametrize("variant", ["delta", "full"])
+def test_mixed_objective_cobatch_matches_standalone(variant):
+    """All four registry objectives at the SAME (dim, N) share one dispatch
+    group each tick — and every champion is still bit-exact vs standalone."""
+    cfg = _cfg(n_slots=4, variant=variant)
+    engine = SAServeEngine(cfg)
+    reqs = [_req(i, objective=obj, dim=4, N=10, T0=50.0, rho=0.7)
+            for i, obj in enumerate(
+                ["schwefel", "rastrigin", "ackley", "griewank"])]
+    for r in reqs:
+        engine.submit(r)
+    packed = {r.req_id: r for r in engine.run(max_ticks=200)}
+    assert len(packed) == 4
+    # identical (dim, N) and simultaneous admission => exactly one group
+    # launch per tick, even with four different objectives in flight.
+    assert engine.group_launches == reqs[0].n_levels
+    for req in reqs:
+        solo = run_standalone(req, cfg)
+        assert packed[req.req_id].f_best == solo.f_best, req
+        np.testing.assert_array_equal(packed[req.req_id].x_best, solo.x_best)
+
+
+def test_out_of_range_kid_rejected():
+    """Runtime dispatch must not silently fall through to kid 0: concrete
+    out-of-registry ids raise at the kernel and oracle entry points."""
+    from repro.kernels import objective_math as om, ref
+    x = jnp.zeros((8, 4), jnp.float32)
+    for bad in (om.N_KIDS, -1, jnp.asarray([0, om.N_KIDS], jnp.int32)):
+        with pytest.raises(ValueError, match="registry"):
+            metropolis_sweep_pallas(x, 1.0, 0, 0, kid=bad, n_steps=2, blk=4,
+                                    interpret=True)
+    with pytest.raises(ValueError, match="registry"):
+        ref.metropolis_sweep_ref(x, 1.0, 0, 0, kid=om.N_KIDS, n_steps=2)
+
+
+def test_one_lowering_serves_all_objectives():
+    """Compile-count assertion: at a fixed (dim, N) the engine compiles ONE
+    sweep program no matter how many registry objectives are in flight —
+    kid is runtime SMEM data, not a lowering constant."""
+    from repro.service.engine import _group_tick
+    if not (hasattr(_group_tick, "clear_cache")
+            and hasattr(_group_tick, "_cache_size")):
+        pytest.skip("jax jit cache introspection API unavailable")
+    engine = SAServeEngine(_cfg(n_slots=4))
+    for i, obj in enumerate(["schwefel", "rastrigin", "ackley", "griewank"]):
+        engine.submit(_req(i, objective=obj, dim=4, N=10, T0=50.0, rho=0.7))
+    _group_tick.clear_cache()
+    engine.run(max_ticks=200)
+    assert len(engine.results) == 4
+    assert _group_tick._cache_size() == 1

@@ -1,0 +1,179 @@
+"""Open-loop (streaming) serving: seeded arrival processes, lifecycle
+timestamp consistency, latency-metric determinism, and the serve_sa --json
+surface."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.service import (ArrivalProcess, EngineConfig, SAServeEngine,
+                           SARequest, latency_summary)
+from repro.service.serve_sa import main as serve_main, make_mix
+
+CPS = 8
+
+
+def _req(req_id, **kw):
+    kw.setdefault("objective", "rastrigin")
+    kw.setdefault("dim", 4)
+    kw.setdefault("n_chains", CPS)
+    kw.setdefault("T0", 50.0)
+    kw.setdefault("T_min", 1.0)
+    kw.setdefault("rho", 0.8)
+    kw.setdefault("N", 10)
+    return SARequest(req_id=req_id, seed=100 + req_id, **kw)
+
+
+def _cfg(n_slots=4, **kw):
+    return EngineConfig(n_slots=n_slots, chains_per_slot=CPS,
+                        use_pallas=False, **kw)
+
+
+# ------------------------------------------------------------ arrival process
+def test_poisson_arrivals_deterministic_and_sorted():
+    reqs = [_req(i) for i in range(16)]
+    a = ArrivalProcess.poisson(reqs, rate=0.5, seed=7)
+    b = ArrivalProcess.poisson(reqs, rate=0.5, seed=7)
+    ta = [t for t, _ in a.due(float("inf"))]
+    tb = [t for t, _ in b.due(float("inf"))]
+    assert ta == tb                      # bit-identical timeline per seed
+    assert ta == sorted(ta)
+    assert all(t > 0 for t in ta)
+    c = ArrivalProcess.poisson(reqs, rate=0.5, seed=8)
+    assert [t for t, _ in c.due(float("inf"))] != ta
+
+
+def test_arrivals_due_pops_in_time_order():
+    reqs = [_req(i) for i in range(3)]
+    a = ArrivalProcess.trace(reqs, [5.0, 0.5, 2.0])
+    assert a.next_time == 0.5
+    first = a.due(2.0)
+    assert [t for t, _ in first] == [0.5, 2.0]
+    assert [r.req_id for _, r in first] == [1, 2]
+    assert not a.exhausted and a.next_time == 5.0
+    assert a.due(4.0) == []
+    assert [r.req_id for _, r in a.due(5.0)] == [0]
+    assert a.exhausted and a.next_time == float("inf")
+
+
+def test_arrival_process_validates_lengths_and_rate():
+    with pytest.raises(ValueError):
+        ArrivalProcess([_req(0)], [0.0, 1.0])
+    with pytest.raises(ValueError):
+        ArrivalProcess.poisson([_req(0)], rate=0.0)
+
+
+# ----------------------------------------------------------- open-loop engine
+def test_run_stream_serves_all_and_stamps_lifecycle():
+    reqs = [_req(i) for i in range(6)]
+    engine = SAServeEngine(_cfg(n_slots=2))
+    arrivals = ArrivalProcess.poisson(reqs, rate=0.3, seed=1)
+    results = engine.run_stream(arrivals, max_ticks=2000)
+    assert {r.req_id for r in results} == set(range(6))
+    for r in results:
+        # tick clock: arrival -> admission -> first sweep -> completion
+        assert r.arrival_time > 0.0
+        assert r.start_tick >= r.arrival_time - 1  # admitted at tick >= t
+        assert r.first_tick == r.start_tick        # sweep runs on admit tick
+        assert r.finish_tick > r.first_tick
+        assert r.queue_delay_ticks >= 0.0
+        assert r.ttft_ticks >= r.queue_delay_ticks
+        assert r.latency_ticks >= r.ttft_ticks  # same end-of-tick convention
+        # wall clock: monotone through the lifecycle
+        assert 0.0 <= r.submit_wall <= r.admit_wall
+        assert r.admit_wall <= r.first_tick_wall <= r.finish_wall
+
+
+def test_run_stream_idles_until_late_arrival():
+    """Light load: the engine ticks through idle time, so a request arriving
+    at t=10 is admitted at tick >= 10, not at tick 0."""
+    engine = SAServeEngine(_cfg(n_slots=2))
+    arrivals = ArrivalProcess.trace([_req(0)], [10.0])
+    results = engine.run_stream(arrivals, max_ticks=500)
+    assert len(results) == 1
+    assert results[0].start_tick >= 10
+    assert results[0].queue_delay_ticks < 2.0  # empty pool: admitted at once
+
+
+def test_run_stream_tick_metrics_deterministic():
+    """The whole tick-clock latency distribution reproduces bit-for-bit for
+    a fixed (mix seed, arrival seed) — the acceptance criterion."""
+    def one_run():
+        reqs = make_mix(8, CPS, seed=0, max_slots_per_req=2)
+        engine = SAServeEngine(_cfg(n_slots=4))
+        engine.run_stream(ArrivalProcess.poisson(reqs, rate=0.5, seed=3),
+                          max_ticks=3000)
+        summary = latency_summary(engine.results, ticks=engine.tick_count)
+        per_req = sorted((r.req_id, r.arrival_time, r.start_tick,
+                          r.first_tick, r.finish_tick, r.f_best)
+                         for r in engine.results)
+        return summary, per_req
+
+    (s1, p1), (s2, p2) = one_run(), one_run()
+    assert p1 == p2
+    for k in ("queue_delay_p50", "queue_delay_p99", "ttft_p50", "ttft_p99",
+              "latency_p50", "latency_p99", "goodput_req_per_tick"):
+        assert s1[k] == s2[k], k
+
+
+def test_latency_summary_empty_and_basic():
+    s = latency_summary([], ticks=10)
+    assert s["completed"] == 0 and np.isnan(s["queue_delay_p50"])
+    engine = SAServeEngine(_cfg(n_slots=2))
+    engine.run_stream(ArrivalProcess.batch([_req(0), _req(1)]))
+    s = latency_summary(engine.results, ticks=engine.tick_count)
+    assert s["completed"] == 2
+    assert s["queue_delay_p50"] == 0.0     # batch arrivals, empty pool
+    assert s["ttft_p50"] == 1.0            # first level done at end of tick 0
+    assert s["goodput_req_per_tick"] > 0
+
+
+# ------------------------------------------------------------------ CLI JSON
+def test_serve_sa_json_deterministic(capsys):
+    """--json emits one parseable document whose tick-clock content is
+    identical across runs with the same seeds (wall fields excluded)."""
+    argv = ["--requests", "4", "--slots", "2", "--chains-per-slot", str(CPS),
+            "--arrivals", "poisson", "--rate", "1.0", "--arrival-seed", "5",
+            "--no-check", "--json"]
+
+    def strip_wall(doc):
+        doc["stats"] = {k: v for k, v in doc["stats"].items()
+                        if "wall" not in k and not k.endswith("_per_s")}
+        doc["latency"] = {k: v for k, v in doc["latency"].items()
+                          if "wall" not in k}
+        for r in doc["results"]:
+            for k in list(r):
+                if k.endswith("_wall_s"):
+                    del r[k]
+        return doc
+
+    docs = []
+    for _ in range(2):
+        serve_main(argv)
+        docs.append(strip_wall(json.loads(capsys.readouterr().out)))
+    assert docs[0] == docs[1]
+    assert docs[0]["latency"]["completed"] == 4
+    assert [r["req_id"] for r in docs[0]["results"]] == [0, 1, 2, 3]
+    for r in docs[0]["results"]:
+        assert r["queue_delay_ticks"] >= 0.0
+        assert r["ttft_ticks"] >= 1.0
+
+
+def test_serve_sa_check_fails_on_truncated_coverage(capsys):
+    """--check must not pass vacuously: a --max-ticks run that leaves
+    requests unserved exits 1 even though every served champion matched."""
+    with pytest.raises(SystemExit):
+        serve_main(["--requests", "6", "--slots", "2",
+                    "--chains-per-slot", str(CPS), "--max-ticks", "3",
+                    "--check"])
+    assert "never served" in capsys.readouterr().out
+
+
+def test_serve_sa_check_passes_under_streaming(capsys):
+    """Placement invariance holds under open-loop admission: --check exits
+    cleanly (bit-exact packed vs standalone champions)."""
+    serve_main(["--requests", "3", "--slots", "2",
+                "--chains-per-slot", str(CPS), "--arrivals", "poisson",
+                "--rate", "0.7", "--check"])
+    out = capsys.readouterr().out
+    assert "3/3 champions bit-exact" in out
