@@ -14,23 +14,40 @@ clock noise.  Wall-clock medians are printed alongside for scale.
 
   PYTHONPATH=src python benchmarks/serve_sa_latency.py \
       --rates 0.2,0.5,1.0 --requests 24 --slots 4 --chains-per-slot 16
+
+``--overload`` switches to the admission-control comparison: every
+overload policy (none/reject/degrade/preempt) serves the *same* seeded
+Poisson stream at ``--overload-factor`` x the pool's saturating load, and
+goodput / p99 queueing delay / rejections / preemptions / final backlog
+per policy are printed and written to ``--out``
+(artifacts/bench/BENCH_serve_overload.json) — a deterministic perf
+trajectory for future PRs.
+
+  PYTHONPATH=src python benchmarks/serve_sa_latency.py --overload \
+      --requests 120 --slots 5 --chains-per-slot 8 --max-ticks 400
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+from pathlib import Path
 
 try:
     from .common import Table
 except ImportError:  # run as a plain script: python benchmarks/serve_sa_latency.py
     import sys
-    from pathlib import Path
     sys.path.insert(0, str(Path(__file__).resolve().parent))
     from common import Table
 
 from repro.service.arrivals import ArrivalProcess, latency_summary
 from repro.service.engine import EngineConfig, SAServeEngine
 from repro.service.scheduler import SchedulerConfig
-from repro.service.serve_sa import make_mix
+from repro.service.serve_sa import _jsonable, make_mix
+
+#: Default artifact path (repo-relative) for the --overload comparison.
+DEFAULT_OVERLOAD_OUT = (Path(__file__).resolve().parents[1]
+                        / "artifacts" / "bench" / "BENCH_serve_overload.json")
 
 
 def bench_rate(rate: float, n_requests: int, n_slots: int,
@@ -51,6 +68,100 @@ def bench_rate(rate: float, n_requests: int, n_slots: int,
     return row
 
 
+def saturating_rate(reqs, n_slots: int, chains_per_slot: int) -> float:
+    """Offered load (req/tick) that exactly fills the pool on average.
+
+    A request holding ``w`` slots for its full ladder of ``L`` levels costs
+    ``w * L`` slot-ticks, so capacity = n_slots / E[w * L].  Early stops
+    (target/budget) only lower the true cost, making this a conservative
+    saturation estimate.
+    """
+    cost = [r.slots_needed(chains_per_slot) * r.n_levels for r in reqs]
+    return n_slots / (sum(cost) / len(cost))
+
+
+def bench_overload(args) -> dict:
+    """Same seeded overload stream through every overload policy."""
+    reqs = make_mix(args.requests, args.chains_per_slot, seed=args.seed,
+                    max_slots_per_req=min(2, args.slots))
+    rate = args.overload_factor * saturating_rate(
+        reqs, args.slots, args.chains_per_slot)
+    policies = {}
+    for policy in ("none", "reject", "degrade", "preempt"):
+        cfg = EngineConfig(
+            n_slots=args.slots, chains_per_slot=args.chains_per_slot,
+            variant=args.variant,
+            scheduler=SchedulerConfig(
+                policy="priority", overload=policy,
+                default_deadline=args.deadline,
+                preemption_budget=args.preemption_budget))
+        engine = SAServeEngine(cfg)
+        engine.run_stream(
+            ArrivalProcess.poisson(reqs, rate=rate, seed=args.arrival_seed),
+            max_ticks=args.max_ticks)
+        stats = engine.stats()
+        lat = latency_summary(engine.results, ticks=engine.tick_count)
+        policies[policy] = {
+            "completed": lat["completed"],
+            "rejected": lat["rejected"],
+            "preemptions": stats["preemptions"],
+            "degraded": sum(r.degraded for r in engine.results),
+            "backlog": len(engine.scheduler),      # unbounded growth witness
+            "goodput_req_per_tick": lat["goodput_req_per_tick"],
+            "queue_delay_p50": lat["queue_delay_p50"],
+            "queue_delay_p99": lat["queue_delay_p99"],
+            "latency_p99": lat["latency_p99"],
+            "occupancy": stats["occupancy"],
+            "wall_s": stats["wall_s"],             # non-deterministic; scale only
+        }
+    return {
+        "config": {
+            "requests": args.requests, "slots": args.slots,
+            "chains_per_slot": args.chains_per_slot,
+            "variant": args.variant, "seed": args.seed,
+            "arrival_seed": args.arrival_seed,
+            "overload_factor": args.overload_factor,
+            "rate_req_per_tick": rate, "deadline": args.deadline,
+            "preemption_budget": args.preemption_budget,
+            "max_ticks": args.max_ticks,
+        },
+        "policies": policies,
+    }
+
+
+def run_overload(args):
+    doc = bench_overload(args)
+    cols = ["policy", "completed", "rejected", "degraded", "preemptions",
+            "backlog", "goodput_req_per_tick", "queue_delay_p50",
+            "queue_delay_p99", "occupancy"]
+    table = Table(
+        f"SA serving engine: overload policies at "
+        f"{args.overload_factor:g}x saturating load "
+        f"({doc['config']['rate_req_per_tick']:.3f} req/tick, deadline "
+        f"{args.deadline:g} ticks, seeded Poisson)",
+        cols,
+        fmt={"goodput_req_per_tick": ".3f", "queue_delay_p50": ".1f",
+             "queue_delay_p99": ".1f", "occupancy": ".1%"})
+    for policy, row in doc["policies"].items():
+        table.add(policy=policy, **{k: row[k] for k in cols[1:]})
+    table.show()
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(_jsonable(doc), indent=2, sort_keys=True,
+                              allow_nan=False) + "\n")
+    print(f"\nwrote {out}")
+    base = doc["policies"]["none"]
+    for policy in ("reject", "degrade"):
+        bounded = (doc["policies"][policy]["queue_delay_p99"]
+                   <= args.deadline + 1)
+        print(f"{policy:>8}: p99 queue delay "
+              f"{doc['policies'][policy]['queue_delay_p99']:.1f}t "
+              f"({'bounded by deadline' if bounded else 'NOT bounded'}) vs "
+              f"baseline {base['queue_delay_p99']:.1f}t, backlog "
+              f"{doc['policies'][policy]['backlog']} vs {base['backlog']}")
+    return doc
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--rates", default="0.2,0.5,1.0",
@@ -66,7 +177,20 @@ def main(argv=None):
                     help="Poisson timeline seed")
     ap.add_argument("--max-ticks", type=int, default=5000,
                     help="safety tick budget per rate point")
+    ap.add_argument("--overload", action="store_true",
+                    help="compare overload policies at --overload-factor x "
+                         "saturating load and write --out")
+    ap.add_argument("--overload-factor", type=float, default=3.0,
+                    help="offered load as a multiple of saturating load")
+    ap.add_argument("--deadline", type=float, default=25.0,
+                    help="queueing-delay SLO (ticks) for reject/degrade")
+    ap.add_argument("--preemption-budget", type=int, default=1)
+    ap.add_argument("--out", default=str(DEFAULT_OVERLOAD_OUT),
+                    help="JSON artifact path for --overload")
     args = ap.parse_args(argv)
+
+    if args.overload:
+        return run_overload(args)
 
     table = Table(
         "SA serving engine: open-loop latency vs offered load "

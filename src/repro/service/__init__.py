@@ -10,11 +10,14 @@ a request's ladder (or budget, or accuracy target) completes.
 Layers
 ------
 ``request.py``   : :class:`SARequest` / :class:`RequestResult` schema,
+                   SLO fields (deadline, min-chains, overload class),
                    lifecycle timestamps + derived latencies.
-``slots.py``     : the slot pool — per-slot chain state + ownership.
-``scheduler.py`` : priority-with-aging admission, bounded backfill.
-``arrivals.py``  : open-loop arrival processes (seeded Poisson / trace /
-                   batch) + latency percentile summaries.
+``slots.py``     : the slot pool — per-slot chain state + ownership —
+                   and :class:`SwappedJob` preemption checkpoints.
+``scheduler.py`` : priority-with-aging admission, bounded backfill, and
+                   the reject/degrade/preempt overload policies.
+``arrivals.py``  : open-loop arrival processes (seeded Poisson / bursty /
+                   trace / batch) + latency percentile summaries.
 ``engine.py``    : the continuous-batching tick loop; per-slot objective id
                    (runtime — no recompile per objective), temperature,
                    seed and step cursor threaded to the Pallas kernel,
@@ -41,13 +44,17 @@ Or from the shell::
 from repro.service.arrivals import ArrivalProcess, latency_summary
 from repro.service.engine import (EngineConfig, SAServeEngine, F_OPT,
                                   run_standalone)
-from repro.service.request import RequestResult, SARequest, SERVABLE
-from repro.service.scheduler import AdmissionScheduler, SchedulerConfig
-from repro.service.slots import ActiveJob, SlotPool
+from repro.service.request import (OVERLOAD_POLICIES, RequestResult,
+                                   SARequest, SERVABLE, TERMINAL_REASONS)
+from repro.service.scheduler import (AdmissionPlan, AdmissionScheduler,
+                                     QueueEntry, SchedulerConfig)
+from repro.service.slots import ActiveJob, SlotPool, SwappedJob
 
 __all__ = [
     "EngineConfig", "SAServeEngine", "run_standalone", "F_OPT",
-    "SARequest", "RequestResult", "SERVABLE",
-    "AdmissionScheduler", "SchedulerConfig", "SlotPool", "ActiveJob",
+    "SARequest", "RequestResult", "SERVABLE", "OVERLOAD_POLICIES",
+    "TERMINAL_REASONS",
+    "AdmissionScheduler", "AdmissionPlan", "QueueEntry", "SchedulerConfig",
+    "SlotPool", "ActiveJob", "SwappedJob",
     "ArrivalProcess", "latency_summary",
 ]

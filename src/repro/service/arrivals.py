@@ -57,6 +57,25 @@ class ArrivalProcess:
         return cls(requests, np.cumsum(gaps))
 
     @classmethod
+    def bursty(cls, requests: Sequence[SARequest], rate: float,
+               burst: int = 4, seed: int = 0) -> "ArrivalProcess":
+        """Seeded bursty arrivals: groups of ``burst`` requests land at one
+        instant, with exponential gaps between instants scaled so the
+        long-run offered load is still ``rate`` requests/tick.  The
+        overload generator for admission-control tests: micro-bursts force
+        transient saturation even when the mean load is sustainable.
+        """
+        if rate <= 0:
+            raise ValueError(f"rate must be positive, got {rate}")
+        if burst < 1:
+            raise ValueError(f"burst must be >= 1, got {burst}")
+        rng = np.random.default_rng(seed)
+        n_bursts = -(-len(requests) // burst)
+        starts = np.cumsum(rng.exponential(burst / rate, size=n_bursts))
+        return cls(requests,
+                   [float(starts[i // burst]) for i in range(len(requests))])
+
+    @classmethod
     def trace(cls, requests: Sequence[SARequest],
               times: Iterable[float]) -> "ArrivalProcess":
         """Replay explicit arrival timestamps (ticks)."""
@@ -105,22 +124,30 @@ def latency_summary(results: Sequence[RequestResult],
     end-to-end latency) are deterministic under a fixed arrival seed;
     goodput is completed requests per tick.  Wall-clock medians ride along
     for operators (nan when requests were submitted without wall stamps).
+
+    Only *completed* requests enter the latency percentiles and goodput —
+    a rejected request has no admission to measure; it is counted (and its
+    preemptions summed) separately, so the reject policy cannot launder its
+    drops into better-looking latency numbers unnoticed.
     """
-    qd = [r.queue_delay_ticks for r in results]
-    tt = [r.ttft_ticks for r in results]
-    lat = [r.latency_ticks for r in results]
+    done = [r for r in results if r.completed]
+    qd = [r.queue_delay_ticks for r in done]
+    tt = [r.ttft_ticks for r in done]
+    lat = [r.latency_ticks for r in done]
     return {
-        "completed": len(results),
+        "completed": len(done),
+        "rejected": len(results) - len(done),
+        "preemptions": sum(r.n_preemptions for r in done),
         "queue_delay_p50": percentile(qd, 50),
         "queue_delay_p99": percentile(qd, 99),
         "ttft_p50": percentile(tt, 50),
         "ttft_p99": percentile(tt, 99),
         "latency_p50": percentile(lat, 50),
         "latency_p99": percentile(lat, 99),
-        "goodput_req_per_tick": (len(results) / ticks) if ticks else
+        "goodput_req_per_tick": (len(done) / ticks) if ticks else
         float("nan"),
         "queue_delay_wall_p50_s": percentile(
-            [r.queue_delay_wall_s for r in results], 50),
+            [r.queue_delay_wall_s for r in done], 50),
         "latency_wall_p50_s": percentile(
-            [r.latency_wall_s for r in results], 50),
+            [r.latency_wall_s for r in done], 50),
     }

@@ -32,9 +32,18 @@ Invariants
 * **Open-loop serving**: :meth:`SAServeEngine.run_stream` interleaves
   admission of an :class:`~repro.service.arrivals.ArrivalProcess` (e.g.
   seeded Poisson) with in-flight progress, stamping per-request lifecycle
-  events (submit / admit / first-tick / complete, in both tick-time and
-  wall-time) from which queueing-delay and time-to-first-tick percentiles
-  are derived (see docs/serving.md).
+  events (submit / admit / first-tick / preempted / resumed /
+  complete-or-rejected, in both tick-time and wall-time) from which
+  queueing-delay and time-to-first-tick percentiles are derived (see
+  docs/serving.md).
+* **Preemption is bit-exact**: an active job checkpoints to a host-side
+  :class:`~repro.service.slots.SwappedJob` (slot blocks + champion + RNG
+  step cursor + temperature cursor) and resumes — possibly on different
+  physical slots — with a trajectory identical to an uninterrupted run,
+  because the RNG is counter-based on logical (chain index, step)
+  coordinates.  SLO admission control (scheduler.py) builds on it: the
+  'preempt' overload policy evicts the cheapest active jobs for an urgent
+  arrival, 'reject' and 'degrade' bound queue growth at overload.
 """
 from __future__ import annotations
 
@@ -53,8 +62,9 @@ from repro.core import exchange as exch
 from repro.kernels import objective_math as om
 from repro.kernels import ops
 from repro.service.request import RequestResult, SARequest
-from repro.service.scheduler import AdmissionScheduler, SchedulerConfig
-from repro.service.slots import ActiveJob, RidTable, SlotPool
+from repro.service.scheduler import (AdmissionScheduler, QueueEntry,
+                                     SchedulerConfig)
+from repro.service.slots import ActiveJob, RidTable, SlotPool, SwappedJob
 
 #: Known optima of the servable (registry) objectives, for accuracy targets.
 #: Schwefel is the paper's normalized form, so its optimum is dim-free.
@@ -101,7 +111,11 @@ def _group_tick(x, kid_blk, T_blk, seed_blk, step0_blk, base_blk, seg, adopt,
 class SAServeEngine:
     """Multi-tenant annealing server over one device program per group."""
 
-    def __init__(self, cfg: EngineConfig = EngineConfig()):
+    def __init__(self, cfg: Optional[EngineConfig] = None):
+        # Build a fresh default per engine: a mutable-default-argument
+        # EngineConfig() would be evaluated once and shared by every engine
+        # constructed without a config (tests pin this down).
+        cfg = EngineConfig() if cfg is None else cfg
         self.cfg = cfg
         self.pool = SlotPool(cfg.n_slots, cfg.chains_per_slot)
         self.scheduler = AdmissionScheduler(cfg.scheduler)
@@ -111,6 +125,8 @@ class SAServeEngine:
         self.sweeps_done = 0          # block-sweeps (slot x level): also the
                                       # occupancy numerator (active slot-ticks)
         self.group_launches = 0
+        self.preemptions = 0          # swap-outs performed
+        self.rejections = 0           # SLO admission-control drops
         self._use_pallas = ops.resolve_use_pallas(cfg.use_pallas)
         if self._use_pallas and cfg.chains_per_slot % 8:
             raise ValueError(
@@ -139,10 +155,12 @@ class SAServeEngine:
                 f"{self.cfg.n_slots}; lower n_chains or grow the pool")
         if (req.req_id in self._submit_info
                 or any(j.req.req_id == req.req_id
-                       for j in self.rids.jobs.values())):
+                       for j in self.rids.jobs.values())
+                or any(r.req_id == req.req_id
+                       for r in self.scheduler.pending)):
             raise ValueError(
-                f"request id {req.req_id} is already queued or in flight; "
-                "req_ids must be unique among live requests")
+                f"request id {req.req_id} is already queued, swapped out or "
+                "in flight; req_ids must be unique among live requests")
         self._submit_info[req.req_id] = (
             float(self.tick_count if arrival_time is None else arrival_time),
             self._now())
@@ -158,20 +176,79 @@ class SAServeEngine:
 
     # ----------------------------------------------------------- admission
     def _admit(self) -> None:
-        entries = self.scheduler.admit(
-            self.pool.n_free, self.cfg.chains_per_slot, self.tick_count)
-        for req, submit_tick in entries:
-            arrival, submit_wall = self._submit_info.pop(
-                req.req_id, (float(submit_tick), float("nan")))
-            job = ActiveJob(req=req, rid=-1, slots=[], T=req.T0,
-                            submit_tick=submit_tick,
-                            start_tick=self.tick_count,
-                            arrival_time=arrival,
-                            submit_wall=submit_wall,
-                            admit_wall=self._now())
+        plan = self.scheduler.admit(
+            self.pool.n_free, self.cfg.chains_per_slot, self.tick_count,
+            active=list(self.rids.jobs.values()))
+        # Execution order matters: rejections first (they free nothing but
+        # must be stamped this tick), then evictions (freeing slots the
+        # plan's admissions count on), then placements.
+        for entry in plan.rejected:
+            self._reject(entry)
+        for rid in plan.evict:
+            self._swap_out(rid)
+        for entry, granted_slots in plan.admitted:
+            self._place(entry, granted_slots)
+
+    def _place(self, entry: QueueEntry, granted_slots: int) -> None:
+        if entry.swapped is not None:       # swap-in: bit-exact resume
+            job = entry.swapped.job
+            job.resumed_ticks.append(self.tick_count)
             self.rids.alloc(job)
-            job.slots = self.pool.assign(job.rid, req)
-            job.granted_chains = len(job.slots) * self.cfg.chains_per_slot
+            job.slots = self.pool.restore(job.rid, entry.swapped.blocks)
+            return
+        req = entry.req
+        arrival, submit_wall = self._submit_info.pop(
+            req.req_id, (float(entry.submit_tick), float("nan")))
+        job = ActiveJob(req=req, rid=-1, slots=[], T=req.T0,
+                        submit_tick=entry.submit_tick,
+                        start_tick=self.tick_count,
+                        arrival_time=arrival,
+                        submit_wall=submit_wall,
+                        admit_wall=self._now())
+        self.rids.alloc(job)
+        job.slots = self.pool.assign(job.rid, req, n_slots=granted_slots)
+        job.granted_chains = granted_slots * self.cfg.chains_per_slot
+
+    def _swap_out(self, rid: int) -> None:
+        """Preempt: checkpoint a job's device-visible state to host, free
+        its slots, and re-queue it for a bit-exact resume."""
+        job = self.rids.jobs[rid]
+        blocks = self.pool.checkpoint(rid)
+        self.pool.release(rid)
+        self.rids.free(rid)
+        job.slots = []
+        job.rid = -1
+        job.preempted_ticks.append(self.tick_count)
+        self.scheduler.requeue(SwappedJob(job=job, blocks=blocks))
+        self.preemptions += 1
+
+    def preempt(self, req_id: int) -> bool:
+        """Swap out the in-flight request ``req_id`` (False if not active).
+
+        The scheduler's 'preempt' overload policy calls the same swap-out
+        path; this is the operator/test entry point for preempting at a
+        chosen temperature level.
+        """
+        for rid, job in list(self.rids.jobs.items()):
+            if job.req.req_id == req_id:
+                self._swap_out(rid)
+                return True
+        return False
+
+    def _reject(self, entry: QueueEntry) -> None:
+        """SLO fast-fail: terminal 'rejected' result, no solution."""
+        req = entry.req
+        arrival, submit_wall = self._submit_info.pop(
+            req.req_id, (float(entry.submit_tick), float("nan")))
+        self.results.append(RequestResult(
+            req_id=req.req_id, objective=req.objective, dim=req.dim,
+            x_best=None, f_best=float("inf"), levels_run=0, n_evals=0,
+            submit_tick=entry.submit_tick, start_tick=-1,
+            finish_tick=self.tick_count, finish_reason="rejected",
+            arrival_time=arrival, submit_wall=submit_wall,
+            finish_wall=self._now(), requested_chains=req.n_chains,
+            granted_chains=0))
+        self.rejections += 1
 
     # ---------------------------------------------------------------- tick
     def tick(self) -> None:
@@ -200,6 +277,7 @@ class SAServeEngine:
                 job.steps_done += n_steps
                 job.evals += n_steps * job.granted_chains
                 job.T *= job.req.rho
+                job.history.append(job.best_f)   # champion trajectory/level
                 reason = self._finish_reason(job)
                 if reason is not None:
                     self._retire(job, reason)
@@ -288,7 +366,12 @@ class SAServeEngine:
             finish_tick=self.tick_count, finish_reason=reason,
             arrival_time=job.arrival_time, first_tick=job.first_tick,
             submit_wall=job.submit_wall, admit_wall=job.admit_wall,
-            first_tick_wall=job.first_tick_wall, finish_wall=self._now()))
+            first_tick_wall=job.first_tick_wall, finish_wall=self._now(),
+            requested_chains=job.req.n_chains,
+            granted_chains=job.granted_chains,
+            preempted_ticks=list(job.preempted_ticks),
+            resumed_ticks=list(job.resumed_ticks),
+            champion_history=list(job.history)))
         self.pool.release(job.rid)
         self.rids.free(job.rid)
 
@@ -351,7 +434,9 @@ class SAServeEngine:
         return {
             "ticks": self.tick_count,
             "group_launches": self.group_launches,
-            "completed": len(self.results),
+            "completed": sum(r.completed for r in self.results),
+            "rejected": self.rejections,
+            "preemptions": self.preemptions,
             "sweeps": self.sweeps_done,
             "occupancy": self.sweeps_done / (ticks * self.cfg.n_slots),
             "wall_s": wall,

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -18,6 +18,16 @@ from repro.kernels import objective_math as om
 
 #: Objectives servable by the engine: the Pallas kernel registry.
 SERVABLE = tuple(sorted(om.KID_BY_NAME))
+
+#: Per-request overload policies (see scheduler.py): what the scheduler may
+#: do with/for this request when the pool is saturated.  ``None`` on a
+#: request defers to the scheduler-wide default.
+OVERLOAD_POLICIES = ("none", "reject", "degrade", "preempt")
+
+#: Terminal finish_reason values.  'rejected' is the only non-completed
+#: terminal status: the request was dropped by SLO admission control and
+#: carries no solution.
+TERMINAL_REASONS = ("ladder", "target", "budget", "rejected")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +52,16 @@ class SARequest:
     exchange: str = "sync"      # 'sync' (paper V2) | 'async' (paper V1)
     target_error: Optional[float] = None  # stop early once best_f - f_opt <= this
     max_evals: Optional[int] = None       # objective-evaluation budget cap
+    # ---- SLO / admission-control fields (see scheduler.py) ----
+    deadline: Optional[float] = None  # max queueing delay in ticks before the
+                                      # reject/degrade policies drop the
+                                      # request (0 = admit now or never);
+                                      # None defers to the scheduler default
+    min_chains: Optional[int] = None  # degrade floor: never grant fewer
+                                      # chains than this (None = one slot)
+    on_overload: Optional[str] = None  # per-request-class overload policy:
+                                       # 'none'|'reject'|'degrade'|'preempt';
+                                       # None = scheduler-wide default
 
     def __post_init__(self):
         if self.objective not in om.KID_BY_NAME:
@@ -53,6 +73,15 @@ class SARequest:
             raise ValueError("need T0 > T_min > 0 and 0 < rho < 1")
         if self.exchange not in ("sync", "async"):
             raise ValueError("exchange must be 'sync' or 'async'")
+        if self.deadline is not None and self.deadline < 0:
+            raise ValueError("deadline must be >= 0 ticks")
+        if self.min_chains is not None and not (
+                1 <= self.min_chains <= self.n_chains):
+            raise ValueError("need 1 <= min_chains <= n_chains")
+        if self.on_overload is not None \
+                and self.on_overload not in OVERLOAD_POLICIES:
+            raise ValueError(
+                f"on_overload must be one of {OVERLOAD_POLICIES} or None")
 
     @property
     def kid(self) -> int:
@@ -66,6 +95,12 @@ class SARequest:
 
     def slots_needed(self, chains_per_slot: int) -> int:
         return max(1, -(-self.n_chains // chains_per_slot))
+
+    def slots_floor(self, chains_per_slot: int) -> int:
+        """Smallest admissible footprint in slots (the degrade floor)."""
+        if self.min_chains is None:
+            return 1
+        return max(1, -(-self.min_chains // chains_per_slot))
 
     def sample_x0(self, n_chains: int) -> np.ndarray:
         """Deterministic initial states, independent of slot placement."""
@@ -89,19 +124,25 @@ class RequestResult:
     Derived latencies (``queue_delay_ticks`` etc.) are properties so the
     definitions live in exactly one place; see docs/serving.md for the
     event diagram.
+
+    A request dropped by SLO admission control terminates with
+    ``finish_reason == 'rejected'``: it carries no solution
+    (``x_best is None``) and its admission-anchored latencies are nan.
+    A preempted-then-resumed request records every swap-out/swap-in tick;
+    its champions are bit-exact with an uninterrupted run.
     """
 
     req_id: int
     objective: str
     dim: int
-    x_best: np.ndarray          # (dim,)
+    x_best: Optional[np.ndarray]  # (dim,); None iff rejected
     f_best: float
     levels_run: int             # temperature levels actually executed
     n_evals: int                # objective evaluations spent
     submit_tick: int            # engine tick at submission
-    start_tick: int             # engine tick at admission (queueing delay)
-    finish_tick: int            # engine tick at completion
-    finish_reason: str          # 'ladder' | 'target' | 'budget'
+    start_tick: int             # engine tick at admission (-1 if rejected)
+    finish_tick: int            # engine tick at completion/rejection
+    finish_reason: str          # 'ladder' | 'target' | 'budget' | 'rejected'
     # ---- lifecycle events (streaming/open-loop serving) ----
     arrival_time: float = 0.0   # offered-load timestamp, in (fractional) ticks
     first_tick: int = -1        # tick of the first sweep (== start_tick today)
@@ -109,17 +150,47 @@ class RequestResult:
     admit_wall: float = float("nan")
     first_tick_wall: float = float("nan")
     finish_wall: float = float("nan")
+    # ---- SLO / preemption metadata ----
+    requested_chains: int = 0   # req.n_chains as submitted
+    granted_chains: int = 0     # chains actually granted (0 if rejected;
+                                # < requested under the degrade policy)
+    preempted_ticks: List[int] = dataclasses.field(default_factory=list)
+    resumed_ticks: List[int] = dataclasses.field(default_factory=list)
+    champion_history: List[float] = dataclasses.field(default_factory=list)
+
+    # ---- derived status ----
+    @property
+    def status(self) -> str:
+        """Typed terminal status: 'completed' | 'rejected'."""
+        return "rejected" if self.finish_reason == "rejected" else "completed"
+
+    @property
+    def completed(self) -> bool:
+        return self.finish_reason != "rejected"
+
+    @property
+    def degraded(self) -> bool:
+        """Admitted with fewer chains than requested (degrade policy)."""
+        return self.completed and self.granted_chains < self.requested_chains
+
+    @property
+    def n_preemptions(self) -> int:
+        return len(self.preempted_ticks)
 
     # ---- derived latencies: tick clock (deterministic) ----
     @property
     def queue_delay_ticks(self) -> float:
-        """Arrival -> admission, in ticks."""
+        """Arrival -> admission, in ticks (nan if never admitted)."""
+        if self.start_tick < 0:
+            return float("nan")
         return self.start_tick - self.arrival_time
 
     @property
     def ttft_ticks(self) -> float:
         """Arrival -> end of the first temperature level, in ticks
         (time-to-first-tick: first visible annealing progress)."""
+        if self.first_tick < 0:
+            return float("nan")
         return self.first_tick + 1 - self.arrival_time
 
     @property
@@ -151,7 +222,12 @@ class RequestResult:
             "req_id": self.req_id, "objective": self.objective,
             "dim": self.dim, "f_best": float(self.f_best),
             "levels_run": self.levels_run, "n_evals": self.n_evals,
-            "finish_reason": self.finish_reason,
+            "finish_reason": self.finish_reason, "status": self.status,
+            "requested_chains": self.requested_chains,
+            "granted_chains": self.granted_chains,
+            "preempted_ticks": list(self.preempted_ticks),
+            "resumed_ticks": list(self.resumed_ticks),
+            "n_preemptions": self.n_preemptions,
             "arrival_time": self.arrival_time,
             "submit_tick": self.submit_tick, "start_tick": self.start_tick,
             "first_tick": self.first_tick, "finish_tick": self.finish_tick,
@@ -163,5 +239,7 @@ class RequestResult:
             "latency_wall_s": self.latency_wall_s,
         }
         if include_x:
-            d["x_best"] = np.asarray(self.x_best).tolist()
+            d["x_best"] = (None if self.x_best is None
+                           else np.asarray(self.x_best).tolist())
+            d["champion_history"] = [float(f) for f in self.champion_history]
         return d

@@ -2,7 +2,7 @@
 
 Continuous batching needs two decisions per tick: *which* queued requests to
 admit, and *whether* to hold slots back for a large request that cannot fit
-yet.  The policy here is priority-with-aging plus bounded backfill:
+yet.  The base policy is priority-with-aging plus bounded backfill:
 
 * effective priority = static priority + ``aging`` x ticks queued, so a
   low-priority request cannot starve forever (the fairness half of
@@ -15,28 +15,59 @@ yet.  The policy here is priority-with-aging plus bounded backfill:
   backfill past it stops, letting freed slots accumulate until it fits —
   bounded head-of-line starvation instead of either extreme.
 
+On top of that sit the **overload policies** (per request class via
+``SARequest.on_overload``, defaulting to ``SchedulerConfig.overload``),
+which decide what happens when a request cannot be admitted at full width:
+
+* ``reject``  — SLO fast-fail: once the request has queued longer than its
+  ``deadline`` (ticks; ``deadline=0`` means *admit now or never*) it is
+  dropped with a typed 'rejected' status.  This bounds both queue length
+  and the queueing delay of everything that *is* admitted.
+* ``degrade`` — admit immediately with fewer chains, down to the request's
+  ``min_chains`` floor (rounded up to whole slots; one slot if unset).
+  Champion exchange scales with it automatically (the segmented reduce runs
+  over whatever blocks the request holds), and the run is bit-exact with a
+  standalone run at the granted chain count.  The ``reject`` deadline is
+  kept as a backstop — if even the floor cannot be admitted in time the
+  request is dropped — so degrade also bounds queue growth.
+* ``preempt`` — evict the lowest-effective-priority active job(s) whose
+  effective priority is *strictly* below the candidate's, bounded by
+  ``preemption_budget`` evictions per tick, checkpoint them to host
+  (:class:`~repro.service.slots.SwappedJob`) and re-queue them for a
+  bit-exact resume.  Because every job ages at the same rate, preemption
+  order is stable — no eviction/resume thrash cycles.  Surplus slots an
+  eviction frees beyond the urgent arrival's need are reserved for work
+  that outranks the victims for the rest of the tick: eviction never
+  directly funds a lower-priority admission (from the next tick on the
+  ordinary backfill/aging/hol rules govern them again).
+
 Invariants
 ----------
-* The scheduler never over-commits: the sum of ``slots_needed`` over one
-  ``admit()`` batch is <= the ``free_slots`` it was offered.
+* The scheduler never over-commits: the slots granted by one ``admit()``
+  plan are <= the ``free_slots`` it was offered plus the slots released by
+  the evictions in the same plan.
 * Admission order is deterministic: effective-priority sort is stable with
   ties broken by submission order, so a fixed (request mix, arrival seed)
   reproduces the exact same packing — the foundation of the engine's
   reproducible latency distributions.
+* Swapped (preempted) jobs are *admitted work*: they resume at exactly
+  their granted width and are never rejected or degraded — only delayed.
 * Scheduling is objective-blind.  Since the kernel dispatches the objective
   id at runtime, co-batching never constrains *which* requests may share a
   device program — only shape ``(dim, N)`` does, and that grouping happens
   downstream in the engine.
-* The scheduler holds only ``(request, submit_tick)``; open-loop arrival
-  timestamps live in the engine's lifecycle records (engine.py), so queue
-  policy and load generation stay decoupled.
+* The scheduler holds only queue entries ``(request, submit_tick, swapped
+  checkpoint)``; open-loop arrival timestamps live in the engine's
+  lifecycle records (engine.py), so queue policy and load generation stay
+  decoupled.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Sequence, Tuple
 
-from repro.service.request import SARequest
+from repro.service.request import OVERLOAD_POLICIES, SARequest
+from repro.service.slots import ActiveJob, SwappedJob
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,60 +75,210 @@ class SchedulerConfig:
     policy: str = "priority"    # 'priority' (aged) | 'fifo'
     aging: float = 0.05         # priority points per queued tick
     hol_patience: int = 16      # ticks the head may starve before backfill stops
+    overload: str = "none"      # default overload policy for requests whose
+                                # on_overload is None: 'none'|'reject'|
+                                # 'degrade'|'preempt'
+    default_deadline: Optional[float] = None  # deadline (ticks) for requests
+                                              # that set none themselves
+    preemption_budget: int = 1  # max swap-outs per tick
 
     def __post_init__(self):
         if self.policy not in ("priority", "fifo"):
             raise ValueError("policy must be 'priority' or 'fifo'")
+        if self.overload not in OVERLOAD_POLICIES:
+            raise ValueError(
+                f"overload must be one of {OVERLOAD_POLICIES}")
+        if self.default_deadline is not None and self.default_deadline < 0:
+            raise ValueError("default_deadline must be >= 0 ticks")
+        if self.preemption_budget < 0:
+            raise ValueError("preemption_budget must be >= 0")
+
+
+@dataclasses.dataclass
+class QueueEntry:
+    """One queued unit of work: a fresh request, or a preempted job's
+    checkpoint waiting to resume (``swapped`` set)."""
+
+    req: SARequest
+    submit_tick: int            # original submission tick — the aging base
+                                # survives preemption, so swapped jobs age
+                                # ahead of newer arrivals
+    swapped: Optional[SwappedJob] = None
+
+
+@dataclasses.dataclass
+class AdmissionPlan:
+    """One tick's admission decisions, in execution order for the engine:
+    reject, then evict (frees slots), then place."""
+
+    admitted: List[Tuple[QueueEntry, int]] = dataclasses.field(
+        default_factory=list)   # (entry, granted_slots)
+    evict: List[int] = dataclasses.field(default_factory=list)  # rids
+    rejected: List[QueueEntry] = dataclasses.field(default_factory=list)
 
 
 class AdmissionScheduler:
-    """FIFO/priority queue with aging and bounded backfill."""
+    """FIFO/priority queue with aging, bounded backfill and SLO policies."""
 
-    def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
-        self.cfg = cfg
-        self._queue: List[Tuple[SARequest, int]] = []  # (request, submit_tick)
+    def __init__(self, cfg: Optional[SchedulerConfig] = None):
+        # A fresh default per instance: a shared default-argument config
+        # instance would make every scheduler alias one object.
+        self.cfg = SchedulerConfig() if cfg is None else cfg
+        self._queue: List[QueueEntry] = []
 
     def __len__(self) -> int:
         return len(self._queue)
 
     @property
     def pending(self) -> List[SARequest]:
-        return [r for r, _ in self._queue]
+        return [e.req for e in self._queue]
 
     def submit(self, req: SARequest, tick: int) -> None:
-        self._queue.append((req, tick))
+        self._queue.append(QueueEntry(req, tick))
+
+    def requeue(self, swapped: SwappedJob) -> None:
+        """Put a preempted job back in the queue to await resume."""
+        self._queue.append(QueueEntry(swapped.job.req,
+                                      swapped.job.submit_tick, swapped))
+
+    # ----------------------------------------------------------- policy bits
+    def overload_policy(self, req: SARequest) -> str:
+        return req.on_overload if req.on_overload is not None \
+            else self.cfg.overload
+
+    def deadline_of(self, req: SARequest) -> Optional[float]:
+        return req.deadline if req.deadline is not None \
+            else self.cfg.default_deadline
 
     def effective_priority(self, req: SARequest, submit_tick: int,
                            tick: int) -> float:
         return req.priority + self.cfg.aging * (tick - submit_tick)
 
-    def _ordered(self, tick: int) -> List[Tuple[SARequest, int]]:
+    def _ordered(self, tick: int) -> List[QueueEntry]:
         if self.cfg.policy == "fifo":
             return list(self._queue)
         # Stable sort: ties broken by submission order (list order).
-        return sorted(self._queue,
-                      key=lambda e: -self.effective_priority(e[0], e[1], tick))
+        return sorted(self._queue, key=lambda e: -self.effective_priority(
+            e.req, e.submit_tick, tick))
 
-    def admit(self, free_slots: int, chains_per_slot: int,
-              tick: int) -> List[Tuple[SARequest, int]]:
-        """Pick requests to place into ``free_slots`` slots this tick.
+    def _expired(self, entry: QueueEntry, tick: int) -> bool:
+        """Deadline fast-fail: reject/degrade-class requests are dropped the
+        first admit scan after their queueing delay exceeds the deadline.
+        Swapped jobs are admitted work and are never dropped."""
+        if entry.swapped is not None:
+            return False
+        if self.overload_policy(entry.req) not in ("reject", "degrade"):
+            return False
+        deadline = self.deadline_of(entry.req)
+        return deadline is not None and tick - entry.submit_tick > deadline
 
-        Returns [(request, submit_tick)] in admission order and removes them
-        from the queue.  Never over-commits the pool.
+    # ------------------------------------------------------------- admission
+    def admit(self, free_slots: int, chains_per_slot: int, tick: int,
+              active: Sequence[ActiveJob] = ()) -> AdmissionPlan:
+        """Plan this tick's admissions into ``free_slots`` slots.
+
+        ``active`` is the engine's in-residence job list — the eviction
+        candidates for the preempt policy.  Returns an
+        :class:`AdmissionPlan`; planned entries are removed from the queue
+        (the engine re-queues evicted jobs via :meth:`requeue`).  The plan
+        never over-commits: granted slots <= free + evicted slots.
         """
-        admitted: List[Tuple[SARequest, int]] = []
+        plan = AdmissionPlan()
+        # Eviction candidates, cheapest first: lowest effective priority,
+        # ties broken by most-recent admission (LIFO — the job that has
+        # annealed least loses least progress).
+        candidates = sorted(
+            active, key=lambda j: (self.effective_priority(
+                j.req, j.submit_tick, tick), -j.start_tick, j.rid))
+        budget = self.cfg.preemption_budget
+        # Slots freed by this pass's evictions are tracked separately from
+        # genuinely-free slots: surplus eviction capacity may only seat
+        # entries whose effective priority is >= that of every job evicted
+        # this tick (``evict_floor``) — otherwise evicting a mid-priority
+        # job for an urgent one could hand its leftover slots to a
+        # *lower*-priority queued request in the same pass, a priority
+        # inversion against the victim.
+        free = free_slots
+        evicted_free = 0
+        evict_floor = float("-inf")      # max eff among this pass's victims
         blocked_head = False
         for entry in self._ordered(tick):
-            req, sub = entry
-            need = req.slots_needed(chains_per_slot)
-            if need <= free_slots and not blocked_head:
-                admitted.append(entry)
-                free_slots -= need
-            elif need > free_slots and not blocked_head:
-                # Head-of-line can't fit. Backfill behind it only while it
-                # has not starved past patience.
-                if tick - sub > self.cfg.hol_patience:
-                    blocked_head = True
-        taken = {id(e) for e in admitted}
+            if self._expired(entry, tick):
+                plan.rejected.append(entry)
+                continue
+            req = entry.req
+            need = entry.swapped.n_slots if entry.swapped is not None \
+                else req.slots_needed(chains_per_slot)
+            if blocked_head:
+                continue
+            eff = self.effective_priority(req, entry.submit_tick, tick)
+            outranks_victims = eff >= evict_floor
+            usable = free + (evicted_free if outranks_victims else 0)
+            if need <= usable:
+                plan.admitted.append((entry, need))
+                free, evicted_free = self._consume(need, free, evicted_free)
+                continue
+            placed = False
+            policy = self.overload_policy(req)
+            if policy == "preempt" and budget > 0 and candidates:
+                placed, surplus, vmax, budget = self._try_preempt(
+                    plan, entry, need, usable, budget, candidates, tick)
+                if placed:
+                    # The entry drained `usable` and the evictions' gain
+                    # down to `surplus` slots, which stay in the
+                    # eviction-reserved pool (floored at the priciest
+                    # victim so far — conservative across rounds).
+                    if outranks_victims:
+                        free, evicted_free = 0, surplus
+                    else:
+                        free, evicted_free = 0, evicted_free + surplus
+                    evict_floor = max(evict_floor, vmax)
+            if not placed and policy == "degrade" and entry.swapped is None:
+                floor_slots = req.slots_floor(chains_per_slot)
+                if floor_slots <= usable:  # grant all that fits, down to floor
+                    plan.admitted.append((entry, usable))
+                    free, evicted_free = self._consume(usable, free,
+                                                       evicted_free)
+                    placed = True
+            if not placed and tick - entry.submit_tick > self.cfg.hol_patience:
+                # Head-of-line starved past patience: stop backfilling so
+                # freed slots can accumulate for it.
+                blocked_head = True
+        taken = {id(e) for e, _ in plan.admitted}
+        taken.update(id(e) for e in plan.rejected)
         self._queue = [e for e in self._queue if id(e) not in taken]
-        return admitted
+        return plan
+
+    @staticmethod
+    def _consume(need: int, free: int, evicted_free: int):
+        """Drain the plain free pool first, then eviction-freed slots."""
+        from_free = min(free, need)
+        return free - from_free, evicted_free - (need - from_free)
+
+    def _try_preempt(self, plan: AdmissionPlan, entry: QueueEntry, need: int,
+                     usable: int, budget: int, candidates: List[ActiveJob],
+                     tick: int):
+        """Evict strictly-lower-effective-priority jobs until ``entry``
+        fits, if the preemption budget allows; all-or-nothing.  Returns
+        (placed, surplus slots freed beyond need, max victim effective
+        priority, remaining budget)."""
+        mine = self.effective_priority(entry.req, entry.submit_tick, tick)
+        victims: List[ActiveJob] = []
+        gain = 0
+        floor = float("-inf")
+        for job in candidates:
+            if usable + gain >= need or len(victims) >= budget:
+                break
+            eff = self.effective_priority(job.req, job.submit_tick, tick)
+            if eff >= mine:
+                break               # sorted ascending: no cheaper victims left
+            victims.append(job)
+            gain += len(job.slots)
+            floor = max(floor, eff)
+        if usable + gain < need:
+            return False, 0, floor, budget  # insufficient: evict nothing
+        for job in victims:
+            plan.evict.append(job.rid)
+            candidates.remove(job)
+        plan.admitted.append((entry, need))
+        return True, usable + gain - need, floor, budget - len(victims)

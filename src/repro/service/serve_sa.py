@@ -21,6 +21,7 @@ Usage::
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 
 import numpy as np
@@ -51,9 +52,19 @@ flag groups:
                   size; multiple of 8 on TPU), --variant (delta = O(1)
                   incremental evaluation, full = paper-faithful O(dim)).
   admission       --policy priority (aged, default) | fifo.
+  overload / SLO  --overload-policy none (default) | reject (drop a
+                  request once it queues past --deadline ticks) | degrade
+                  (admit with fewer chains when the pool is short, floor =
+                  one slot, with the --deadline reject backstop) | preempt
+                  (swap out the lowest-effective-priority active jobs —
+                  bounded by --preemption-budget per tick — to admit an
+                  urgent arrival; swapped jobs resume bit-exactly).
+                  Per-request classes can override via SARequest.on_overload.
   arrivals        --arrivals batch (closed-loop, everything at t=0,
                   default) | poisson (open-loop at --rate requests/tick,
-                  seeded by --arrival-seed — deterministic timeline).
+                  seeded by --arrival-seed — deterministic timeline) |
+                  bursty (groups of --burst requests arrive together at
+                  the same mean rate — the overload stressor).
                   --max-ticks bounds the run either way.
   reporting       --check (default) re-runs every request standalone and
                   exits 1 unless all champions are bit-exact — the
@@ -86,9 +97,12 @@ def make_mix(n_requests: int, chains_per_slot: int, seed: int = 0,
     return reqs
 
 
-def make_arrivals(reqs, kind: str, rate: float, seed: int) -> ArrivalProcess:
+def make_arrivals(reqs, kind: str, rate: float, seed: int,
+                  burst: int = 4) -> ArrivalProcess:
     if kind == "poisson":
         return ArrivalProcess.poisson(reqs, rate=rate, seed=seed)
+    if kind == "bursty":
+        return ArrivalProcess.bursty(reqs, rate=rate, burst=burst, seed=seed)
     return ArrivalProcess.batch(reqs)
 
 
@@ -123,13 +137,25 @@ def main(argv=None):
                     help="admission policy (priority is aged)")
     ap.add_argument("--max-slots-per-req", type=int, default=2,
                     help="largest request footprint in the mix, in slots")
+    ap.add_argument("--overload-policy", default="none",
+                    choices=["none", "reject", "degrade", "preempt"],
+                    help="scheduler-wide overload policy (SLO admission "
+                         "control); per-request on_overload overrides it")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="queueing-delay SLO in ticks for reject/degrade "
+                         "(default: none — requests queue forever)")
+    ap.add_argument("--preemption-budget", type=int, default=1,
+                    help="max preemptions (swap-outs) per tick")
     ap.add_argument("--arrivals", default="batch",
-                    choices=["batch", "poisson"],
-                    help="closed-loop batch or open-loop Poisson stream")
+                    choices=["batch", "poisson", "bursty"],
+                    help="closed-loop batch, open-loop Poisson stream, or "
+                         "bursty overload stream")
     ap.add_argument("--rate", type=float, default=0.5,
-                    help="offered load for --arrivals poisson, requests/tick")
+                    help="offered load for open-loop arrivals, requests/tick")
+    ap.add_argument("--burst", type=int, default=4,
+                    help="burst size for --arrivals bursty")
     ap.add_argument("--arrival-seed", type=int, default=0,
-                    help="seed for the Poisson arrival timeline")
+                    help="seed for the arrival timeline")
     ap.add_argument("--max-ticks", type=int, default=None,
                     help="hard tick budget (default: run to drain)")
     ap.add_argument("--json", dest="as_json", action="store_true",
@@ -139,37 +165,55 @@ def main(argv=None):
                     help="compare every champion vs a standalone run")
     ap.add_argument("--no-check", dest="check", action="store_false")
     args = ap.parse_args(argv)
+    if args.overload_policy in ("reject", "degrade") and args.deadline is None:
+        # Without a deadline the expiry check can never fire, silently
+        # degenerating to --overload-policy none.
+        ap.error(f"--overload-policy {args.overload_policy} requires "
+                 "--deadline (the queueing-delay SLO it enforces)")
 
     cfg = EngineConfig(
         n_slots=args.slots, chains_per_slot=args.chains_per_slot,
         variant=args.variant,
-        scheduler=SchedulerConfig(policy=args.policy))
+        scheduler=SchedulerConfig(policy=args.policy,
+                                  overload=args.overload_policy,
+                                  default_deadline=args.deadline,
+                                  preemption_budget=args.preemption_budget))
     engine = SAServeEngine(cfg)
     reqs = make_mix(args.requests, args.chains_per_slot, seed=args.seed,
                     max_slots_per_req=min(args.max_slots_per_req, args.slots))
     arrivals = make_arrivals(reqs, args.arrivals, args.rate,
-                             args.arrival_seed)
+                             args.arrival_seed, burst=args.burst)
 
     results = engine.run_stream(arrivals, max_ticks=args.max_ticks)
     stats = engine.stats()
     lat = latency_summary(results, ticks=engine.tick_count)
 
     by_id = {r.req_id: r for r in results}
-    served = [req for req in reqs if req.req_id in by_id]
+    # Requests with a terminal result, split by status; rejected requests
+    # carry no solution to compare.
+    served = [req for req in reqs
+              if req.req_id in by_id and by_id[req.req_id].completed]
+    rejected_ids = sorted(r.req_id for r in results if not r.completed)
     unserved = [req.req_id for req in reqs if req.req_id not in by_id]
     n_exact = 0
     mismatched = {}             # req_id -> report line
     if args.check:
         for req in served:
-            solo = run_standalone(req, cfg)
-            if by_id[req.req_id].f_best == solo.f_best:
+            res = by_id[req.req_id]
+            # A degraded admission is bit-exact vs a standalone run at the
+            # *granted* chain count (same logical chain indices and RNG).
+            solo_req = req if res.granted_chains >= req.n_chains else \
+                dataclasses.replace(req, n_chains=res.granted_chains)
+            solo = run_standalone(solo_req, cfg)
+            if res.f_best == solo.f_best:
                 n_exact += 1
             else:
                 mismatched[req.req_id] = (
-                    f"req{req.req_id}: packed {by_id[req.req_id].f_best:+.5f}"
+                    f"req{req.req_id}: packed {res.f_best:+.5f}"
                     f" != standalone {solo.f_best:+.5f}")
     # The check must not pass vacuously: a truncated run (--max-ticks) that
-    # served nothing is a coverage failure, not a success.
+    # served nothing is a coverage failure, not a success.  Rejection is a
+    # terminal status, not a coverage hole.
     check_failed = args.check and (n_exact != len(served) or unserved)
 
     if args.as_json:
@@ -178,16 +222,21 @@ def main(argv=None):
                 "requests": args.requests, "slots": args.slots,
                 "chains_per_slot": args.chains_per_slot,
                 "variant": args.variant, "policy": args.policy,
+                "overload_policy": args.overload_policy,
+                "deadline": args.deadline,
+                "preemption_budget": args.preemption_budget,
                 "seed": args.seed, "arrivals": args.arrivals,
-                "rate": args.rate, "arrival_seed": args.arrival_seed,
+                "rate": args.rate, "burst": args.burst,
+                "arrival_seed": args.arrival_seed,
             },
             "stats": stats,
             "latency": lat,
-            "results": [by_id[r.req_id].to_dict()
-                        for r in sorted(served, key=lambda q: q.req_id)],
+            "results": [r.to_dict()
+                        for r in sorted(results, key=lambda r: r.req_id)],
         }
         if args.check:
             doc["check"] = {"bit_exact": n_exact, "served": len(served),
+                            "rejected_req_ids": rejected_ids,
                             "unserved_req_ids": unserved,
                             "mismatches": sorted(mismatched.values())}
         print(json.dumps(_jsonable(doc), indent=2, sort_keys=True,
@@ -206,16 +255,31 @@ def main(argv=None):
                   f"ttft p50/p99 = {lat['ttft_p50']:.1f}/"
                   f"{lat['ttft_p99']:.1f} ticks, "
                   f"goodput {lat['goodput_req_per_tick']:.3f} req/tick")
+        if args.overload_policy != "none" or stats["rejected"] \
+                or stats["preemptions"]:
+            print(f"[serve_sa] overload policy '{args.overload_policy}': "
+                  f"{stats['rejected']} rejected, "
+                  f"{stats['preemptions']} preemptions")
         for req in served:
             res = by_id[req.req_id]
             line = (f"  req{req.req_id:>3} {req.objective:<10} d={req.dim:<3} "
                     f"f_best={res.f_best:+.5f} levels={res.levels_run} "
                     f"wait={res.queue_delay_ticks:.1f}t "
                     f"[{res.finish_reason}]")
+            if res.n_preemptions:
+                line += f" preempted x{res.n_preemptions}"
+            if res.degraded:
+                line += (f" degraded {res.granted_chains}/"
+                         f"{res.requested_chains} chains")
             if args.check:
                 line += ("  != standalone" if req.req_id in mismatched
                          else "  == standalone")
             print(line)
+        for rid in rejected_ids:
+            res = by_id[rid]
+            print(f"  req{rid:>3} {res.objective:<10} d={res.dim:<3} "
+                  f"REJECTED at tick {res.finish_tick} "
+                  f"(queued {res.finish_tick - res.submit_tick}t)")
         if args.check:
             tail = f" ({len(unserved)} never served)" if unserved else ""
             print(f"[serve_sa] {n_exact}/{len(served)} champions bit-exact "

@@ -24,7 +24,15 @@ from repro.service.request import SARequest
 
 @dataclasses.dataclass
 class ActiveJob:
-    """Runtime state of an admitted request (one per tenant in residence)."""
+    """Runtime state of an admitted request (one per tenant in residence).
+
+    Every field is host-side and serializable, so a job can be checkpointed
+    into a :class:`SwappedJob` (preemption) and resumed later bit-exactly:
+    the RNG is counter-based on ``(seed, chain_base + c, steps_done)``, so
+    slot state + the two cursors (``steps_done``, ``level``/``T``) are the
+    *complete* trajectory state.  Mutable per-job fields must use
+    ``default_factory`` — instances are long-lived and must never alias.
+    """
 
     req: SARequest
     rid: int                    # segment id in [0, n_slots): tenant mask key
@@ -37,7 +45,8 @@ class ActiveJob:
     best_f: float = float("inf")
     submit_tick: int = 0
     start_tick: int = 0
-    granted_chains: int = 0     # chain budget rounded up to whole slots
+    granted_chains: int = 0     # chains actually granted (may be < requested
+                                # under the 'degrade' overload policy)
     # Lifecycle timestamps (see docs/serving.md): arrival on the tick axis
     # (fractional under open-loop Poisson load), the rest wall-clock seconds
     # since the engine epoch.  first_tick is the tick of the job's first
@@ -47,6 +56,33 @@ class ActiveJob:
     submit_wall: float = float("nan")
     admit_wall: float = float("nan")
     first_tick_wall: float = float("nan")
+    # Preemption lifecycle: ticks at which the job was swapped out / back
+    # in, and the per-level champion trajectory (best_f after each completed
+    # temperature level — the bit-exactness witness for resume).
+    preempted_ticks: List[int] = dataclasses.field(default_factory=list)
+    resumed_ticks: List[int] = dataclasses.field(default_factory=list)
+    history: List[float] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class SwappedJob:
+    """Host-side checkpoint of a preempted :class:`ActiveJob`.
+
+    Wraps the job itself (all cursors, champion state and lifecycle stamps
+    travel with it — nothing is copied out, so new ActiveJob fields can
+    never be forgotten here) plus its chain blocks in chain-offset order.
+    ``chain_base`` is *not* stored: it is recomputed as ``j * chains_per
+    slot`` on restore, which is exactly the placement-invariant RNG base —
+    the resumed job may land on different physical slots and still produce
+    a bit-identical trajectory.
+    """
+
+    job: ActiveJob
+    blocks: List[np.ndarray]    # one (chains_per_slot, dim) block per slot
+
+    @property
+    def n_slots(self) -> int:
+        return len(self.blocks)
 
 
 class SlotPool:
@@ -85,26 +121,57 @@ class SlotPool:
         self._x[slot] = x
 
     # ---------------------------------------------------------- lifecycle
-    def assign(self, rid: int, req: SARequest) -> List[int]:
+    def assign(self, rid: int, req: SARequest,
+               n_slots: Optional[int] = None) -> List[int]:
         """Pack ``req`` into free slots; returns the slot list (chain order).
 
         Splits the request's initial states into ``chains_per_slot`` blocks:
         slot j of the request holds chains [j*cps, (j+1)*cps) and carries
         ``chain_base = j*cps`` — the placement-invariant RNG index base.
+        ``n_slots`` overrides the full-width footprint (the 'degrade'
+        overload policy admits with fewer slots, down to the request's
+        ``min_chains`` floor); the trajectory is then bit-exact with a
+        standalone run of the same request at the granted chain count.
         """
+        need = req.slots_needed(self.chains_per_slot) \
+            if n_slots is None else n_slots
         cps = self.chains_per_slot
-        need = req.slots_needed(cps)
+        x0 = req.sample_x0(need * cps)  # budget rounded up to whole slots
+        return self._place(rid, req,
+                           [x0[j * cps:(j + 1) * cps] for j in range(need)])
+
+    def restore(self, rid: int, blocks: List[np.ndarray]) -> List[int]:
+        """Swap a checkpointed job's blocks back in (see :class:`SwappedJob`).
+
+        The physical slots may differ from the ones held before preemption;
+        ``chain_base`` is re-derived from block order, which is all the RNG
+        keys off — resume is placement-invariant like first admission.
+        """
+        return self._place(rid, None, [b.copy() for b in blocks])
+
+    def _place(self, rid: int, req: Optional[SARequest],
+               blocks: List[np.ndarray]) -> List[int]:
+        need = len(blocks)
         free = self.free_slots()
         if need > len(free):
-            raise RuntimeError(
-                f"request {req.req_id} needs {need} slots, {len(free)} free")
+            who = f"request {req.req_id}" if req is not None else f"rid {rid}"
+            raise RuntimeError(f"{who} needs {need} slots, {len(free)} free")
         chosen = free[:need]
-        x0 = req.sample_x0(need * cps)  # budget rounded up to whole slots
         for j, s in enumerate(chosen):
             self.owner[s] = rid
-            self.chain_base[s] = np.uint32(j * cps)
-            self._x[s] = x0[j * cps:(j + 1) * cps]
+            self.chain_base[s] = np.uint32(j * self.chains_per_slot)
+            self._x[s] = blocks[j]
         return chosen
+
+    def checkpoint(self, rid: int) -> List[np.ndarray]:
+        """Copy ``rid``'s chain blocks out, in chain-offset order.
+
+        Host-side snapshot for preemption: block j holds chains
+        [j*cps, (j+1)*cps) of the request regardless of which physical
+        slots it occupied.
+        """
+        slots = sorted(self.slots_of(rid), key=lambda s: self.chain_base[s])
+        return [self.get_block(s).copy() for s in slots]
 
     def release(self, rid: int) -> None:
         for s in self.slots_of(rid):

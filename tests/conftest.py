@@ -1,0 +1,28 @@
+"""Test tiering: tier-1 (`python -m pytest -x -q`) stays fast by skipping
+tests marked ``slow``; the nightly CI tier runs them with ``--runslow``
+(or ``RUN_SLOW=1`` in the environment)."""
+import os
+
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="run tests marked 'slow' (the nightly serving/property tier)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running serving/property tests, run nightly with "
+        "--runslow (skipped in tier-1)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow") or os.environ.get("RUN_SLOW"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow tier: pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

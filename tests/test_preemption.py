@@ -1,0 +1,355 @@
+"""Preemptive scheduling + SLO-aware admission control.
+
+Covers the PR-3 guarantees end to end:
+
+* swap-out/swap-in is **bit-exact**: a request preempted (at *every*
+  temperature level of its ladder) and later resumed produces the same
+  best value, best x and per-level champion trajectory as an
+  uninterrupted standalone run;
+* scheduler-driven preemption: an urgent 'preempt'-class arrival evicts
+  the lowest-effective-priority tenant(s), bounded by the preemption
+  budget, and the victim resumes and completes bit-exactly;
+* under a seeded 3x-saturating Poisson load the 'reject' and 'degrade'
+  policies keep p99 queueing delay bounded by the deadline SLO and the
+  queue itself bounded, while the no-policy baseline grows without bound;
+* swap-out/swap-in adds **no dispatch groups**: the PR-2 compile-count
+  guarantee extends to a preempt/resume schedule.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.service import (ArrivalProcess, EngineConfig, SARequest,
+                           SAServeEngine, SchedulerConfig, run_standalone)
+
+CPS = 8
+
+
+def _req(req_id, **kw):
+    kw.setdefault("objective", "rastrigin")
+    kw.setdefault("dim", 4)
+    kw.setdefault("n_chains", CPS)
+    kw.setdefault("T0", 50.0)
+    kw.setdefault("T_min", 1.0)
+    kw.setdefault("rho", 0.55)   # 7-level ladder
+    kw.setdefault("N", 10)
+    return SARequest(req_id=req_id, seed=100 + req_id, **kw)
+
+
+def _cfg(n_slots=4, **kw):
+    return EngineConfig(n_slots=n_slots, chains_per_slot=CPS,
+                        use_pallas=False, **kw)
+
+
+def _assert_bit_exact(res, solo):
+    assert res.f_best == solo.f_best
+    np.testing.assert_array_equal(res.x_best, solo.x_best)
+    assert res.levels_run == solo.levels_run
+    assert res.champion_history == solo.champion_history
+
+
+# ------------------------------------------------------- bit-exact resume
+def test_preempt_resume_bit_exact_at_every_level():
+    """Acceptance criterion: preempt at every temperature level of a short
+    ladder; the resumed result (best value, best x, champion trajectory)
+    is bit-exact with the uninterrupted standalone run.  A high-priority
+    filler occupies the single slot while the victim is swapped out, so
+    the resume really happens later and on re-assigned slots."""
+    cfg = _cfg(n_slots=1)
+    victim = _req(0)
+    solo = run_standalone(victim, cfg)
+    assert solo.levels_run == victim.n_levels > 2
+    for level in range(1, victim.n_levels):
+        engine = SAServeEngine(cfg)
+        engine.submit(victim)
+        for _ in range(level):
+            engine.tick()
+        assert engine.preempt(victim.req_id)
+        # Filler takes the freed slot (higher priority than the aged
+        # victim), forcing a real swap gap before resume.
+        engine.submit(_req(1, priority=50, rho=0.5, T0=8.0))
+        results = {r.req_id: r for r in engine.run(max_ticks=200)}
+        res = results[victim.req_id]
+        assert res.preempted_ticks == [level]
+        assert len(res.resumed_ticks) == 1
+        assert res.resumed_ticks[0] > level  # sat out at least one tick
+        _assert_bit_exact(res, solo)
+        # The filler is untouched by hosting a swapped neighbour.
+        _assert_bit_exact(results[1], run_standalone(
+            _req(1, priority=50, rho=0.5, T0=8.0), cfg))
+
+
+def test_preempt_noop_for_unknown_or_queued_request():
+    engine = SAServeEngine(_cfg(n_slots=1))
+    assert not engine.preempt(123)           # never submitted
+    engine.submit(_req(0))
+    assert not engine.preempt(0)             # queued, not yet active
+    engine.tick()
+    assert engine.preempt(0)                 # now active -> swapped
+    assert not engine.preempt(0)             # already swapped out
+
+
+def test_double_preempt_same_request_resumes_twice():
+    cfg = _cfg(n_slots=1)
+    victim = _req(0)
+    engine = SAServeEngine(cfg)
+    engine.submit(victim)
+    engine.tick()
+    assert engine.preempt(0)
+    engine.tick()                            # resumes (pool free)
+    engine.tick()
+    assert engine.preempt(0)
+    res = engine.run(max_ticks=100)[0]
+    assert len(res.preempted_ticks) == 2
+    assert len(res.resumed_ticks) == 2
+    _assert_bit_exact(res, run_standalone(victim, cfg))
+
+
+# ------------------------------------------- scheduler-driven preemption
+def test_urgent_request_preempts_lowest_priority_tenant():
+    """'preempt'-class arrival evicts the cheapest active job, runs at
+    once, and the victim resumes bit-exactly after it."""
+    cfg = _cfg(n_slots=2)
+    low = _req(0, n_chains=2 * CPS, priority=0)      # fills the pool
+    urgent = _req(1, priority=9, on_overload="preempt",
+                  rho=0.5, T0=8.0)                   # 3-level ladder
+    engine = SAServeEngine(cfg)
+    engine.submit(low)
+    engine.tick()
+    engine.tick()
+    engine.submit(urgent)
+    results = {r.req_id: r for r in engine.run(max_ticks=200)}
+    assert results[0].preempted_ticks == [2]
+    assert len(results[0].resumed_ticks) == 1
+    # The urgent request never queued behind the low-priority ladder.
+    assert results[1].queue_delay_ticks <= 1.0
+    assert results[1].preempted_ticks == []
+    _assert_bit_exact(results[0], run_standalone(low, cfg))
+    _assert_bit_exact(results[1], run_standalone(urgent, cfg))
+
+
+def test_preemption_budget_bounds_evictions_per_tick():
+    """budget=1: an urgent two-slot request facing two one-slot tenants
+    must not evict both in one tick — it waits until eviction + a free
+    slot suffice, and never evicts uselessly."""
+    cfg = _cfg(n_slots=2,
+               scheduler=SchedulerConfig(preemption_budget=1, aging=0.0))
+    engine = SAServeEngine(cfg)
+    engine.submit(_req(0, priority=0))
+    engine.submit(_req(1, priority=0))
+    engine.tick()                                    # both active
+    engine.submit(_req(2, priority=9, n_chains=2 * CPS,
+                       on_overload="preempt"))
+    engine.tick()
+    # All-or-nothing: one eviction cannot seat a two-slot request, so
+    # nothing was preempted and both tenants still run.
+    assert engine.preemptions == 0
+    assert engine.n_active == 2
+    results = {r.req_id: r for r in engine.run(max_ticks=300)}
+    assert set(results) == {0, 1, 2}
+    budget2 = _cfg(n_slots=2,
+                   scheduler=SchedulerConfig(preemption_budget=2, aging=0.0))
+    engine = SAServeEngine(budget2)
+    engine.submit(_req(0, priority=0))
+    engine.submit(_req(1, priority=0))
+    engine.tick()
+    engine.submit(_req(2, priority=9, n_chains=2 * CPS,
+                       on_overload="preempt"))
+    engine.tick()
+    assert engine.preemptions == 2                   # budget allows the pair
+    results = {r.req_id: r for r in engine.run(max_ticks=300)}
+    for i, req in enumerate([_req(0, priority=0), _req(1, priority=0)]):
+        assert results[i].n_preemptions == 1
+        _assert_bit_exact(results[i], run_standalone(req, budget2))
+
+
+def test_eviction_surplus_never_seats_lower_priority_work_same_tick():
+    """Evicting a 2-slot mid-priority job to seat a 1-slot urgent request
+    frees one surplus slot; handing it to a *lower*-priority queued
+    request in the same pass would invert priority against the victim, so
+    it must idle that tick instead."""
+    cfg = _cfg(n_slots=2, scheduler=SchedulerConfig(aging=0.0))
+    engine = SAServeEngine(cfg)
+    victim = _req(0, n_chains=2 * CPS, priority=5)
+    engine.submit(victim)
+    engine.tick()
+    engine.submit(_req(1, priority=9, on_overload="preempt",
+                       rho=0.5, T0=8.0))              # urgent, 1 slot
+    engine.submit(_req(2, priority=0, rho=0.5, T0=8.0))  # low, 1 slot
+    engine.tick()
+    active = {j.req.req_id for j in engine.rids.jobs.values()}
+    assert active == {1}, "surplus eviction slot leaked to lower priority"
+    assert engine.preemptions == 1
+    results = {r.req_id: r for r in engine.run(max_ticks=300)}
+    assert set(results) == {0, 1, 2}
+    _assert_bit_exact(results[0], run_standalone(victim, cfg))
+
+
+def test_preempt_requires_strictly_lower_effective_priority():
+    """Equal-priority arrivals never evict each other (no thrash)."""
+    cfg = _cfg(n_slots=1, scheduler=SchedulerConfig(aging=0.0))
+    engine = SAServeEngine(cfg)
+    engine.submit(_req(0, priority=5))
+    engine.tick()
+    engine.submit(_req(1, priority=5, on_overload="preempt"))
+    for _ in range(3):
+        engine.tick()
+    assert engine.preemptions == 0
+
+
+# ------------------------------------------------- SLO admission control
+def _overload_mix(n, w=1, **kw):
+    """Uniform short-ladder requests: width w slots, 3 levels each."""
+    return [SARequest(req_id=i, objective="rastrigin", dim=4,
+                      n_chains=w * CPS, T0=8.0, T_min=1.0, rho=0.5, N=10,
+                      seed=50 + i, **kw) for i in range(n)]
+
+
+def _run_overloaded(overload, deadline, n_slots=4, w=1, ticks=60,
+                    factor=3.0, **req_kw):
+    """Seeded Poisson stream at ``factor`` x the pool's saturating load."""
+    levels = 3                      # rho=0.5: 8 -> 4 -> 2 -> 1
+    rate = factor * n_slots / (w * levels)
+    cfg = _cfg(n_slots=n_slots, scheduler=SchedulerConfig(
+        overload=overload, default_deadline=deadline))
+    engine = SAServeEngine(cfg)
+    reqs = _overload_mix(int(rate * ticks), w=w, **req_kw)
+    engine.run_stream(ArrivalProcess.poisson(reqs, rate=rate, seed=11),
+                      max_ticks=ticks)
+    return engine, reqs
+
+
+def test_reject_policy_bounds_queue_and_p99_baseline_does_not():
+    """Acceptance criterion: at 3x saturating load the 'reject' policy
+    bounds both p99 queueing delay (by the deadline SLO) and the queue
+    itself, while the no-policy baseline's queue and delays grow with the
+    horizon."""
+    deadline = 6.0
+    base, _ = _run_overloaded("none", None)
+    rej, _ = _run_overloaded("reject", deadline)
+    base_done = [r for r in base.results if r.completed]
+    rej_done = [r for r in rej.results if r.completed]
+    assert base.rejections == 0 and rej.rejections > 0
+    # Unbounded baseline: a backlog of the order of the excess offered
+    # load (2/3 of arrivals), and queueing delay that keeps growing.
+    assert len(base.scheduler) > 50
+    base_qd = [r.queue_delay_ticks for r in base_done]
+    assert max(base_qd) > 5 * deadline
+    # Bounded under reject: every admitted request met its SLO (the +1 is
+    # the arrival->submit-tick quantization), and the queue holds at most
+    # the arrivals of one deadline window.
+    rej_qd = [r.queue_delay_ticks for r in rej_done]
+    assert max(rej_qd) <= deadline + 1
+    assert float(np.percentile(rej_qd, 99)) <= deadline + 1
+    assert len(rej.scheduler) < 50   # ~rate * (deadline + 1) worst case
+    # Load shedding, not collapse: goodput is no worse than the baseline.
+    assert len(rej_done) >= len(base_done)
+    # Rejected results are typed terminals with no solution.
+    rejected = [r for r in rej.results if not r.completed]
+    assert rejected and all(r.finish_reason == "rejected" for r in rejected)
+    assert all(r.x_best is None and r.granted_chains == 0 for r in rejected)
+    assert all(np.isnan(r.queue_delay_ticks) for r in rejected)
+
+
+def test_degrade_policy_grants_fewer_chains_and_bounds_queue():
+    """'degrade' admits at reduced width (down to min_chains) when the
+    pool is short: degraded requests exist, match a standalone run at the
+    granted chain count bit-exactly, and the deadline backstop keeps the
+    queue bounded at 3x saturating load."""
+    deadline = 6.0
+    engine, reqs = _run_overloaded("degrade", deadline, n_slots=5, w=2,
+                                   min_chains=CPS)
+    done = [r for r in engine.results if r.completed]
+    degraded = [r for r in done if r.degraded]
+    assert degraded, "overload never triggered a degraded admission"
+    cfg = _cfg(n_slots=5, scheduler=SchedulerConfig(
+        overload="degrade", default_deadline=deadline))
+    by_id = {q.req_id: q for q in reqs}
+    for res in degraded[:3]:
+        req = by_id[res.req_id]
+        assert CPS <= res.granted_chains < req.n_chains  # floor respected
+        solo = run_standalone(
+            dataclasses.replace(req, n_chains=res.granted_chains), cfg)
+        _assert_bit_exact(res, solo)
+    qd = [r.queue_delay_ticks for r in done]
+    assert max(qd) <= deadline + 1
+    assert len(engine.scheduler) < 50
+
+
+def test_deadline_zero_is_admit_now_or_never():
+    """deadline=0 under 'reject': a request either takes a free slot on
+    its first admit scan or fast-fails on the next."""
+    cfg = _cfg(n_slots=1, scheduler=SchedulerConfig(
+        overload="reject", default_deadline=0.0))
+    engine = SAServeEngine(cfg)
+    engine.submit(_req(0))
+    engine.tick()                    # admitted into the empty pool
+    engine.submit(_req(1))
+    engine.tick()                    # pool full: still queued (delay == 0)
+    engine.tick()                    # delay 1 > 0 -> rejected
+    assert engine.rejections == 1
+    res = {r.req_id: r for r in engine.run(max_ticks=100)}
+    assert res[0].completed
+    assert res[1].status == "rejected" and res[1].finish_tick == 2
+
+
+def test_swapped_jobs_are_never_rejected():
+    """A preempted job is admitted work: even under a strict deadline it
+    resumes (late) instead of being dropped."""
+    cfg = _cfg(n_slots=1, scheduler=SchedulerConfig(
+        overload="reject", default_deadline=0.0, aging=0.0))
+    victim = _req(0, priority=1)
+    engine = SAServeEngine(cfg)
+    engine.submit(victim)
+    engine.tick()
+    engine.preempt(0)
+    engine.submit(_req(1, priority=9, rho=0.5, T0=8.0))  # occupies the slot
+    results = {r.req_id: r for r in engine.run(max_ticks=200)}
+    assert results[0].completed and results[0].n_preemptions == 1
+    _assert_bit_exact(results[0], run_standalone(victim, cfg))
+
+
+def test_serve_sa_reject_without_deadline_is_an_error(capsys):
+    """--overload-policy reject/degrade without --deadline would silently
+    behave like 'none'; the CLI refuses instead."""
+    from repro.service.serve_sa import main as serve_main
+    for policy in ("reject", "degrade"):
+        with pytest.raises(SystemExit):
+            serve_main(["--overload-policy", policy, "--requests", "2",
+                        "--slots", "2", "--chains-per-slot", str(CPS)])
+        assert "--deadline" in capsys.readouterr().err
+
+
+# ------------------------------------------------------ compile stability
+def test_preempt_resume_adds_no_dispatch_groups():
+    """PR-2 compile-count guarantee under preemption: a swap-out/swap-in
+    schedule (4 -> 3 -> 4 active blocks at one (dim, N)) reuses the single
+    compiled sweep program — checkpoint/restore must not perturb shapes,
+    dtypes or the power-of-two block padding."""
+    from repro.service.engine import _group_tick
+    if not (hasattr(_group_tick, "clear_cache")
+            and hasattr(_group_tick, "_cache_size")):
+        pytest.skip("jax jit cache introspection API unavailable")
+    cfg = _cfg(n_slots=4)
+    engine = SAServeEngine(cfg)
+    # The victim's ladder is one level shorter (10 vs 11), so after sitting
+    # out one tick it retires on the same tick as its peers — the group
+    # stays at 4 (or pad-4) blocks for the whole schedule.
+    reqs = [_req(0, objective="schwefel", rho=0.65)] + [
+        _req(i, objective=obj, rho=0.7)
+        for i, obj in enumerate(["rastrigin", "ackley", "griewank"], 1)]
+    for r in reqs:
+        engine.submit(r)
+    _group_tick.clear_cache()
+    engine.tick()
+    engine.tick()
+    assert engine.preempt(0)         # 3 active blocks, padded back to 4
+    engine.tick()
+    results = {r.req_id: r for r in engine.run(max_ticks=300)}
+    compiled = _group_tick._cache_size()   # before standalone re-runs below
+    assert len(results) == 4
+    assert engine.preemptions == 1 and results[0].n_preemptions == 1
+    assert compiled == 1
+    for req in reqs:
+        _assert_bit_exact(results[req.req_id], run_standalone(req, cfg))

@@ -29,13 +29,17 @@ def _cfg(n_slots=4, **kw):
 
 
 # ----------------------------------------------------------------- scheduler
+def _admitted_ids(plan):
+    return [e.req.req_id for e, _ in plan.admitted]
+
+
 def test_scheduler_never_overcommits():
     sch = AdmissionScheduler(SchedulerConfig())
     for i in range(6):
         sch.submit(_req(i, n_chains=2 * CPS), tick=0)
-    admitted = sch.admit(free_slots=5, chains_per_slot=CPS, tick=1)
-    assert sum(r.slots_needed(CPS) for r, _ in admitted) <= 5
-    assert len(sch) == 6 - len(admitted)
+    plan = sch.admit(free_slots=5, chains_per_slot=CPS, tick=1)
+    assert sum(granted for _, granted in plan.admitted) <= 5
+    assert len(sch) == 6 - len(plan.admitted)
 
 
 def test_scheduler_priority_order_and_backfill():
@@ -45,8 +49,7 @@ def test_scheduler_priority_order_and_backfill():
     sch.submit(_req(2, priority=3, n_chains=CPS), tick=0)
     # Only 2 slots free: the urgent request can't fit; backfill admits the
     # smaller ones in priority order instead of idling the pool.
-    admitted = [r.req_id for r, _ in sch.admit(2, CPS, tick=1)]
-    assert admitted == [2, 0]
+    assert _admitted_ids(sch.admit(2, CPS, tick=1)) == [2, 0]
     assert sch.pending[0].req_id == 1
 
 
@@ -55,8 +58,7 @@ def test_scheduler_aging_promotes_starved_request():
     sch.submit(_req(0, priority=0), tick=0)
     sch.submit(_req(1, priority=3), tick=10)
     # At tick 20: req0 aged to 20, req1 to 13 -> the old request wins.
-    admitted = [r.req_id for r, _ in sch.admit(1, CPS, tick=20)]
-    assert admitted == [0]
+    assert _admitted_ids(sch.admit(1, CPS, tick=20)) == [0]
 
 
 def test_scheduler_hol_patience_stops_backfill():
@@ -66,9 +68,30 @@ def test_scheduler_hol_patience_stops_backfill():
     sch.submit(_req(1, priority=0, n_chains=CPS), tick=7)
     # Head has waited > patience: backfill past it must stop so freed slots
     # can accumulate for it.
-    assert sch.admit(2, CPS, tick=8) == []
+    assert sch.admit(2, CPS, tick=8).admitted == []
     # Once enough slots free up, the head finally goes (and backfill resumes).
-    assert [r.req_id for r, _ in sch.admit(5, CPS, tick=9)] == [0, 1]
+    assert _admitted_ids(sch.admit(5, CPS, tick=9)) == [0, 1]
+
+
+def test_config_defaults_never_alias_between_instances():
+    """Default-constructed engines/schedulers share no mutable state: the
+    classic shared-default-argument hazard (one EngineConfig()/
+    SchedulerConfig() evaluated at def time) must not alias pools, queues
+    or result lists across instances."""
+    a, b = SAServeEngine(), SAServeEngine()
+    assert a.cfg is not None and b.cfg is not None
+    assert a.scheduler is not b.scheduler
+    assert a.scheduler._queue is not b.scheduler._queue
+    assert a.pool is not b.pool and a.pool.owner is not b.pool.owner
+    assert a.rids is not b.rids and a.results is not b.results
+    a.submit(_req(0))
+    assert len(a.scheduler) == 1 and len(b.scheduler) == 0
+    # EngineConfig's nested scheduler config must come from a per-instance
+    # factory, not one shared literal.
+    assert (EngineConfig().scheduler is not EngineConfig().scheduler)
+    s1, s2 = AdmissionScheduler(), AdmissionScheduler()
+    s1.submit(_req(1), tick=0)
+    assert len(s2) == 0
 
 
 def test_engine_refills_freed_slots():

@@ -1,0 +1,198 @@
+"""Property-based serving tests (hypothesis).
+
+Random arrival traces x random preemption points x random overload
+policies, asserting the serving invariants that every concrete test in
+test_service.py / test_preemption.py instantiates by hand:
+
+* the scheduler never over-commits, never exceeds the preemption budget,
+  and admits in effective-priority order (satellite: ordering respected);
+* no slot is ever leaked: when the engine drains, the pool is empty and
+  every rid is back in the free list;
+* every submitted request reaches **exactly one** terminal status
+  (completed or rejected);
+* a resumed (and possibly degraded) request is bit-exact with
+  ``run_standalone`` at its granted chain count.
+
+The scheduler-level property is pure host Python and runs in tier-1; the
+engine-level property drives real device programs and is marked slow
+(nightly tier, ``--runslow``).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.service import (ArrivalProcess, EngineConfig, SARequest,
+                           SAServeEngine, SchedulerConfig, run_standalone)
+from repro.service.slots import ActiveJob
+
+CPS = 8
+
+
+def _req(req_id, **kw):
+    kw.setdefault("objective", "rastrigin")
+    kw.setdefault("dim", 4)
+    kw.setdefault("n_chains", CPS)
+    kw.setdefault("T0", 8.0)
+    kw.setdefault("T_min", 1.0)
+    kw.setdefault("rho", 0.5)    # 3-level ladders keep examples fast
+    kw.setdefault("N", 10)
+    return SARequest(req_id=req_id, seed=100 + req_id, **kw)
+
+
+# ------------------------------------------------------ scheduler properties
+@st.composite
+def scheduler_scenarios(draw):
+    cfg = SchedulerConfig(
+        policy="priority",
+        aging=draw(st.sampled_from([0.0, 0.05, 1.0])),
+        hol_patience=draw(st.integers(0, 8)),
+        overload=draw(st.sampled_from(["none", "reject", "degrade",
+                                       "preempt"])),
+        default_deadline=draw(st.sampled_from([None, 0.0, 3.0, 10.0])),
+        preemption_budget=draw(st.integers(0, 3)))
+    n_queued = draw(st.integers(0, 8))
+    queued = []
+    for i in range(n_queued):
+        queued.append((
+            _req(i,
+                 n_chains=draw(st.integers(1, 3)) * CPS,
+                 min_chains=CPS,
+                 priority=draw(st.integers(0, 5)),
+                 on_overload=draw(st.sampled_from(
+                     [None, "none", "reject", "degrade", "preempt"])),
+                 deadline=draw(st.sampled_from([None, 0.0, 5.0]))),
+            draw(st.integers(0, 10))))       # submit tick
+    n_active = draw(st.integers(0, 4))
+    active = []
+    for j in range(n_active):
+        width = draw(st.integers(1, 2))
+        job = ActiveJob(req=_req(100 + j,
+                                 n_chains=width * CPS,
+                                 priority=draw(st.integers(0, 5))),
+                        rid=j, slots=list(range(j * 2, j * 2 + width)),
+                        submit_tick=draw(st.integers(0, 10)),
+                        start_tick=draw(st.integers(0, 12)))
+        active.append(job)
+    free = draw(st.integers(0, 6))
+    tick = draw(st.integers(10, 30))
+    return cfg, queued, active, free, tick
+
+
+@given(scheduler_scenarios())
+@settings(max_examples=150, deadline=None)
+def test_scheduler_plan_invariants(scenario):
+    from repro.service.scheduler import AdmissionScheduler
+    cfg, queued, active, free, tick = scenario
+    sch = AdmissionScheduler(cfg)
+    for req, sub in queued:
+        sch.submit(req, sub)
+    order_before = {id(e): i for i, e in enumerate(sch._ordered(tick))}
+    plan = sch.admit(free, CPS, tick, active=active)
+
+    # 1. Never over-commit: granted <= free + slots released by evictions.
+    width_of = {j.rid: len(j.slots) for j in active}
+    evicted_slots = sum(width_of[rid] for rid in plan.evict)
+    assert sum(g for _, g in plan.admitted) <= free + evicted_slots
+    # 2. Preemption budget respected; victims are distinct active rids.
+    assert len(plan.evict) <= cfg.preemption_budget
+    assert len(set(plan.evict)) == len(plan.evict)
+    assert set(plan.evict) <= set(width_of)
+    # 3. Grants are sane: full width, or degrade-class shrink >= floor.
+    for entry, granted in plan.admitted:
+        need = entry.req.slots_needed(CPS)
+        assert 0 < granted <= need
+        if granted < need:
+            assert sch.overload_policy(entry.req) == "degrade"
+            assert granted >= entry.req.slots_floor(CPS)
+    # 4. Effective-priority ordering respected: the admitted sequence is a
+    #    subsequence of the eff-priority scan order.
+    positions = [order_before[id(e)] for e, _ in plan.admitted]
+    assert positions == sorted(positions)
+    # 5. Rejections only ever hit expired reject/degrade-class requests.
+    for entry in plan.rejected:
+        assert sch.overload_policy(entry.req) in ("reject", "degrade")
+        deadline = sch.deadline_of(entry.req)
+        assert deadline is not None
+        assert tick - entry.submit_tick > deadline
+    # 6. Eviction-freed capacity only seats work outranking every victim
+    #    (no same-tick priority inversion against a preempted job).
+    if plan.evict:
+        vmax = max(sch.effective_priority(j.req, j.submit_tick, tick)
+                   for j in active if j.rid in plan.evict)
+        spent = 0
+        for entry, granted in plan.admitted:
+            spent += granted
+            if spent > free:     # dipped into eviction-freed slots
+                assert sch.effective_priority(
+                    entry.req, entry.submit_tick, tick) >= vmax
+    # 7. Queue bookkeeping: planned entries left the queue, others remain.
+    remaining = {id(e) for e in sch._queue}
+    planned = {id(e) for e, _ in plan.admitted} | {id(e)
+                                                   for e in plan.rejected}
+    assert not (remaining & planned)
+    assert len(remaining) + len(planned) == len(queued)
+
+
+# -------------------------------------------------------- engine properties
+@pytest.mark.slow
+@given(st.data())
+@settings(max_examples=12, deadline=None)
+def test_engine_invariants_under_random_preemption(data):
+    """Random arrivals x random preemption points: no slot leaks, exactly
+    one terminal status per request, and every completed request —
+    preempted, degraded or neither — is bit-exact vs run_standalone."""
+    n_slots = 3
+    cfg = EngineConfig(n_slots=n_slots, chains_per_slot=CPS,
+                       use_pallas=False,
+                       scheduler=SchedulerConfig(
+                           overload=data.draw(st.sampled_from(
+                               ["none", "reject", "degrade", "preempt"])),
+                           default_deadline=data.draw(
+                               st.sampled_from([None, 12.0])),
+                           preemption_budget=data.draw(st.integers(0, 2))))
+    n_reqs = data.draw(st.integers(1, 5))
+    reqs = [_req(i,
+                 n_chains=data.draw(st.integers(1, 2)) * CPS,
+                 min_chains=CPS,
+                 priority=data.draw(st.integers(0, 3)))
+            for i in range(n_reqs)]
+    times = [data.draw(st.floats(0, 15, allow_nan=False,
+                                 allow_infinity=False))
+             for _ in reqs]
+    engine = SAServeEngine(cfg)
+    arrivals = ArrivalProcess.trace(reqs, times)
+
+    guard = 0
+    while not (engine.done and arrivals.exhausted):
+        guard += 1
+        assert guard < 300, "engine failed to drain (livelock?)"
+        for t, r in arrivals.due(engine.tick_count):
+            engine.submit(r, t)
+        if engine.rids.jobs and data.draw(st.booleans()):
+            rid = data.draw(st.sampled_from(sorted(engine.rids.jobs)))
+            assert engine.preempt(engine.rids.jobs[rid].req.req_id)
+        engine.tick()
+
+    # No slot leaked; every rid recycled.
+    assert engine.pool.n_free == n_slots
+    assert np.all(engine.pool.owner == -1)
+    assert not engine.rids.jobs and len(engine.rids._free) == n_slots
+    # Exactly one terminal status per submitted request.
+    ids = sorted(r.req_id for r in engine.results)
+    assert ids == list(range(n_reqs))
+    # Bit-exact vs standalone at the granted width (skip rejected).
+    for res in engine.results:
+        if not res.completed:
+            assert res.x_best is None and res.granted_chains == 0
+            continue
+        req = reqs[res.req_id]
+        if res.degraded:
+            req = dataclasses.replace(req, n_chains=res.granted_chains)
+        solo = run_standalone(req, cfg)
+        assert res.f_best == solo.f_best
+        np.testing.assert_array_equal(res.x_best, solo.x_best)
+        assert res.champion_history == solo.champion_history
