@@ -25,6 +25,17 @@ trajectory for future PRs.
 
   PYTHONPATH=src python benchmarks/serve_sa_latency.py --overload \
       --requests 120 --slots 5 --chains-per-slot 8 --max-ticks 400
+
+``--scale-devices 1,2,4`` serves the *same* seeded stream once per shard
+count (``--slots`` slots per shard on the 1-D ``(pool,)`` mesh) at a fixed
+``--rate`` and reports the goodput / p99 gain sharding buys — the
+multi-device acceptance check.  Run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` for real host
+devices; logical shards otherwise.
+
+  PYTHONPATH=src python benchmarks/serve_sa_latency.py \
+      --scale-devices 1,2,4 --rate 1.0 --requests 48 --slots 2 \
+      --chains-per-slot 8 --max-ticks 120
 """
 from __future__ import annotations
 
@@ -52,9 +63,10 @@ DEFAULT_OVERLOAD_OUT = (Path(__file__).resolve().parents[1]
 
 def bench_rate(rate: float, n_requests: int, n_slots: int,
                chains_per_slot: int, variant: str, seed: int,
-               arrival_seed: int, max_ticks: int) -> dict:
+               arrival_seed: int, max_ticks: int,
+               n_devices: int = 1) -> dict:
     cfg = EngineConfig(n_slots=n_slots, chains_per_slot=chains_per_slot,
-                       variant=variant,
+                       n_devices=n_devices, variant=variant,
                        scheduler=SchedulerConfig(policy="priority"))
     engine = SAServeEngine(cfg)
     reqs = make_mix(n_requests, chains_per_slot, seed=seed,
@@ -62,8 +74,10 @@ def bench_rate(rate: float, n_requests: int, n_slots: int,
     arrivals = ArrivalProcess.poisson(reqs, rate=rate, seed=arrival_seed)
     engine.run_stream(arrivals, max_ticks=max_ticks)
     stats = engine.stats()
-    row = latency_summary(engine.results, ticks=engine.tick_count)
-    row.update(rate=rate, ticks=engine.tick_count,
+    row = latency_summary(engine.results, ticks=engine.tick_count,
+                          n_submitted=engine.n_submitted)
+    row.update(rate=rate, devices=n_devices, ticks=engine.tick_count,
+               migrations=stats["migrations"],
                occupancy=stats["occupancy"], wall_s=stats["wall_s"])
     return row
 
@@ -84,13 +98,14 @@ def bench_overload(args) -> dict:
     """Same seeded overload stream through every overload policy."""
     reqs = make_mix(args.requests, args.chains_per_slot, seed=args.seed,
                     max_slots_per_req=min(2, args.slots))
+    # Capacity scales with the sharded pool: n_slots per shard x devices.
     rate = args.overload_factor * saturating_rate(
-        reqs, args.slots, args.chains_per_slot)
+        reqs, args.slots * args.devices, args.chains_per_slot)
     policies = {}
     for policy in ("none", "reject", "degrade", "preempt"):
         cfg = EngineConfig(
             n_slots=args.slots, chains_per_slot=args.chains_per_slot,
-            variant=args.variant,
+            n_devices=args.devices, variant=args.variant,
             scheduler=SchedulerConfig(
                 policy="priority", overload=policy,
                 default_deadline=args.deadline,
@@ -100,11 +115,14 @@ def bench_overload(args) -> dict:
             ArrivalProcess.poisson(reqs, rate=rate, seed=args.arrival_seed),
             max_ticks=args.max_ticks)
         stats = engine.stats()
-        lat = latency_summary(engine.results, ticks=engine.tick_count)
+        lat = latency_summary(engine.results, ticks=engine.tick_count,
+                              n_submitted=engine.n_submitted)
         policies[policy] = {
             "completed": lat["completed"],
             "rejected": lat["rejected"],
+            "incomplete": lat["incomplete"],
             "preemptions": stats["preemptions"],
+            "migrations": stats["migrations"],
             "degraded": sum(r.degraded for r in engine.results),
             "backlog": len(engine.scheduler),      # unbounded growth witness
             "goodput_req_per_tick": lat["goodput_req_per_tick"],
@@ -118,6 +136,7 @@ def bench_overload(args) -> dict:
         "config": {
             "requests": args.requests, "slots": args.slots,
             "chains_per_slot": args.chains_per_slot,
+            "devices": args.devices,
             "variant": args.variant, "seed": args.seed,
             "arrival_seed": args.arrival_seed,
             "overload_factor": args.overload_factor,
@@ -131,9 +150,9 @@ def bench_overload(args) -> dict:
 
 def run_overload(args):
     doc = bench_overload(args)
-    cols = ["policy", "completed", "rejected", "degraded", "preemptions",
-            "backlog", "goodput_req_per_tick", "queue_delay_p50",
-            "queue_delay_p99", "occupancy"]
+    cols = ["policy", "completed", "rejected", "incomplete", "degraded",
+            "preemptions", "backlog", "goodput_req_per_tick",
+            "queue_delay_p50", "queue_delay_p99", "occupancy"]
     table = Table(
         f"SA serving engine: overload policies at "
         f"{args.overload_factor:g}x saturating load "
@@ -162,14 +181,65 @@ def run_overload(args):
     return doc
 
 
+def run_scale_devices(args):
+    """Goodput scaling: the same seeded stream over 1..N-shard pools.
+
+    Each device count serves the identical (mix seed, arrival seed)
+    Poisson stream with ``--slots`` slots *per shard*, so the comparison
+    isolates what sharding buys: more shards admit the backlog sooner,
+    queueing delay collapses and goodput rises until the offered load is
+    no longer saturating.  Deterministic on the tick clock.
+    """
+    counts = [int(c) for c in args.scale_devices.split(",")]
+    table = Table(
+        f"SA serving engine: goodput vs slot-pool shards "
+        f"(same seeded stream @ {args.rate:g} req/tick, "
+        f"{args.slots} slots/shard)",
+        ["devices", "completed", "incomplete", "ticks", "queue_delay_p99",
+         "latency_p99", "goodput_req_per_tick", "migrations", "occupancy",
+         "wall_s"],
+        fmt={"queue_delay_p99": ".1f", "latency_p99": ".1f",
+             "goodput_req_per_tick": ".3f", "occupancy": ".1%",
+             "wall_s": ".2f"})
+    rows = []
+    for n in counts:
+        row = bench_rate(args.rate, args.requests, args.slots,
+                         args.chains_per_slot, args.variant, args.seed,
+                         args.arrival_seed, args.max_ticks, n_devices=n)
+        rows.append(row)
+        table.add(**{k: row[k] for k in table.columns})
+    table.show()
+    if len(rows) > 1:
+        lo, hi = rows[0], rows[-1]
+        gain = (hi["goodput_req_per_tick"] / lo["goodput_req_per_tick"]
+                if lo["goodput_req_per_tick"] else float("inf"))
+        print(f"\n{counts[-1]} shards vs {counts[0]}: goodput x{gain:.2f} "
+              f"({lo['goodput_req_per_tick']:.3f} -> "
+              f"{hi['goodput_req_per_tick']:.3f} req/tick), p99 queue delay "
+              f"{lo['queue_delay_p99']:.1f}t -> {hi['queue_delay_p99']:.1f}t "
+              f"on the same seeded stream")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--rates", default="0.2,0.5,1.0",
                     help="comma-separated offered loads, requests/tick")
     ap.add_argument("--requests", type=int, default=24,
                     help="requests per rate point")
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="slots per shard")
     ap.add_argument("--chains-per-slot", type=int, default=16)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="engine shards on the (pool,) mesh; CPU-testable "
+                         "via XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N")
+    ap.add_argument("--scale-devices", default=None,
+                    help="comma-separated device counts (e.g. 1,2,4): "
+                         "serve the SAME seeded stream once per count at "
+                         "a fixed --rate and report goodput scaling")
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="offered load for --scale-devices, requests/tick")
     ap.add_argument("--variant", default="delta", choices=["delta", "full"])
     ap.add_argument("--seed", type=int, default=0,
                     help="request-mix seed")
@@ -192,6 +262,9 @@ def main(argv=None):
     if args.overload:
         return run_overload(args)
 
+    if args.scale_devices:
+        return run_scale_devices(args)
+
     table = Table(
         "SA serving engine: open-loop latency vs offered load "
         "(seeded Poisson arrivals)",
@@ -207,7 +280,8 @@ def main(argv=None):
     for rate in [float(r) for r in args.rates.split(",")]:
         row = bench_rate(rate, args.requests, args.slots,
                          args.chains_per_slot, args.variant, args.seed,
-                         args.arrival_seed, args.max_ticks)
+                         args.arrival_seed, args.max_ticks,
+                         n_devices=args.devices)
         rows.append(row)
         table.add(**{k: row[k] for k in table.columns})
     table.show()

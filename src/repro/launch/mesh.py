@@ -19,16 +19,30 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     """Arbitrary mesh for tests/examples (e.g. (1,1) on CPU)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    try:
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        # Older jax: no jax.sharding.AxisType / axis_types kwarg (Auto is
+        # that jax's only behaviour anyway) — build the mesh without it.
+        return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def slot_pool_mesh(n_shards: int):
+    """1-D mesh backing the serving engine's sharded slot pool.
+
+    One mesh device = one engine shard (``repro/service/sharding.py``).
+    Requires ``n_shards <= len(jax.devices())``; the service layer falls
+    back to round-robin logical shards when oversubscribed (CPU tests
+    without ``XLA_FLAGS=--xla_force_host_platform_device_count``).
+    """
+    return make_mesh((n_shards,), ("pool",))
 
 
 def local_test_mesh(model: int = 1):

@@ -14,8 +14,13 @@ Layers
                    lifecycle timestamps + derived latencies.
 ``slots.py``     : the slot pool — per-slot chain state + ownership —
                    and :class:`SwappedJob` preemption checkpoints.
-``scheduler.py`` : priority-with-aging admission, bounded backfill, and
-                   the reject/degrade/preempt overload policies.
+``sharding.py``  : the sharded pool — one :class:`EngineShard` (private
+                   slot pool + rid table) per device on the 1-D
+                   ``(pool,)`` mesh.
+``scheduler.py`` : priority-with-aging admission, bounded backfill,
+                   the reject/degrade/preempt overload policies, and the
+                   placement layer (home-shard choice + Russkov-style
+                   cross-shard migration planning).
 ``arrivals.py``  : open-loop arrival processes (seeded Poisson / bursty /
                    trace / batch) + latency percentile summaries.
 ``engine.py``    : the continuous-batching tick loop; per-slot objective id
@@ -47,7 +52,8 @@ from repro.service.engine import (EngineConfig, SAServeEngine, F_OPT,
 from repro.service.request import (OVERLOAD_POLICIES, RequestResult,
                                    SARequest, SERVABLE, TERMINAL_REASONS)
 from repro.service.scheduler import (AdmissionPlan, AdmissionScheduler,
-                                     QueueEntry, SchedulerConfig)
+                                     QueueEntry, SchedulerConfig, ShardView)
+from repro.service.sharding import EngineShard, slot_pool_devices
 from repro.service.slots import ActiveJob, SlotPool, SwappedJob
 
 __all__ = [
@@ -55,6 +61,8 @@ __all__ = [
     "SARequest", "RequestResult", "SERVABLE", "OVERLOAD_POLICIES",
     "TERMINAL_REASONS",
     "AdmissionScheduler", "AdmissionPlan", "QueueEntry", "SchedulerConfig",
+    "ShardView",
     "SlotPool", "ActiveJob", "SwappedJob",
+    "EngineShard", "slot_pool_devices",
     "ArrivalProcess", "latency_summary",
 ]

@@ -25,7 +25,7 @@ Three constructors:
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -117,7 +117,8 @@ def percentile(values: Sequence[float], q: float) -> float:
 
 
 def latency_summary(results: Sequence[RequestResult],
-                    ticks: int = 0) -> Dict[str, float]:
+                    ticks: int = 0,
+                    n_submitted: Optional[int] = None) -> Dict[str, float]:
     """Aggregate open-loop latency metrics over completed requests.
 
     Tick-clock percentiles (p50/p99 queueing delay, time-to-first-tick,
@@ -129,15 +130,30 @@ def latency_summary(results: Sequence[RequestResult],
     a rejected request has no admission to measure; it is counted (and its
     preemptions summed) separately, so the reject policy cannot launder its
     drops into better-looking latency numbers unnoticed.
+
+    Terminal accounting is **typed**: ``rejected`` counts only results
+    whose status is the 'rejected' terminal — never a complement like
+    ``len(results) - completed``, which would lump any future non-rejected
+    terminal in with SLO drops.  Requests still in flight (or queued, or
+    swapped out) when a ``--max-ticks`` horizon cut the run short have no
+    terminal result at all; pass ``n_submitted`` (e.g.
+    ``engine.n_submitted``) to surface them as ``incomplete`` instead of
+    letting overload benchmarks overstate drops.
     """
     done = [r for r in results if r.completed]
+    rejected = [r for r in results if r.status == "rejected"]
     qd = [r.queue_delay_ticks for r in done]
     tt = [r.ttft_ticks for r in done]
     lat = [r.latency_ticks for r in done]
     return {
         "completed": len(done),
-        "rejected": len(results) - len(done),
-        "preemptions": sum(r.n_preemptions for r in done),
+        "rejected": len(rejected),
+        "incomplete": (max(0, n_submitted - len(results))
+                       if n_submitted is not None else 0),
+        # Preemptions over ALL terminated requests: evicted-then-rejected
+        # work is real preemption churn and must stay visible.
+        "preemptions": sum(r.n_preemptions for r in results),
+        "migrations": sum(r.n_migrations for r in results),
         "queue_delay_p50": percentile(qd, 50),
         "queue_delay_p99": percentile(qd, 99),
         "ttft_p50": percentile(tt, 50),

@@ -2,9 +2,10 @@
 
 The annealing analogue of a vLLM/LightLLM decode loop (launch/serve.py):
 
-* a fixed pool of chain-block *slots* (slots.py) — the "decode batch";
+* a sharded pool of chain-block *slots* (slots.py, sharding.py) — the
+  "decode batch", one shard per device on a 1-D ``(pool,)`` mesh;
 * an admission scheduler (scheduler.py) packs queued requests into free
-  slots — "prefill";
+  slots — "prefill" — and places each request on a home shard;
 * one engine **tick** advances every active slot by one temperature level
   (one N-step Metropolis sweep at that slot's own temperature, then a
   champion exchange masked per request);
@@ -20,30 +21,43 @@ Invariants
   cursor and chain base* are runtime arrays threaded down to the kernel
   (one SMEM entry per block, indexed by ``program_id``) — none of them can
   cause recompilation.  Only *dimensionality and sweep length* remain
-  compile-time constants, so active slots are grouped by ``(dim, N)`` each
-  tick and dispatched as one device program per group: one compiled sweep
-  program serves every registry objective, and growing ``SERVABLE`` never
-  costs a recompile.  (Groups are additionally padded to power-of-two
-  block counts to bound the number of compiled shapes.)
+  compile-time constants, so active slots are grouped by ``(dim, N)``
+  within each shard every tick and dispatched as one device program per
+  ``(shard, dim, N)`` group: one compiled sweep program per device serves
+  every registry objective, and growing ``SERVABLE`` never costs a
+  recompile.  (Groups are additionally padded to power-of-two block
+  counts to bound the number of compiled shapes.)
 * **Tenant isolation**: champion reduces inside a packed group are
   segmented by request id — tenants never exchange states
   (core/exchange.py) — and placement-invariant RNG makes a request's
   trajectory bit-identical to its standalone single-tenant run.
+* **Sharded pool** (sharding.py): ``EngineConfig.n_devices`` engine
+  shards each own ``n_slots`` slots on their own mesh device.  The
+  scheduler's placement layer homes each admitted request on the
+  least-loaded compatible shard and rebalances via Russkov-style
+  migration — checkpoint a :class:`~repro.service.slots.SwappedJob` on
+  the overloaded shard, restore it on an underloaded one — and because
+  restore is placement-invariant, a migrated trajectory is **bit-exact**
+  versus an uninterrupted single-device run.  Requests never span shards.
 * **Open-loop serving**: :meth:`SAServeEngine.run_stream` interleaves
   admission of an :class:`~repro.service.arrivals.ArrivalProcess` (e.g.
   seeded Poisson) with in-flight progress, stamping per-request lifecycle
   events (submit / admit / first-tick / preempted / resumed /
   complete-or-rejected, in both tick-time and wall-time) from which
   queueing-delay and time-to-first-tick percentiles are derived (see
-  docs/serving.md).
+  docs/serving.md).  All wall times — lifecycle stamps and the run's
+  ``wall_s`` alike — come from one monotonic epoch
+  (``time.perf_counter`` since engine construction), so a wall-clock
+  adjustment mid-run can never skew a latency or throughput figure.
 * **Preemption is bit-exact**: an active job checkpoints to a host-side
   :class:`~repro.service.slots.SwappedJob` (slot blocks + champion + RNG
   step cursor + temperature cursor) and resumes — possibly on different
-  physical slots — with a trajectory identical to an uninterrupted run,
-  because the RNG is counter-based on logical (chain index, step)
-  coordinates.  SLO admission control (scheduler.py) builds on it: the
-  'preempt' overload policy evicts the cheapest active jobs for an urgent
-  arrival, 'reject' and 'degrade' bound queue growth at overload.
+  physical slots of a different shard — with a trajectory identical to an
+  uninterrupted run, because the RNG is counter-based on logical (chain
+  index, step) coordinates.  SLO admission control (scheduler.py) builds
+  on it: the 'preempt' overload policy evicts the cheapest active jobs
+  for an urgent arrival, 'reject' and 'degrade' bound queue growth at
+  overload.
 """
 from __future__ import annotations
 
@@ -52,7 +66,7 @@ import math
 import time
 from collections import defaultdict
 from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,11 +77,15 @@ from repro.kernels import objective_math as om
 from repro.kernels import ops
 from repro.service.request import RequestResult, SARequest
 from repro.service.scheduler import (AdmissionScheduler, QueueEntry,
-                                     SchedulerConfig)
-from repro.service.slots import ActiveJob, RidTable, SlotPool, SwappedJob
+                                     SchedulerConfig, ShardView)
+from repro.service.sharding import EngineShard, make_shards
+from repro.service.slots import ActiveJob, SwappedJob
 
 #: Known optima of the servable (registry) objectives, for accuracy targets.
 #: Schwefel is the paper's normalized form, so its optimum is dim-free.
+#: A request may only set ``target_error`` on an objective listed here —
+#: :meth:`SAServeEngine.submit` validates it eagerly (a typed ValueError at
+#: the frontend) instead of letting a KeyError wedge a slot mid-tick.
 F_OPT = {
     om.KID_SCHWEFEL: -418.982887,
     om.KID_RASTRIGIN: 0.0,
@@ -78,13 +96,24 @@ F_OPT = {
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    n_slots: int = 8
+    n_slots: int = 8            # slots *per shard*
     chains_per_slot: int = 64   # chains per slot == kernel block size
+    n_devices: int = 1          # engine shards on the 1-D (pool,) mesh;
+                                # logical shards round-robin when fewer
+                                # physical devices exist (sharding.py)
     variant: str = "delta"      # 'delta' (O(1) updates) | 'full' (paper)
     use_pallas: object = "auto"  # True | False | 'auto' (TPU only)
     interpret: bool = False     # Pallas interpret mode (tests on CPU)
+    migration_budget: int = 1   # max cross-shard moves per tick (0 = no
+                                # automatic rebalancing)
     scheduler: SchedulerConfig = dataclasses.field(
         default_factory=SchedulerConfig)
+
+    def __post_init__(self):
+        if self.n_devices < 1:
+            raise ValueError(f"n_devices must be >= 1, got {self.n_devices}")
+        if self.migration_budget < 0:
+            raise ValueError("migration_budget must be >= 0")
 
 
 @partial(jax.jit, static_argnames=("n_steps", "blk", "variant",
@@ -109,7 +138,7 @@ def _group_tick(x, kid_blk, T_blk, seed_blk, step0_blk, base_blk, seg, adopt,
 
 
 class SAServeEngine:
-    """Multi-tenant annealing server over one device program per group."""
+    """Multi-tenant annealing server: one device program per (shard, group)."""
 
     def __init__(self, cfg: Optional[EngineConfig] = None):
         # Build a fresh default per engine: a mutable-default-argument
@@ -117,16 +146,19 @@ class SAServeEngine:
         # constructed without a config (tests pin this down).
         cfg = EngineConfig() if cfg is None else cfg
         self.cfg = cfg
-        self.pool = SlotPool(cfg.n_slots, cfg.chains_per_slot)
+        self.shards: List[EngineShard] = make_shards(
+            cfg.n_devices, cfg.n_slots, cfg.chains_per_slot)
         self.scheduler = AdmissionScheduler(cfg.scheduler)
-        self.rids = RidTable(cfg.n_slots)
         self.results: List[RequestResult] = []
         self.tick_count = 0
+        self.n_submitted = 0          # requests offered via submit(): the
+                                      # denominator for terminal accounting
         self.sweeps_done = 0          # block-sweeps (slot x level): also the
                                       # occupancy numerator (active slot-ticks)
         self.group_launches = 0
         self.preemptions = 0          # swap-outs performed
         self.rejections = 0           # SLO admission-control drops
+        self.migrations = 0           # cross-shard rebalancing moves
         self._use_pallas = ops.resolve_use_pallas(cfg.use_pallas)
         if self._use_pallas and cfg.chains_per_slot % 8:
             raise ValueError(
@@ -139,7 +171,13 @@ class SAServeEngine:
         self._submit_info: Dict[int, Tuple[float, float]] = {}
 
     def _now(self) -> float:
-        """Wall seconds since engine construction (the engine epoch)."""
+        """Wall seconds since engine construction (the engine epoch).
+
+        Monotonic (``time.perf_counter``): every wall-clock stamp the
+        engine emits — lifecycle events *and* ``run_stream``'s ``wall_s``
+        — shares this epoch, so intervals between them are meaningful and
+        immune to wall-clock adjustments.
+        """
         return time.perf_counter() - self._epoch
 
     # ------------------------------------------------------------ frontend
@@ -151,11 +189,20 @@ class SAServeEngine:
         need = req.slots_needed(self.cfg.chains_per_slot)
         if need > self.cfg.n_slots:
             raise ValueError(
-                f"request {req.req_id} needs {need} slots > pool "
-                f"{self.cfg.n_slots}; lower n_chains or grow the pool")
+                f"request {req.req_id} needs {need} slots > the per-shard "
+                f"pool of {self.cfg.n_slots}; requests never span shards — "
+                "lower n_chains or grow n_slots")
+        if req.target_error is not None and req.kid not in F_OPT:
+            # Validate here, not mid-tick: an unguarded F_OPT lookup in the
+            # finish check would raise KeyError after admission and wedge
+            # the request's slots for good.
+            raise ValueError(
+                f"request {req.req_id} sets target_error but objective "
+                f"{req.objective!r} has no registered optimum in "
+                "engine.F_OPT; register one or drop target_error")
         if (req.req_id in self._submit_info
-                or any(j.req.req_id == req.req_id
-                       for j in self.rids.jobs.values())
+                or any(job.req.req_id == req.req_id
+                       for _, job in self._iter_jobs())
                 or any(r.req_id == req.req_id
                        for r in self.scheduler.pending)):
             raise ValueError(
@@ -165,10 +212,40 @@ class SAServeEngine:
             float(self.tick_count if arrival_time is None else arrival_time),
             self._now())
         self.scheduler.submit(req, self.tick_count)
+        self.n_submitted += 1
+
+    # ----------------------------------------------------------- shard views
+    def _iter_jobs(self) -> Iterator[Tuple[EngineShard, ActiveJob]]:
+        for shard in self.shards:
+            for job in shard.rids.jobs.values():
+                yield shard, job
+
+    def _view(self, shard: EngineShard) -> ShardView:
+        jobs = tuple(shard.rids.jobs.values())
+        return ShardView(
+            index=shard.index, free_slots=shard.pool.n_free, active=jobs,
+            shapes=frozenset((j.req.dim, j.req.N) for j in jobs))
+
+    @property
+    def pool(self):
+        """Single-shard convenience alias (tests, notebooks).  Multi-shard
+        engines have no 'the pool' — address ``engine.shards[i].pool``."""
+        if len(self.shards) == 1:
+            return self.shards[0].pool
+        raise AttributeError(
+            f"engine has {len(self.shards)} shards: use shards[i].pool")
+
+    @property
+    def rids(self):
+        """Single-shard convenience alias, like :attr:`pool`."""
+        if len(self.shards) == 1:
+            return self.shards[0].rids
+        raise AttributeError(
+            f"engine has {len(self.shards)} shards: use shards[i].rids")
 
     @property
     def n_active(self) -> int:
-        return len(self.rids.jobs)
+        return sum(len(s.rids.jobs) for s in self.shards)
 
     @property
     def done(self) -> bool:
@@ -176,25 +253,44 @@ class SAServeEngine:
 
     # ----------------------------------------------------------- admission
     def _admit(self) -> None:
-        plan = self.scheduler.admit(
-            self.pool.n_free, self.cfg.chains_per_slot, self.tick_count,
-            active=list(self.rids.jobs.values()))
-        # Execution order matters: rejections first (they free nothing but
-        # must be stamped this tick), then evictions (freeing slots the
-        # plan's admissions count on), then placements.
+        # Rebalance first: if the queue head fits on no single shard but
+        # the pool as a whole has room, migrate jobs off a donor shard
+        # (checkpoint/restore, bit-exact) so the head becomes admissible
+        # this very tick.  Snapshots are built once and rebuilt only for
+        # the (budget-bounded, usually zero) shards a move touched.
+        views = [self._view(s) for s in self.shards]
+        moves = self.scheduler.plan_migrations(
+            views, self.cfg.chains_per_slot,
+            self.tick_count, self.cfg.migration_budget)
+        for rid, src, dst in moves:
+            self._migrate_job(self.shards[src], rid, self.shards[dst])
+        for si in {si for move in moves for si in move[1:]}:
+            views[si] = self._view(self.shards[si])
+        # Then one queue walk across all shards (scheduler.admit_sharded):
+        # every entry, in effective-priority order, is tried at full
+        # width on every shard — least-loaded first, (dim, N)-locality
+        # tie-break — before its degrade/preempt fallback may fire, and
+        # the preemption budget bounds evictions per tick across shards.
+        plan = self.scheduler.admit_sharded(
+            views, self.cfg.chains_per_slot, self.tick_count)
+        # Execution order matters: rejections first (they free nothing
+        # but must be stamped this tick), then evictions (freeing slots
+        # the plan's admissions count on), then placements.
         for entry in plan.rejected:
             self._reject(entry)
-        for rid in plan.evict:
-            self._swap_out(rid)
-        for entry, granted_slots in plan.admitted:
-            self._place(entry, granted_slots)
+        for rid, si in plan.evict:
+            self._swap_out(self.shards[si], rid)
+        for entry, granted_slots, si in plan.admitted:
+            self._place(self.shards[si], entry, granted_slots)
 
-    def _place(self, entry: QueueEntry, granted_slots: int) -> None:
+    def _place(self, shard: EngineShard, entry: QueueEntry,
+               granted_slots: int) -> None:
         if entry.swapped is not None:       # swap-in: bit-exact resume
             job = entry.swapped.job
             job.resumed_ticks.append(self.tick_count)
-            self.rids.alloc(job)
-            job.slots = self.pool.restore(job.rid, entry.swapped.blocks)
+            shard.rids.alloc(job)
+            job.slots = shard.pool.restore(job.rid, entry.swapped.blocks)
+            job.home_shard = shard.index
             return
         req = entry.req
         arrival, submit_wall = self._submit_info.pop(
@@ -204,23 +300,63 @@ class SAServeEngine:
                         start_tick=self.tick_count,
                         arrival_time=arrival,
                         submit_wall=submit_wall,
-                        admit_wall=self._now())
-        self.rids.alloc(job)
-        job.slots = self.pool.assign(job.rid, req, n_slots=granted_slots)
+                        admit_wall=self._now(),
+                        home_shard=shard.index)
+        shard.rids.alloc(job)
+        job.slots = shard.pool.assign(job.rid, req, n_slots=granted_slots)
         job.granted_chains = granted_slots * self.cfg.chains_per_slot
 
-    def _swap_out(self, rid: int) -> None:
+    def _swap_out(self, shard: EngineShard, rid: int) -> None:
         """Preempt: checkpoint a job's device-visible state to host, free
-        its slots, and re-queue it for a bit-exact resume."""
-        job = self.rids.jobs[rid]
-        blocks = self.pool.checkpoint(rid)
-        self.pool.release(rid)
-        self.rids.free(rid)
+        its slots, and re-queue it for a bit-exact resume (on whichever
+        shard next has room — swap-in doubles as migration)."""
+        job = shard.rids.jobs[rid]
+        blocks = shard.pool.checkpoint(rid)
+        shard.pool.release(rid)
+        shard.rids.free(rid)
         job.slots = []
         job.rid = -1
         job.preempted_ticks.append(self.tick_count)
         self.scheduler.requeue(SwappedJob(job=job, blocks=blocks))
         self.preemptions += 1
+
+    def _migrate_job(self, src: EngineShard, rid: int,
+                     dst: EngineShard) -> None:
+        """Move a resident job between shards without a queue round-trip:
+        checkpoint on ``src``, restore on ``dst`` in the same tick.  The
+        job keeps annealing this tick (on its new device); the trajectory
+        is bit-exact because restore is placement-invariant."""
+        job = src.rids.jobs[rid]
+        blocks = src.pool.checkpoint(rid)
+        src.pool.release(rid)
+        src.rids.free(rid)
+        dst.rids.alloc(job)
+        job.slots = dst.pool.restore(job.rid, blocks)
+        job.home_shard = dst.index
+        job.migrated_ticks.append(self.tick_count)
+        self.migrations += 1
+
+    def migrate(self, req_id: int, to_shard: int) -> bool:
+        """Move the in-flight request ``req_id`` to shard ``to_shard``.
+
+        The operator/test entry point for forcing a cross-shard move at a
+        chosen temperature level (the scheduler's rebalancer calls the
+        same checkpoint/restore path).  Returns False if the request is
+        not active, already home, or the target shard lacks room.
+        """
+        if not 0 <= to_shard < len(self.shards):
+            raise ValueError(
+                f"to_shard {to_shard} out of range for "
+                f"{len(self.shards)} shards")
+        dst = self.shards[to_shard]
+        for shard, job in self._iter_jobs():
+            if job.req.req_id == req_id:
+                if shard.index == to_shard \
+                        or dst.pool.n_free < len(job.slots):
+                    return False
+                self._migrate_job(shard, job.rid, dst)
+                return True
+        return False
 
     def preempt(self, req_id: int) -> bool:
         """Swap out the in-flight request ``req_id`` (False if not active).
@@ -229,9 +365,9 @@ class SAServeEngine:
         path; this is the operator/test entry point for preempting at a
         chosen temperature level.
         """
-        for rid, job in list(self.rids.jobs.items()):
+        for shard, job in list(self._iter_jobs()):
             if job.req.req_id == req_id:
-                self._swap_out(rid)
+                self._swap_out(shard, job.rid)
                 return True
         return False
 
@@ -247,45 +383,74 @@ class SAServeEngine:
             finish_tick=self.tick_count, finish_reason="rejected",
             arrival_time=arrival, submit_wall=submit_wall,
             finish_wall=self._now(), requested_chains=req.n_chains,
-            granted_chains=0))
+            granted_chains=0, home_shard=-1))
         self.rejections += 1
 
     # ---------------------------------------------------------------- tick
     def tick(self) -> None:
-        """Admit, then advance every active slot by one temperature level."""
+        """Admit, then advance every active slot by one temperature level.
+
+        Two passes over the shards: *launch* every ``(shard, dim, N)``
+        group's device program first (JAX dispatch is asynchronous, so
+        programs on different devices execute concurrently), then
+        *collect* — materialize results on host, scatter blocks back and
+        retire finished requests.  Collecting inline per group would
+        serialize the shards: ``np.asarray`` blocks on the transfer, and
+        device k+1 would not launch until device k had fully finished.
+        """
         self._admit()
-        if not self.rids.jobs:
+        if self.n_active == 0:
             self.tick_count += 1
             return
 
-        # Dispatch groups are keyed by shape alone — (dim, N) — because the
-        # objective id is a runtime kernel input; mixed-objective groups
-        # share one compiled program.
-        groups: Dict[Tuple[int, int], List[ActiveJob]] = defaultdict(list)
-        for job in self.rids.jobs.values():
-            groups[(job.req.dim, job.req.N)].append(job)
-
-        for (dim, n_steps), jobs in sorted(groups.items()):
-            self._dispatch_group(dim, n_steps, jobs)
-            self.group_launches += 1
-            for job in jobs:
-                if job.first_tick < 0:
-                    job.first_tick = self.tick_count
-                    job.first_tick_wall = self._now()
-                self.sweeps_done += len(job.slots)
-                job.level += 1
-                job.steps_done += n_steps
-                job.evals += n_steps * job.granted_chains
-                job.T *= job.req.rho
-                job.history.append(job.best_f)   # champion trajectory/level
-                reason = self._finish_reason(job)
-                if reason is not None:
-                    self._retire(job, reason)
+        launches = []
+        for shard in self.shards:
+            # Dispatch groups are keyed by shape alone — (dim, N) —
+            # because the objective id is a runtime kernel input;
+            # mixed-objective groups share one compiled program.  Groups
+            # never span shards: each runs on the shard's own device.
+            groups: Dict[Tuple[int, int], List[ActiveJob]] = defaultdict(list)
+            for job in shard.rids.jobs.values():
+                groups[(job.req.dim, job.req.N)].append(job)
+            for (dim, n_steps), jobs in sorted(groups.items()):
+                launches.append(self._launch_group(shard, dim, n_steps, jobs))
+                self.group_launches += 1
+        for launch in launches:
+            self._collect_group(*launch)
         self.tick_count += 1
 
-    def _dispatch_group(self, dim: int, n_steps: int,
-                        jobs: List[ActiveJob]) -> None:
-        """Pack the group's slots, run one device program, scatter back."""
+    def _collect_group(self, shard: EngineShard, n_steps: int,
+                       jobs: List[ActiveJob], slot_list, outs) -> None:
+        """Materialize one group's results and advance its jobs one level."""
+        cps = self.cfg.chains_per_slot
+        x2, xb, fb = (np.asarray(outs[0]), np.asarray(outs[2]),
+                      np.asarray(outs[3]))
+        for b, (s, job) in enumerate(slot_list):
+            # Copy: a bare slice would alias (and pin) the whole padded buffer.
+            shard.pool.set_block(s, x2[b * cps:(b + 1) * cps].copy())
+        for job in jobs:
+            f = float(fb[job.rid])
+            if f < job.best_f:
+                job.best_f = f
+                job.best_x = xb[job.rid].copy()
+            if job.first_tick < 0:
+                job.first_tick = self.tick_count
+                job.first_tick_wall = self._now()
+            self.sweeps_done += len(job.slots)
+            shard.sweeps_done += len(job.slots)
+            job.level += 1
+            job.steps_done += n_steps
+            job.evals += n_steps * job.granted_chains
+            job.T *= job.req.rho
+            job.history.append(job.best_f)       # champion trajectory/level
+            reason = self._finish_reason(job)
+            if reason is not None:
+                self._retire(shard, job, reason)
+
+    def _launch_group(self, shard: EngineShard, dim: int, n_steps: int,
+                      jobs: List[ActiveJob]):
+        """Pack the group's slots and launch its device program (async);
+        returns the collect-pass arguments."""
         cps = self.cfg.chains_per_slot
         slot_list: List[Tuple[int, ActiveJob]] = [
             (s, job) for job in jobs for s in job.slots]
@@ -305,12 +470,12 @@ class SAServeEngine:
         seg = np.empty((n_padded * cps,), np.int32)
         adopt = np.empty((n_padded * cps,), bool)
         for b, (s, job) in enumerate(slot_list):
-            x[b * cps:(b + 1) * cps] = self.pool.get_block(s)
+            x[b * cps:(b + 1) * cps] = shard.pool.get_block(s)
             kid_blk[b] = np.int32(job.req.kid)
             T_blk[b] = job.T
             seed_blk[b] = np.uint32(job.req.seed)
             step0_blk[b] = np.uint32(job.steps_done)
-            base_blk[b] = self.pool.chain_base[s]
+            base_blk[b] = shard.pool.chain_base[s]
             seg[b * cps:(b + 1) * cps] = job.rid
             adopt[b * cps:(b + 1) * cps] = job.req.exchange == "sync"
         # Dummy pad blocks: replicate block 0, claim the reserved segment
@@ -325,39 +490,34 @@ class SAServeEngine:
             seg[b * cps:(b + 1) * cps] = self.cfg.n_slots
             adopt[b * cps:(b + 1) * cps] = False
 
-        x2, fx2, xb, fb = _group_tick(
-            jnp.asarray(x), jnp.asarray(kid_blk), jnp.asarray(T_blk),
-            jnp.asarray(seed_blk), jnp.asarray(step0_blk),
-            jnp.asarray(base_blk), jnp.asarray(seg),
-            jnp.asarray(adopt), n_steps=n_steps, blk=cps,
+        # Committed transfers pin the group's program to the shard's mesh
+        # device.  The call returns device arrays without blocking; the
+        # collect pass materializes them after every shard has launched.
+        dev = shard.device
+        put = lambda a: jax.device_put(a, dev)
+        outs = _group_tick(
+            put(x), put(kid_blk), put(T_blk), put(seed_blk), put(step0_blk),
+            put(base_blk), put(seg), put(adopt), n_steps=n_steps, blk=cps,
             variant=self.cfg.variant, use_pallas=self._use_pallas,
             interpret=self.cfg.interpret,
             num_segments=self.cfg.n_slots + 1)
-        x2 = np.asarray(x2)
-        xb = np.asarray(xb)
-        fb = np.asarray(fb)
-
-        for b, (s, job) in enumerate(slot_list):
-            # Copy: a bare slice would alias (and pin) the whole padded buffer.
-            self.pool.set_block(s, x2[b * cps:(b + 1) * cps].copy())
-        for job in jobs:
-            f = float(fb[job.rid])
-            if f < job.best_f:
-                job.best_f = f
-                job.best_x = xb[job.rid].copy()
+        return shard, n_steps, jobs, slot_list, outs
 
     def _finish_reason(self, job: ActiveJob) -> Optional[str]:
         req = job.req
-        if (req.target_error is not None
-                and job.best_f <= F_OPT[req.kid] + req.target_error):
-            return "target"
+        if req.target_error is not None:
+            # submit() guarantees the optimum exists; .get keeps the tick
+            # loop un-wedgeable even if F_OPT is mutated under a live job.
+            f_opt = F_OPT.get(req.kid)
+            if f_opt is not None and job.best_f <= f_opt + req.target_error:
+                return "target"
         if req.max_evals is not None and job.evals >= req.max_evals:
             return "budget"
         if job.level >= req.n_levels:
             return "ladder"
         return None
 
-    def _retire(self, job: ActiveJob, reason: str) -> None:
+    def _retire(self, shard: EngineShard, job: ActiveJob, reason: str) -> None:
         self.results.append(RequestResult(
             req_id=job.req.req_id, objective=job.req.objective,
             dim=job.req.dim, x_best=job.best_x, f_best=job.best_f,
@@ -371,9 +531,11 @@ class SAServeEngine:
             granted_chains=job.granted_chains,
             preempted_ticks=list(job.preempted_ticks),
             resumed_ticks=list(job.resumed_ticks),
-            champion_history=list(job.history)))
-        self.pool.release(job.rid)
-        self.rids.free(job.rid)
+            champion_history=list(job.history),
+            home_shard=job.home_shard,
+            migrated_ticks=list(job.migrated_ticks)))
+        shard.pool.release(job.rid)
+        shard.rids.free(job.rid)
 
     # ----------------------------------------------------------------- run
     def run(self, max_ticks: Optional[int] = None) -> List[RequestResult]:
@@ -397,9 +559,10 @@ class SAServeEngine:
         so arrival timestamps stay on the tick axis.  Per-request
         lifecycle events (submit/admit/first-tick/complete) are stamped in
         both tick-time (deterministic under a fixed arrival seed) and
-        wall-time.
+        wall-time — the latter on the engine's monotonic epoch, the same
+        clock ``wall_s`` is measured on.
         """
-        t0 = time.time()
+        t0 = self._now()
         while True:
             if max_ticks is not None and self.tick_count >= max_ticks:
                 break
@@ -423,22 +586,27 @@ class SAServeEngine:
                         self.tick_count = jump
                         continue
             self.tick()
-        self.wall_s = time.time() - t0
+        self.wall_s = self._now() - t0
         return self.results
 
     def stats(self) -> dict:
         wall = getattr(self, "wall_s", float("nan"))
         ticks = max(self.tick_count, 1)
         evals = sum(r.n_evals for r in self.results)
+        n_slots_total = self.cfg.n_slots * len(self.shards)
         per_s = lambda v: v / wall if wall and wall > 0 else 0.0
         return {
             "ticks": self.tick_count,
+            "devices": len(self.shards),
             "group_launches": self.group_launches,
+            "submitted": self.n_submitted,
             "completed": sum(r.completed for r in self.results),
             "rejected": self.rejections,
             "preemptions": self.preemptions,
+            "migrations": self.migrations,
             "sweeps": self.sweeps_done,
-            "occupancy": self.sweeps_done / (ticks * self.cfg.n_slots),
+            "occupancy": self.sweeps_done / (ticks * n_slots_total),
+            "shard_occupancy": [s.occupancy(ticks) for s in self.shards],
             "wall_s": wall,
             "requests_per_s": per_s(len(self.results)),
             "sweeps_per_s": per_s(self.sweeps_done),
@@ -447,14 +615,16 @@ class SAServeEngine:
 
 
 def run_standalone(req: SARequest, cfg: EngineConfig) -> RequestResult:
-    """Serve ``req`` alone on a dedicated pool — the per-tenant baseline.
+    """Serve ``req`` alone on a dedicated single-device pool — the
+    per-tenant baseline.
 
     Placement-invariant RNG + segmented exchange make the packed engine
     produce the *same* trajectory as this single-tenant run (bit-exact
-    champions for identical seeds); tests assert it, serve_sa --check
+    champions for identical seeds) — on any home shard, across preemption
+    and across cross-shard migration; tests assert it, serve_sa --check
     reports it.
     """
     alone = SAServeEngine(dataclasses.replace(
-        cfg, n_slots=req.slots_needed(cfg.chains_per_slot)))
+        cfg, n_slots=req.slots_needed(cfg.chains_per_slot), n_devices=1))
     alone.submit(req)
     return alone.run()[0]

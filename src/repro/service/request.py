@@ -157,6 +157,10 @@ class RequestResult:
     preempted_ticks: List[int] = dataclasses.field(default_factory=list)
     resumed_ticks: List[int] = dataclasses.field(default_factory=list)
     champion_history: List[float] = dataclasses.field(default_factory=list)
+    # ---- sharded-pool metadata ----
+    home_shard: int = 0         # engine shard that retired the request
+                                # (-1 if rejected: never placed)
+    migrated_ticks: List[int] = dataclasses.field(default_factory=list)
 
     # ---- derived status ----
     @property
@@ -176,6 +180,11 @@ class RequestResult:
     @property
     def n_preemptions(self) -> int:
         return len(self.preempted_ticks)
+
+    @property
+    def n_migrations(self) -> int:
+        """Cross-shard moves (checkpoint/restore between shard pools)."""
+        return len(self.migrated_ticks)
 
     # ---- derived latencies: tick clock (deterministic) ----
     @property
@@ -228,6 +237,9 @@ class RequestResult:
             "preempted_ticks": list(self.preempted_ticks),
             "resumed_ticks": list(self.resumed_ticks),
             "n_preemptions": self.n_preemptions,
+            "home_shard": self.home_shard,
+            "migrated_ticks": list(self.migrated_ticks),
+            "n_migrations": self.n_migrations,
             "arrival_time": self.arrival_time,
             "submit_tick": self.submit_tick, "start_tick": self.start_tick,
             "first_tick": self.first_tick, "finish_tick": self.finish_tick,

@@ -41,6 +41,20 @@ which decide what happens when a request cannot be admitted at full width:
   directly funds a lower-priority admission (from the next tick on the
   ordinary backfill/aging/hol rules govern them again).
 
+With the slot pool sharded over a device mesh (sharding.py), the
+scheduler additionally owns the **placement layer**:
+
+* :meth:`AdmissionScheduler.place` orders the shards for each tick's
+  admission scans — least-loaded first, with a locality tie-break toward
+  a shard already running the queue head's ``(dim, N)`` dispatch shape —
+  so every admitted request's *home shard* is the emptiest compatible
+  one, deterministically;
+* :meth:`AdmissionScheduler.plan_migrations` rebalances à la Russkov
+  et al. (arXiv:2006.00561): when the queue head fits on no single shard
+  but the pool as a whole has room, it plans bounded cross-shard moves
+  (checkpoint on the donor, restore on the recipient — bit-exact, since
+  restore is placement-invariant) until the head is admissible.
+
 Invariants
 ----------
 * The scheduler never over-commits: the slots granted by one ``admit()``
@@ -64,7 +78,7 @@ Invariants
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.service.request import OVERLOAD_POLICIES, SARequest
 from repro.service.slots import ActiveJob, SwappedJob
@@ -115,6 +129,39 @@ class AdmissionPlan:
         default_factory=list)   # (entry, granted_slots)
     evict: List[int] = dataclasses.field(default_factory=list)  # rids
     rejected: List[QueueEntry] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ShardedAdmissionPlan:
+    """One tick's admission decisions across every shard, in execution
+    order for the engine: reject, then evict (frees slots), then place.
+    ``admitted`` and ``evict`` entries carry their shard index — rids are
+    shard-local."""
+
+    admitted: List[Tuple[QueueEntry, int, int]] = dataclasses.field(
+        default_factory=list)   # (entry, granted_slots, shard index)
+    evict: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list)   # (rid, shard index)
+    rejected: List[QueueEntry] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardView:
+    """Scheduler-facing snapshot of one engine shard — the placement
+    layer's input.  The scheduler never touches pools or devices; the
+    engine summarizes each shard into (free capacity, resident jobs,
+    resident dispatch shapes) before asking for placement or migration
+    decisions."""
+
+    index: int                          # engine shard id
+    free_slots: int
+    active: Tuple[ActiveJob, ...]       # jobs resident on the shard
+    shapes: FrozenSet[Tuple[int, int]]  # (dim, N) dispatch shapes resident
+
+
+#: One planned cross-shard move: (rid on the donor shard, donor shard
+#: index, recipient shard index).
+Migration = Tuple[int, int, int]
 
 
 class AdmissionScheduler:
@@ -172,9 +219,93 @@ class AdmissionScheduler:
         deadline = self.deadline_of(entry.req)
         return deadline is not None and tick - entry.submit_tick > deadline
 
+    # ------------------------------------------------------------- placement
+    def _head(self, tick: int) -> Optional[QueueEntry]:
+        """Highest-effective-priority queued entry that is not expired —
+        the one whose placement the shard ordering optimizes for."""
+        for entry in self._ordered(tick):
+            if not self._expired(entry, tick):
+                return entry
+        return None
+
+    @staticmethod
+    def _shard_key(free: int, has_shape: bool, index: int):
+        """Deterministic shard preference: least-loaded first (most free
+        slots), then locality (a shard already running the request's
+        ``(dim, N)`` dispatch shape dispatches it without opening a new
+        ``(shard, dim, N)`` device program), then lowest index."""
+        return (-free, 0 if has_shape else 1, index)
+
+    def place(self, shards: Sequence[ShardView], tick: int
+              ) -> List[ShardView]:
+        """Home-shard preference order for the queue head.
+
+        The ordering primitive behind :meth:`admit_sharded` (which
+        re-evaluates it per entry against live free counts): least-loaded
+        first, locality tie-break toward the head's ``(dim, N)`` shape,
+        then index — fully deterministic, like the admission order itself.
+        """
+        head = self._head(tick)
+        head_shape = (head.req.dim, head.req.N) if head is not None else None
+        return sorted(shards, key=lambda s: self._shard_key(
+            s.free_slots, head_shape in s.shapes, s.index))
+
+    def plan_migrations(self, shards: Sequence[ShardView],
+                        chains_per_slot: int, tick: int,
+                        budget: int) -> List[Migration]:
+        """Russkov-style rebalance: cross-shard moves that seat the head.
+
+        Fires only when the queue head fits on *no* single shard but the
+        pool as a whole has room: jobs are then checkpointed off one donor
+        shard onto other shards' free slots until the donor can seat the
+        head.  Moves are bounded by ``budget`` per tick, prefer the donor
+        already closest to fitting, and move the narrowest jobs first
+        (smallest checkpoints).  Migration never perturbs a trajectory —
+        restore is placement-invariant — so no priority test guards it;
+        thrash is impossible because a plan is only returned when it makes
+        the head admissible, which removes the head from the queue.
+
+        Returns ``(rid, donor shard, recipient shard)`` moves in execution
+        order; empty when the head fits somewhere (or nothing can help).
+        """
+        if budget <= 0 or not self._queue:
+            return []
+        head = self._head(tick)
+        if head is None:
+            return []
+        need = head.swapped.n_slots if head.swapped is not None \
+            else head.req.slots_needed(chains_per_slot)
+        if max((s.free_slots for s in shards), default=0) >= need:
+            return []                   # fits already: admission handles it
+        # Donor candidates, closest-to-fitting first (fewest slots to
+        # clear), ties by index.  Recipients absorb moved jobs into their
+        # genuinely-free slots only.
+        for donor in sorted(shards, key=lambda s: (-s.free_slots, s.index)):
+            freed = donor.free_slots
+            moves: List[Migration] = []
+            rec_free = {s.index: s.free_slots for s in shards
+                        if s.index != donor.index}
+            # Narrowest jobs first: cheapest checkpoints, finest packing.
+            for job in sorted(donor.active,
+                              key=lambda j: (len(j.slots), j.rid)):
+                if freed >= need or len(moves) >= budget:
+                    break
+                width = len(job.slots)
+                target = min((i for i, f in rec_free.items() if f >= width),
+                             key=lambda i: (-rec_free[i], i), default=None)
+                if target is None:
+                    continue
+                moves.append((job.rid, donor.index, target))
+                rec_free[target] -= width
+                freed += width
+            if freed >= need and moves:
+                return moves
+        return []
+
     # ------------------------------------------------------------- admission
     def admit(self, free_slots: int, chains_per_slot: int, tick: int,
-              active: Sequence[ActiveJob] = ()) -> AdmissionPlan:
+              active: Sequence[ActiveJob] = (),
+              preemption_budget: Optional[int] = None) -> AdmissionPlan:
         """Plan this tick's admissions into ``free_slots`` slots.
 
         ``active`` is the engine's in-residence job list — the eviction
@@ -182,25 +313,57 @@ class AdmissionScheduler:
         :class:`AdmissionPlan`; planned entries are removed from the queue
         (the engine re-queues evicted jobs via :meth:`requeue`).  The plan
         never over-commits: granted slots <= free + evicted slots.
+
+        The single-pool view of :meth:`admit_sharded` — one shard holding
+        the whole pool; exactly the pre-sharding admission semantics.
         """
-        plan = AdmissionPlan()
-        # Eviction candidates, cheapest first: lowest effective priority,
-        # ties broken by most-recent admission (LIFO — the job that has
-        # annealed least loses least progress).
-        candidates = sorted(
-            active, key=lambda j: (self.effective_priority(
+        view = ShardView(
+            index=0, free_slots=free_slots, active=tuple(active),
+            shapes=frozenset((j.req.dim, j.req.N) for j in active))
+        plan = self.admit_sharded([view], chains_per_slot, tick,
+                                  preemption_budget=preemption_budget)
+        return AdmissionPlan(
+            admitted=[(e, granted) for e, granted, _ in plan.admitted],
+            evict=[rid for rid, _ in plan.evict],
+            rejected=plan.rejected)
+
+    def admit_sharded(self, shards: Sequence[ShardView],
+                      chains_per_slot: int, tick: int,
+                      preemption_budget: Optional[int] = None
+                      ) -> ShardedAdmissionPlan:
+        """Plan one tick's admissions across every shard of the pool.
+
+        One queue walk in effective-priority order; **each entry is tried
+        at full width on every shard** (least-loaded first, locality
+        tie-break) before its overload fallback may fire — a request is
+        degraded, or a tenant evicted for it, only when *no* shard can
+        seat it whole.  Lower-priority entries therefore can never
+        pre-empt slots a higher-priority entry's fallback would have
+        used: the walk order is the priority order, exactly as in the
+        single-pool scheduler.  The preemption budget bounds evictions
+        per *tick* across all shards.
+        """
+        plan = ShardedAdmissionPlan()
+        budget = self.cfg.preemption_budget if preemption_budget is None \
+            else preemption_budget
+        # Per-shard live state.  Slots freed by evictions are tracked
+        # separately from genuinely-free slots: surplus eviction capacity
+        # may only seat entries whose effective priority is >= that of
+        # every job evicted from that shard this tick (``evict_floor``) —
+        # otherwise evicting a mid-priority job for an urgent one could
+        # hand its leftover slots to a *lower*-priority queued request in
+        # the same pass, a priority inversion against the victim.
+        free = {s.index: s.free_slots for s in shards}
+        evicted_free = {s.index: 0 for s in shards}
+        evict_floor = {s.index: float("-inf") for s in shards}
+        shapes = {s.index: set(s.shapes) for s in shards}
+        # Eviction candidates per shard, cheapest first: lowest effective
+        # priority, ties broken by most-recent admission (LIFO — the job
+        # that has annealed least loses least progress).
+        candidates = {
+            s.index: sorted(s.active, key=lambda j: (self.effective_priority(
                 j.req, j.submit_tick, tick), -j.start_tick, j.rid))
-        budget = self.cfg.preemption_budget
-        # Slots freed by this pass's evictions are tracked separately from
-        # genuinely-free slots: surplus eviction capacity may only seat
-        # entries whose effective priority is >= that of every job evicted
-        # this tick (``evict_floor``) — otherwise evicting a mid-priority
-        # job for an urgent one could hand its leftover slots to a
-        # *lower*-priority queued request in the same pass, a priority
-        # inversion against the victim.
-        free = free_slots
-        evicted_free = 0
-        evict_floor = float("-inf")      # max eff among this pass's victims
+            for s in shards}
         blocked_head = False
         for entry in self._ordered(tick):
             if self._expired(entry, tick):
@@ -212,39 +375,68 @@ class AdmissionScheduler:
             if blocked_head:
                 continue
             eff = self.effective_priority(req, entry.submit_tick, tick)
-            outranks_victims = eff >= evict_floor
-            usable = free + (evicted_free if outranks_victims else 0)
-            if need <= usable:
-                plan.admitted.append((entry, need))
-                free, evicted_free = self._consume(need, free, evicted_free)
-                continue
+            shape = (req.dim, req.N)
+
+            def usable(si):
+                outranks = eff >= evict_floor[si]
+                return free[si] + (evicted_free[si] if outranks else 0)
+
+            order = sorted(free, key=lambda si: self._shard_key(
+                usable(si), shape in shapes[si], si))
             placed = False
-            policy = self.overload_policy(req)
-            if policy == "preempt" and budget > 0 and candidates:
-                placed, surplus, vmax, budget = self._try_preempt(
-                    plan, entry, need, usable, budget, candidates, tick)
-                if placed:
-                    # The entry drained `usable` and the evictions' gain
+            for si in order:                 # full width, on any shard
+                if need <= usable(si):
+                    plan.admitted.append((entry, need, si))
+                    free[si], evicted_free[si] = self._consume(
+                        need, free[si], evicted_free[si])
+                    shapes[si].add(shape)
+                    placed = True
+                    break
+            policy = self.overload_policy(req) if not placed else "none"
+            if policy == "preempt" and budget > 0:
+                for si in order:             # fewest evictions first
+                    if not candidates[si]:
+                        continue
+                    outranks = eff >= evict_floor[si]
+                    avail = usable(si)
+                    victims, gain, vmax = self._select_victims(
+                        eff, need, avail, budget, candidates[si], tick)
+                    if victims is None:
+                        continue
+                    for job in victims:
+                        plan.evict.append((job.rid, si))
+                        candidates[si].remove(job)
+                    budget -= len(victims)
+                    plan.admitted.append((entry, need, si))
+                    # The entry drained `avail` and the evictions' gain
                     # down to `surplus` slots, which stay in the
                     # eviction-reserved pool (floored at the priciest
                     # victim so far — conservative across rounds).
-                    if outranks_victims:
-                        free, evicted_free = 0, surplus
+                    surplus = avail + gain - need
+                    if outranks:
+                        free[si], evicted_free[si] = 0, surplus
                     else:
-                        free, evicted_free = 0, evicted_free + surplus
-                    evict_floor = max(evict_floor, vmax)
+                        free[si], evicted_free[si] = \
+                            0, evicted_free[si] + surplus
+                    evict_floor[si] = max(evict_floor[si], vmax)
+                    shapes[si].add(shape)
+                    placed = True
+                    break
             if not placed and policy == "degrade" and entry.swapped is None:
                 floor_slots = req.slots_floor(chains_per_slot)
-                if floor_slots <= usable:  # grant all that fits, down to floor
-                    plan.admitted.append((entry, usable))
-                    free, evicted_free = self._consume(usable, free,
-                                                       evicted_free)
+                si = order[0]                # most usable: widest grant
+                grant = usable(si)
+                if floor_slots <= grant:     # all that fits, down to floor
+                    plan.admitted.append((entry, grant, si))
+                    free[si], evicted_free[si] = self._consume(
+                        grant, free[si], evicted_free[si])
+                    shapes[si].add(shape)
                     placed = True
             if not placed and tick - entry.submit_tick > self.cfg.hol_patience:
                 # Head-of-line starved past patience: stop backfilling so
                 # freed slots can accumulate for it.
                 blocked_head = True
-        taken = {id(e) for e, _ in plan.admitted}
+        taken = {id(e) for e, _, _ in plan.admitted}
         taken.update(id(e) for e in plan.rejected)
         self._queue = [e for e in self._queue if id(e) not in taken]
         return plan
@@ -255,14 +447,13 @@ class AdmissionScheduler:
         from_free = min(free, need)
         return free - from_free, evicted_free - (need - from_free)
 
-    def _try_preempt(self, plan: AdmissionPlan, entry: QueueEntry, need: int,
-                     usable: int, budget: int, candidates: List[ActiveJob],
-                     tick: int):
-        """Evict strictly-lower-effective-priority jobs until ``entry``
-        fits, if the preemption budget allows; all-or-nothing.  Returns
-        (placed, surplus slots freed beyond need, max victim effective
-        priority, remaining budget)."""
-        mine = self.effective_priority(entry.req, entry.submit_tick, tick)
+    def _select_victims(self, mine: float, need: int, usable: int,
+                        budget: int, candidates: List[ActiveJob],
+                        tick: int):
+        """Pick strictly-lower-effective-priority victims until ``need``
+        slots are reachable, if the preemption budget allows;
+        all-or-nothing.  Returns (victims | None, slot gain, max victim
+        effective priority)."""
         victims: List[ActiveJob] = []
         gain = 0
         floor = float("-inf")
@@ -276,9 +467,5 @@ class AdmissionScheduler:
             gain += len(job.slots)
             floor = max(floor, eff)
         if usable + gain < need:
-            return False, 0, floor, budget  # insufficient: evict nothing
-        for job in victims:
-            plan.evict.append(job.rid)
-            candidates.remove(job)
-        plan.admitted.append((entry, need))
-        return True, usable + gain - need, floor, budget - len(victims)
+            return None, 0, floor   # insufficient: evict nothing
+        return victims, gain, floor

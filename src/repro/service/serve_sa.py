@@ -17,6 +17,9 @@ Usage::
       --chains-per-slot 16 --no-check        # quick smoke
   PYTHONPATH=src python -m repro.service.serve_sa --arrivals poisson \
       --rate 0.5 --requests 16 --slots 4 --chains-per-slot 16 --json
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+      python -m repro.service.serve_sa --devices 4 --slots 2 \
+      --chains-per-slot 16 --arrivals poisson --rate 1.0   # sharded pool
 """
 from __future__ import annotations
 
@@ -48,9 +51,17 @@ flag groups:
   load shape      --requests (mix size), --max-slots-per-req (request
                   footprint), --seed (mix generator: objectives, dims,
                   schedules, priorities are all derived from it).
-  pool shape      --slots (pool size), --chains-per-slot (kernel block
-                  size; multiple of 8 on TPU), --variant (delta = O(1)
-                  incremental evaluation, full = paper-faithful O(dim)).
+  pool shape      --slots (pool size PER SHARD), --chains-per-slot (kernel
+                  block size; multiple of 8 on TPU), --variant (delta =
+                  O(1) incremental evaluation, full = paper-faithful
+                  O(dim)), --devices (engine shards on the 1-D (pool,)
+                  mesh: each shard owns --slots slots on its own device
+                  and dispatches independent device programs; the
+                  scheduler homes each request on the least-loaded shard
+                  and rebalances by bit-exact cross-shard migration.  On
+                  CPU, XLA_FLAGS=--xla_force_host_platform_device_count=N
+                  provides N real host devices; with fewer physical
+                  devices, logical shards share them round-robin).
   admission       --policy priority (aged, default) | fifo.
   overload / SLO  --overload-policy none (default) | reject (drop a
                   request once it queues past --deadline ticks) | degrade
@@ -125,9 +136,16 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=32,
                     help="number of requests in the synthetic mix")
     ap.add_argument("--slots", type=int, default=8,
-                    help="slot-pool size (concurrent chain blocks)")
+                    help="slot-pool size per shard (concurrent chain blocks)")
     ap.add_argument("--chains-per-slot", type=int, default=32,
                     help="chains per slot == kernel block size")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="engine shards on the (pool,) device mesh; each "
+                         "owns --slots slots (CPU-testable via XLA_FLAGS="
+                         "--xla_force_host_platform_device_count)")
+    ap.add_argument("--migration-budget", type=int, default=1,
+                    help="max cross-shard rebalancing moves per tick "
+                         "(0 disables automatic migration)")
     ap.add_argument("--variant", default="delta", choices=["delta", "full"],
                     help="objective evaluation: O(1) delta or O(dim) full")
     ap.add_argument("--seed", type=int, default=0,
@@ -173,7 +191,8 @@ def main(argv=None):
 
     cfg = EngineConfig(
         n_slots=args.slots, chains_per_slot=args.chains_per_slot,
-        variant=args.variant,
+        n_devices=args.devices, variant=args.variant,
+        migration_budget=args.migration_budget,
         scheduler=SchedulerConfig(policy=args.policy,
                                   overload=args.overload_policy,
                                   default_deadline=args.deadline,
@@ -186,7 +205,8 @@ def main(argv=None):
 
     results = engine.run_stream(arrivals, max_ticks=args.max_ticks)
     stats = engine.stats()
-    lat = latency_summary(results, ticks=engine.tick_count)
+    lat = latency_summary(results, ticks=engine.tick_count,
+                          n_submitted=engine.n_submitted)
 
     by_id = {r.req_id: r for r in results}
     # Requests with a terminal result, split by status; rejected requests
@@ -221,6 +241,8 @@ def main(argv=None):
             "config": {
                 "requests": args.requests, "slots": args.slots,
                 "chains_per_slot": args.chains_per_slot,
+                "devices": args.devices,
+                "migration_budget": args.migration_budget,
                 "variant": args.variant, "policy": args.policy,
                 "overload_policy": args.overload_policy,
                 "deadline": args.deadline,
@@ -248,6 +270,15 @@ def main(argv=None):
               f"{stats['sweeps_per_s']:.1f} sweeps/s, "
               f"{stats['chain_steps_per_s']:.3g} chain-steps/s | "
               f"occupancy {stats['occupancy']:.1%}")
+        if args.devices > 1:
+            shard_util = " ".join(f"{u:.0%}" for u in
+                                  stats["shard_occupancy"])
+            print(f"[serve_sa] {args.devices} shards x {args.slots} slots: "
+                  f"per-shard utilization [{shard_util}], "
+                  f"{stats['migrations']} migrations")
+        if lat["incomplete"]:
+            print(f"[serve_sa] {lat['incomplete']} requests still in flight "
+                  f"or queued at the --max-ticks horizon (not rejected)")
         if args.arrivals != "batch":
             print(f"[serve_sa] open loop @ {args.rate} req/tick: "
                   f"queue delay p50/p99 = {lat['queue_delay_p50']:.1f}/"
@@ -268,6 +299,8 @@ def main(argv=None):
                     f"[{res.finish_reason}]")
             if res.n_preemptions:
                 line += f" preempted x{res.n_preemptions}"
+            if res.n_migrations:
+                line += f" migrated x{res.n_migrations}"
             if res.degraded:
                 line += (f" degraded {res.granted_chains}/"
                          f"{res.requested_chains} chains")

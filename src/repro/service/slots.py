@@ -62,6 +62,12 @@ class ActiveJob:
     preempted_ticks: List[int] = dataclasses.field(default_factory=list)
     resumed_ticks: List[int] = dataclasses.field(default_factory=list)
     history: List[float] = dataclasses.field(default_factory=list)
+    # Sharded-pool lifecycle: the engine shard currently hosting the job
+    # and the ticks at which it migrated between shards (Russkov-style
+    # rebalancing: checkpoint on the old shard, restore on the new one —
+    # bit-exact, because restore is placement-invariant).
+    home_shard: int = 0
+    migrated_ticks: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass

@@ -26,7 +26,8 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.service import (ArrivalProcess, EngineConfig, SARequest,
-                           SAServeEngine, SchedulerConfig, run_standalone)
+                           SAServeEngine, SchedulerConfig, ShardView,
+                           run_standalone)
 from repro.service.slots import ActiveJob
 
 CPS = 8
@@ -137,17 +138,100 @@ def test_scheduler_plan_invariants(scenario):
     assert len(remaining) + len(planned) == len(queued)
 
 
+# ----------------------------------------------------- placement properties
+@st.composite
+def shard_scenarios(draw):
+    """Random shard snapshots + queue for the placement layer."""
+    n_shards = draw(st.integers(1, 4))
+    n_slots = draw(st.integers(1, 4))       # capacity per shard
+    shards = []
+    rid_counter = 0
+    for i in range(n_shards):
+        used = 0
+        jobs = []
+        while used < n_slots and draw(st.booleans()):
+            width = draw(st.integers(1, min(2, n_slots - used)))
+            jobs.append(ActiveJob(
+                req=_req(100 + rid_counter, n_chains=width * CPS,
+                         priority=draw(st.integers(0, 5))),
+                rid=rid_counter, slots=list(range(used, used + width)),
+                submit_tick=draw(st.integers(0, 10))))
+            rid_counter += 1
+            used += width
+        shards.append(ShardView(
+            index=i, free_slots=n_slots - used, active=tuple(jobs),
+            shapes=frozenset((j.req.dim, j.req.N) for j in jobs)))
+    n_queued = draw(st.integers(0, 4))
+    queued = [(_req(i, n_chains=draw(st.integers(1, n_slots)) * CPS,
+                    priority=draw(st.integers(0, 5))),
+               draw(st.integers(0, 10)))
+              for i in range(n_queued)]
+    budget = draw(st.integers(0, 3))
+    tick = draw(st.integers(10, 30))
+    return shards, n_slots, queued, budget, tick
+
+
+@given(shard_scenarios())
+@settings(max_examples=150, deadline=None)
+def test_placement_and_migration_plan_invariants(scenario):
+    """Satellite/tentpole: the placement layer's outputs are sane for any
+    shard snapshot — place() is a least-loaded permutation, and a
+    migration plan is bounded, single-donor, capacity-respecting, and
+    only produced when it actually seats the queue head."""
+    from repro.service.scheduler import AdmissionScheduler
+    shards, n_slots, queued, budget, tick = scenario
+    sch = AdmissionScheduler(SchedulerConfig())
+    for req, sub in queued:
+        sch.submit(req, sub)
+
+    # place(): a permutation of the inputs, free counts non-increasing.
+    order = sch.place(shards, tick)
+    assert sorted(s.index for s in order) == sorted(s.index for s in shards)
+    frees = [s.free_slots for s in order]
+    assert frees == sorted(frees, reverse=True)
+
+    moves = sch.plan_migrations(shards, CPS, tick, budget)
+    assert len(moves) <= budget
+    assert len({rid for rid, _, _ in moves}) == len(moves)
+    if not queued or budget == 0:
+        assert moves == []
+        return
+    head = sch._head(tick)
+    need = head.req.slots_needed(CPS)
+    by_index = {s.index: s for s in shards}
+    if max(s.free_slots for s in shards) >= need:
+        assert moves == [], "migrated although the head already fits"
+    if moves:
+        donors = {src for _, src, _ in moves}
+        assert len(donors) == 1              # single-donor defrag
+        donor = by_index[donors.pop()]
+        donor_rids = {j.rid for j in donor.active}
+        rec_free = {s.index: s.free_slots for s in shards
+                    if s.index != donor.index}
+        freed = donor.free_slots
+        width_of = {j.rid: len(j.slots) for j in donor.active}
+        for rid, src, dst in moves:
+            assert rid in donor_rids and src == donor.index != dst
+            assert rec_free[dst] >= width_of[rid]  # recipient really fits it
+            rec_free[dst] -= width_of[rid]
+            freed += width_of[rid]
+        assert freed >= need                 # the plan seats the head
+
+
 # -------------------------------------------------------- engine properties
 @pytest.mark.slow
 @given(st.data())
 @settings(max_examples=12, deadline=None)
 def test_engine_invariants_under_random_preemption(data):
-    """Random arrivals x random preemption points: no slot leaks, exactly
-    one terminal status per request, and every completed request —
-    preempted, degraded or neither — is bit-exact vs run_standalone."""
+    """Random arrivals x random preemption/migration points x random shard
+    counts: no slot leaks on any shard, no double placement, exactly one
+    terminal status per request, and every completed request — preempted,
+    migrated, degraded or neither — is bit-exact vs run_standalone."""
     n_slots = 3
+    n_devices = data.draw(st.integers(1, 3))
     cfg = EngineConfig(n_slots=n_slots, chains_per_slot=CPS,
-                       use_pallas=False,
+                       n_devices=n_devices, use_pallas=False,
+                       migration_budget=data.draw(st.integers(0, 2)),
                        scheduler=SchedulerConfig(
                            overload=data.draw(st.sampled_from(
                                ["none", "reject", "degrade", "preempt"])),
@@ -166,21 +250,33 @@ def test_engine_invariants_under_random_preemption(data):
     engine = SAServeEngine(cfg)
     arrivals = ArrivalProcess.trace(reqs, times)
 
+    def live_req_ids():
+        return [job.req.req_id for _, job in engine._iter_jobs()]
+
     guard = 0
     while not (engine.done and arrivals.exhausted):
         guard += 1
         assert guard < 300, "engine failed to drain (livelock?)"
         for t, r in arrivals.due(engine.tick_count):
             engine.submit(r, t)
-        if engine.rids.jobs and data.draw(st.booleans()):
-            rid = data.draw(st.sampled_from(sorted(engine.rids.jobs)))
-            assert engine.preempt(engine.rids.jobs[rid].req.req_id)
+        live = live_req_ids()
+        if live and data.draw(st.booleans()):
+            engine.preempt(data.draw(st.sampled_from(sorted(live))))
+        live = live_req_ids()
+        if n_devices > 1 and live and data.draw(st.booleans()):
+            # Random operator migration; may no-op (full target / home).
+            engine.migrate(data.draw(st.sampled_from(sorted(live))),
+                           data.draw(st.integers(0, n_devices - 1)))
         engine.tick()
+        # Never double-placed: a request is resident on <= 1 shard.
+        resident = live_req_ids()
+        assert len(resident) == len(set(resident))
 
-    # No slot leaked; every rid recycled.
-    assert engine.pool.n_free == n_slots
-    assert np.all(engine.pool.owner == -1)
-    assert not engine.rids.jobs and len(engine.rids._free) == n_slots
+    # No slot leaked on any shard; every rid recycled.
+    for shard in engine.shards:
+        assert shard.pool.n_free == n_slots
+        assert np.all(shard.pool.owner == -1)
+        assert not shard.rids.jobs and len(shard.rids._free) == n_slots
     # Exactly one terminal status per submitted request.
     ids = sorted(r.req_id for r in engine.results)
     assert ids == list(range(n_reqs))
