@@ -29,13 +29,28 @@ trajectory for future PRs.
 ``--scale-devices 1,2,4`` serves the *same* seeded stream once per shard
 count (``--slots`` slots per shard on the 1-D ``(pool,)`` mesh) at a fixed
 ``--rate`` and reports the goodput / p99 gain sharding buys — the
-multi-device acceptance check.  Run under
+multi-device acceptance check; the table also lands in
+``artifacts/bench/BENCH_serve_scale.json`` (CI uploads it).  Run under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` for real host
 devices; logical shards otherwise.
 
   PYTHONPATH=src python benchmarks/serve_sa_latency.py \
       --scale-devices 1,2,4 --rate 1.0 --requests 48 --slots 2 \
       --chains-per-slot 8 --max-ticks 120
+
+``--drain`` is the elastic-fleet acceptance mode: the same seeded Poisson
+stream (at ``--drain-load-factor`` x the N-shard saturating load) is
+served twice — once on a static N-shard fleet, once draining one shard at
+``--drain-tick`` (N -> N-1 mid-stream: no new placements, jobs
+checkpoint-evacuate onto the survivors, the shard retires once empty).
+The drain run must complete with **zero lost requests** (exit 1
+otherwise) and the comparison reports how far the drain pushed p99
+queueing delay; everything lands in
+``artifacts/bench/BENCH_serve_drain.json``.
+
+  PYTHONPATH=src python benchmarks/serve_sa_latency.py --drain \
+      --devices 4 --slots 2 --chains-per-slot 8 --requests 48 \
+      --drain-tick 12
 """
 from __future__ import annotations
 
@@ -56,9 +71,11 @@ from repro.service.engine import EngineConfig, SAServeEngine
 from repro.service.scheduler import SchedulerConfig
 from repro.service.serve_sa import _jsonable, make_mix
 
-#: Default artifact path (repo-relative) for the --overload comparison.
-DEFAULT_OVERLOAD_OUT = (Path(__file__).resolve().parents[1]
-                        / "artifacts" / "bench" / "BENCH_serve_overload.json")
+#: Default artifact paths (repo-relative), one per benchmark mode.
+_BENCH_DIR = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+DEFAULT_OVERLOAD_OUT = _BENCH_DIR / "BENCH_serve_overload.json"
+DEFAULT_DRAIN_OUT = _BENCH_DIR / "BENCH_serve_drain.json"
+DEFAULT_SCALE_OUT = _BENCH_DIR / "BENCH_serve_scale.json"
 
 
 def bench_rate(rate: float, n_requests: int, n_slots: int,
@@ -164,7 +181,7 @@ def run_overload(args):
     for policy, row in doc["policies"].items():
         table.add(policy=policy, **{k: row[k] for k in cols[1:]})
     table.show()
-    out = Path(args.out)
+    out = Path(args.out) if args.out else DEFAULT_OVERLOAD_OUT
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(_jsonable(doc), indent=2, sort_keys=True,
                               allow_nan=False) + "\n")
@@ -178,6 +195,124 @@ def run_overload(args):
               f"({'bounded by deadline' if bounded else 'NOT bounded'}) vs "
               f"baseline {base['queue_delay_p99']:.1f}t, backlog "
               f"{doc['policies'][policy]['backlog']} vs {base['backlog']}")
+    return doc
+
+
+def bench_drain(args) -> dict:
+    """Same seeded stream, static fleet vs mid-stream N -> N-1 drain."""
+    if args.devices < 2:
+        raise SystemExit("--drain needs --devices >= 2")
+    reqs = make_mix(args.requests, args.chains_per_slot, seed=args.seed,
+                    max_slots_per_req=min(2, args.slots))
+    rate = args.drain_load_factor * saturating_rate(
+        reqs, args.slots * args.devices, args.chains_per_slot)
+
+    def serve(drain_tick):
+        cfg = EngineConfig(
+            n_slots=args.slots, chains_per_slot=args.chains_per_slot,
+            n_devices=args.devices, variant=args.variant,
+            migration_budget=args.migration_budget,
+            scheduler=SchedulerConfig(policy="priority"))
+        engine = SAServeEngine(cfg)
+        if drain_tick is not None:
+            engine.schedule_op(
+                drain_tick,
+                lambda: engine.drain(
+                    max(s.index for s in engine.live_shards)))
+        engine.run_stream(
+            ArrivalProcess.poisson(
+                [dataclasses.replace(r) for r in reqs],
+                rate=rate, seed=args.arrival_seed),
+            max_ticks=args.max_ticks)
+        stats = engine.stats()
+        lat = latency_summary(engine.results, ticks=engine.tick_count,
+                              n_submitted=engine.n_submitted)
+        lost = engine.n_submitted - len(engine.results)
+        return {
+            "submitted": engine.n_submitted,
+            "completed": lat["completed"],
+            "rejected": lat["rejected"],
+            "incomplete": lat["incomplete"],
+            "lost": lost,                          # must be 0: no request may
+                                                   # vanish across retirement
+            "migrations": stats["migrations"],
+            "preemptions": stats["preemptions"],
+            "shrinks": stats["shrinks"],
+            "devices_final": stats["devices"],
+            "shards_retired": stats["shards_retired"],
+            "drain_completed_tick": (engine.retired_shards[0][1]
+                                     if engine.retired_shards else None),
+            "ticks": engine.tick_count,
+            "queue_delay_p50": lat["queue_delay_p50"],
+            "queue_delay_p99": lat["queue_delay_p99"],
+            "latency_p99": lat["latency_p99"],
+            "goodput_req_per_tick": lat["goodput_req_per_tick"],
+            "occupancy": stats["occupancy"],
+            "wall_s": stats["wall_s"],             # non-deterministic; scale
+        }
+
+    baseline = serve(None)
+    drained = serve(args.drain_tick)
+    # "Bounded": the drain run's p99 queueing delay stays within the lost
+    # shard's capacity share plus slack — shrinking the fleet by 1/N may
+    # slow admission proportionally, but must not let the queue diverge.
+    bound = (baseline["queue_delay_p99"]
+             * args.devices / (args.devices - 1) + args.drain_slack)
+    return {
+        "config": {
+            "requests": args.requests, "slots": args.slots,
+            "chains_per_slot": args.chains_per_slot,
+            "devices": args.devices, "variant": args.variant,
+            "migration_budget": args.migration_budget,
+            "seed": args.seed, "arrival_seed": args.arrival_seed,
+            "drain_tick": args.drain_tick,
+            "drain_load_factor": args.drain_load_factor,
+            "drain_slack": args.drain_slack,
+            "rate_req_per_tick": rate, "max_ticks": args.max_ticks,
+        },
+        "baseline": baseline,
+        "drain": drained,
+        "zero_lost": drained["lost"] == 0 and drained["rejected"] == 0
+        and drained["incomplete"] == 0,
+        "p99_bound_ticks": bound,
+        "p99_bounded": drained["queue_delay_p99"] <= bound,
+    }
+
+
+def run_drain(args):
+    doc = bench_drain(args)
+    cols = ["run", "completed", "lost", "migrations", "preemptions",
+            "shrinks", "devices_final", "drain_completed_tick", "ticks",
+            "queue_delay_p50", "queue_delay_p99", "goodput_req_per_tick",
+            "occupancy"]
+    table = Table(
+        f"SA serving engine: {args.devices} -> {args.devices - 1} shard "
+        f"drain under load (tick {args.drain_tick}, "
+        f"{doc['config']['rate_req_per_tick']:.3f} req/tick, seeded "
+        f"Poisson)",
+        cols,
+        fmt={"queue_delay_p50": ".1f", "queue_delay_p99": ".1f",
+             "goodput_req_per_tick": ".3f", "occupancy": ".1%"})
+    for name in ("baseline", "drain"):
+        table.add(run=name, **{k: doc[name][k] for k in cols[1:]})
+    table.show()
+    out = Path(args.out) if args.out else DEFAULT_DRAIN_OUT
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(_jsonable(doc), indent=2, sort_keys=True,
+                              allow_nan=False) + "\n")
+    print(f"\nwrote {out}")
+    d = doc["drain"]
+    print(f"drain: {d['completed']}/{d['submitted']} completed, "
+          f"{d['lost']} lost, shard retired at tick "
+          f"{d['drain_completed_tick']}, p99 queue delay "
+          f"{d['queue_delay_p99']:.1f}t vs baseline "
+          f"{doc['baseline']['queue_delay_p99']:.1f}t "
+          f"(bound {doc['p99_bound_ticks']:.1f}t: "
+          f"{'bounded' if doc['p99_bounded'] else 'NOT bounded'})")
+    if not doc["zero_lost"]:
+        raise SystemExit(
+            f"drain lost work: lost={d['lost']} rejected={d['rejected']} "
+            f"incomplete={d['incomplete']}")
     return doc
 
 
@@ -218,6 +353,21 @@ def run_scale_devices(args):
               f"{hi['goodput_req_per_tick']:.3f} req/tick), p99 queue delay "
               f"{lo['queue_delay_p99']:.1f}t -> {hi['queue_delay_p99']:.1f}t "
               f"on the same seeded stream")
+    out = Path(args.out) if args.out else DEFAULT_SCALE_OUT
+    out.parent.mkdir(parents=True, exist_ok=True)
+    doc = {
+        "config": {
+            "requests": args.requests, "slots": args.slots,
+            "chains_per_slot": args.chains_per_slot,
+            "variant": args.variant, "seed": args.seed,
+            "arrival_seed": args.arrival_seed, "rate": args.rate,
+            "scale_devices": counts, "max_ticks": args.max_ticks,
+        },
+        "rows": rows,
+    }
+    out.write_text(json.dumps(_jsonable(doc), indent=2, sort_keys=True,
+                              allow_nan=False) + "\n")
+    print(f"wrote {out}")
     return rows
 
 
@@ -255,12 +405,36 @@ def main(argv=None):
     ap.add_argument("--deadline", type=float, default=25.0,
                     help="queueing-delay SLO (ticks) for reject/degrade")
     ap.add_argument("--preemption-budget", type=int, default=1)
-    ap.add_argument("--out", default=str(DEFAULT_OVERLOAD_OUT),
-                    help="JSON artifact path for --overload")
+    ap.add_argument("--migration-budget", type=int, default=2,
+                    help="cross-shard moves per tick (drain evacuation, "
+                         "defrag and rebalancing share it)")
+    ap.add_argument("--drain", action="store_true",
+                    help="elastic-fleet acceptance: drain one of "
+                         "--devices shards at --drain-tick under load; "
+                         "exit 1 if any request is lost")
+    ap.add_argument("--drain-tick", type=int, default=12,
+                    help="tick at which the drain begins")
+    ap.add_argument("--drain-load-factor", type=float, default=0.6,
+                    help="offered load as a multiple of the full fleet's "
+                         "saturating load — sized so the N-1 survivors "
+                         "stay under saturation (0.6 x N/(N-1) = 0.8 at "
+                         "N=4), else the post-drain queue diverges by "
+                         "construction")
+    ap.add_argument("--drain-slack", type=float, default=20.0,
+                    help="extra p99 queue-delay ticks tolerated beyond "
+                         "the capacity-proportional bound (the transient "
+                         "of one shard's worth of evacuated work "
+                         "re-queueing)")
+    ap.add_argument("--out", default=None,
+                    help="JSON artifact path (default: per-mode file "
+                         "under artifacts/bench/)")
     args = ap.parse_args(argv)
 
     if args.overload:
         return run_overload(args)
+
+    if args.drain:
+        return run_drain(args)
 
     if args.scale_devices:
         return run_scale_devices(args)

@@ -12,7 +12,6 @@ claims asserted here:
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from repro.core import SAConfig, sa_minimize
 from repro.objectives import functions as F

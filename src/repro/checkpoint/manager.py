@@ -27,9 +27,8 @@ import json
 import os
 import shutil
 import threading
-import time
 from pathlib import Path
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import numpy as np

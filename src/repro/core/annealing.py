@@ -196,7 +196,8 @@ def build_sharded_ladder(objective: Objective, cfg: SAConfig,
         return bx, bf, hist
 
     hist_spec = P() if cfg_l.record_history else ()
-    return jax.shard_map(
+    from repro.launch.mesh import shard_map
+    return shard_map(
         sharded, mesh=mesh,
         in_specs=(P(), P(axes)),
         out_specs=(P(), P(), hist_spec),

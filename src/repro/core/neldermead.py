@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -31,9 +31,6 @@ def _order(simplex, fvals):
 @partial(jax.jit, static_argnames=("fn", "max_iters"))
 def _nm_loop(x0, lo, hi, *, fn: Callable, max_iters: int,
              fatol: float, xatol: float):
-    n = x0.shape[-1]
-    dtype = x0.dtype
-
     # Initial simplex: x0 plus per-coordinate perturbations (5% of the box,
     # guarded to be nonzero).
     step = 0.05 * (hi - lo)

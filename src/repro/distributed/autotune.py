@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np

@@ -19,9 +19,15 @@ Two dispatch surfaces per primitive:
   branchless ``jnp.where`` chain, so one compiled program serves all
   registry objectives and growing the registry never costs a recompile.
   Each branch computes the *identical* floating-point expression as its
-  static counterpart, so runtime dispatch is bit-exact versus the
-  equivalent static call (select returns the branch value verbatim;
-  garbage in unselected branches is discarded, never propagated).
+  static counterpart (select returns the branch value verbatim; garbage in
+  unselected branches is discarded, never propagated).  Two callers using
+  runtime dispatch are therefore bit-exact with each other — the serving
+  engine's placement/preemption/migration invariants rest on this.  A
+  runtime-dispatch program versus the *static* single-branch lowering is
+  the same math in two different XLA programs: trajectories (states and
+  accept/reject decisions) agree bitwise, but fusion may contract the
+  delta-variant's cached accumulator differently at the last ULP, so that
+  comparison is held to ULP tolerance in tests, not bitwise.
 """
 from __future__ import annotations
 
@@ -33,12 +39,16 @@ KID_SCHWEFEL = 0
 KID_RASTRIGIN = 1
 KID_ACKLEY = 2
 KID_GRIEWANK = 3
+KID_EXPONENTIAL = 4
+KID_SALOMON = 5
 
 KID_BY_NAME = {
     "schwefel": KID_SCHWEFEL,
     "rastrigin": KID_RASTRIGIN,
     "ackley": KID_ACKLEY,
     "griewank": KID_GRIEWANK,
+    "exponential": KID_EXPONENTIAL,
+    "salomon": KID_SALOMON,
 }
 # Uniform box per registry objective.
 BOX = {
@@ -46,6 +56,8 @@ BOX = {
     KID_RASTRIGIN: (-5.12, 5.12),
     KID_ACKLEY: (-30.0, 30.0),
     KID_GRIEWANK: (-600.0, 600.0),
+    KID_EXPONENTIAL: (-1.0, 1.0),
+    KID_SALOMON: (-100.0, 100.0),
 }
 N_KIDS = len(KID_BY_NAME)
 
@@ -72,6 +84,11 @@ def full_eval(kid: int, x, dim: int):
         s = jnp.sum(x * x, -1, keepdims=True) / 4000.0
         p = jnp.prod(jnp.cos(x / jnp.sqrt(i + 1.0)), -1, keepdims=True)
         f = 1.0 + s - p
+    elif kid == KID_EXPONENTIAL:
+        f = -jnp.exp(-0.5 * jnp.sum(x * x, -1, keepdims=True))
+    elif kid == KID_SALOMON:
+        r = jnp.sqrt(jnp.sum(x * x, -1, keepdims=True))
+        f = 1.0 - jnp.cos(2 * _PI * r) + 0.1 * r
     else:
         raise ValueError(f"unknown kernel objective id {kid}")
     return f.astype(x.dtype)
@@ -90,6 +107,9 @@ def term(kid: int, xi, d):
         s = jnp.concatenate([xi * xi / 4000.0, z], -1)
         p = jnp.cos(xi / jnp.sqrt(d.astype(xi.dtype) + 1.0))
         return s, p
+    if kid in (KID_EXPONENTIAL, KID_SALOMON):
+        # Both reduce to the radial sum S0 = Σ x_i²; combine() does the rest.
+        return jnp.concatenate([xi * xi, z], -1), jnp.ones_like(xi)
     raise ValueError(f"unknown kernel objective id {kid}")
 
 
@@ -116,6 +136,11 @@ def combine(kid: int, S, logP, sgnP, dim: int):
     if kid == KID_GRIEWANK:
         P = sgnP * jnp.exp(logP)
         return 1.0 + S[..., 0:1] - P
+    if kid == KID_EXPONENTIAL:
+        return -jnp.exp(-0.5 * S[..., 0:1])
+    if kid == KID_SALOMON:
+        r = jnp.sqrt(S[..., 0:1])
+        return 1.0 - jnp.cos(2 * _PI * r) + 0.1 * r
     raise ValueError(f"unknown kernel objective id {kid}")
 
 

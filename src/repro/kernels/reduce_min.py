@@ -19,7 +19,6 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 
 def _argmin_kernel(f_ref, m_ref, i_ref, *, blk: int):

@@ -125,8 +125,6 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
     bytes_acc = parsed["hbm_bytes"]  # fusion-aware (hloparse.py)
     terms = roofline_terms(flops, bytes_acc, coll, n_chips)
     tot, act = cell.model_cfg.param_count()
-    seq = {"train_4k": 4096, "prefill_32k": 32768,
-           "decode_32k": 1, "long_500k": 1}[shape_name]
     from repro.configs.common import SHAPES
     seq_len, batch, kind = SHAPES[shape_name]
     tokens = batch * (seq_len if kind != "decode" else 1)

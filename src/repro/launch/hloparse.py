@@ -99,7 +99,6 @@ def parse_hlo_costs(hlo: str) -> dict:
     """Returns {'hbm_bytes': float, 'wire': {kind: bytes}, 'group_size': int}."""
     # 1) split into computations
     comps: dict[str, list[str]] = {}
-    entry = None
     cur = None
     for raw in hlo.splitlines():
         line = raw.strip()
@@ -107,8 +106,6 @@ def parse_hlo_costs(hlo: str) -> dict:
         if m and line.endswith("{"):
             cur = m.group(2)
             comps[cur] = []
-            if m.group(1):
-                entry = cur
             continue
         if line.startswith("}"):
             cur = None

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax.tree_util import DictKey, SequenceKey
+from jax.tree_util import DictKey
 
 from repro.configs.common import SHAPES, ArchSpec
 from repro.launch import shardctx

@@ -21,12 +21,9 @@ Usage::
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import signal
-import sys
 import time
 from functools import partial
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +32,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_arch
-from repro.configs.common import shrink
 from repro.data.pipeline import DataConfig, make_batches, synthetic_dataset
 from repro.distributed.monitor import StepTimer
 from repro.launch import steps as S

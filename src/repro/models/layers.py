@@ -10,8 +10,6 @@ required (MoE dispatch).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Optional
 
 import jax
@@ -153,9 +151,11 @@ def attention(params, x, positions, *, n_rep: int, window: Optional[int],
         C = cache["k"].shape[1]
         pos = positions[:, 0]  # (B,)
         slot = (pos % C).astype(jnp.int32)
-        upd = lambda buf, new: jax.vmap(
-            lambda b, n, s: lax.dynamic_update_slice_in_dim(b, n, s, axis=0)
-        )(buf, new.astype(buf.dtype), slot)
+        def upd(buf, new):
+            return jax.vmap(
+                lambda b, n, s: lax.dynamic_update_slice_in_dim(b, n, s,
+                                                                axis=0)
+            )(buf, new.astype(buf.dtype), slot)
         kc = upd(cache["k"], k)
         vc = upd(cache["v"], v)
         pc = jax.vmap(
@@ -203,7 +203,6 @@ def mla_attention(params, x, positions, *, d_nope: int, d_rope: int,
     products against the compressed cache directly.
     """
     B, S, D = x.shape
-    H = params["wq"].shape[1]
     scale = 1.0 / np.sqrt(d_nope + d_rope).astype(np.float32)
 
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
@@ -236,9 +235,11 @@ def mla_attention(params, x, positions, *, d_nope: int, d_rope: int,
         C = cache["c_kv"].shape[1]
         pos = positions[:, 0]
         slot = (pos % C).astype(jnp.int32)
-        upd = lambda buf, new: jax.vmap(
-            lambda b, n, s: lax.dynamic_update_slice_in_dim(b, n, s, axis=0)
-        )(buf, new.astype(buf.dtype), slot)
+        def upd(buf, new):
+            return jax.vmap(
+                lambda b, n, s: lax.dynamic_update_slice_in_dim(b, n, s,
+                                                                axis=0)
+            )(buf, new.astype(buf.dtype), slot)
         ckv = upd(cache["c_kv"], c_kv)
         krc = upd(cache["k_rope"], k_r)
         pc = jax.vmap(
@@ -394,8 +395,8 @@ def _ssm_chunk_scan(dA, dBx, h0, chunk: int):
     def outer(h, blk):
         a, bx = blk  # (B, chunk, Di, N)
         # within-chunk associative scan on (a, b) pairs
-        def comb(l, r):
-            return (l[0] * r[0], r[0] * l[1] + r[1])
+        def comb(lhs, rhs):
+            return (lhs[0] * rhs[0], rhs[0] * lhs[1] + rhs[1])
         aa, bb = lax.associative_scan(comb, (a, bx), axis=1)
         hs = aa * h[:, None] + bb  # (B, chunk, Di, N)
         return hs[:, -1], hs

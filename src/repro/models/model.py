@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Optional, Sequence
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -306,7 +306,8 @@ def _moe(mp, h, cfg: ModelConfig, mesh):
         fn = partial(L.moe_apply, top_k=cfg.top_k,
                      capacity_factor=cfg.capacity_factor,
                      ep_axis="model", ep_size=ep)
-        return jax.shard_map(
+        from repro.launch.mesh import shard_map
+        return shard_map(
             fn, mesh=mesh,
             in_specs=({"router": P(), "w_gate": P("model"), "w_up": P("model"),
                        "w_down": P("model")}, P(dp)),

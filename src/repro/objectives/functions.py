@@ -160,7 +160,7 @@ def exponential(n: int = 4) -> Objective:
     lo, hi = box(-1.0, 1.0, n)
     return Objective(
         name=f"exponential_{n}", dim=n, lower=lo, upper=hi, fn=fn,
-        f_opt=-1.0, x_opt=np.zeros((n,)), decomposable=spec,
+        f_opt=-1.0, x_opt=np.zeros((n,)), decomposable=spec, kernel_id=4,
     )
 
 
@@ -370,7 +370,7 @@ def salomon(n: int = 10) -> Objective:
     lo, hi = box(-100.0, 100.0, n)
     return Objective(
         name=f"salomon_{n}", dim=n, lower=lo, upper=hi, fn=fn,
-        f_opt=0.0, x_opt=np.zeros((n,)), decomposable=spec,
+        f_opt=0.0, x_opt=np.zeros((n,)), decomposable=spec, kernel_id=5,
     )
 
 

@@ -6,7 +6,7 @@ optimizer state (ZeRO-style: state is FSDP-sharded exactly like its param).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

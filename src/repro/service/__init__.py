@@ -19,8 +19,9 @@ Layers
                    ``(pool,)`` mesh.
 ``scheduler.py`` : priority-with-aging admission, bounded backfill,
                    the reject/degrade/preempt overload policies, and the
-                   placement layer (home-shard choice + Russkov-style
-                   cross-shard migration planning).
+                   placement layer (home-shard choice, Russkov-style
+                   cross-shard migration planning, drain evacuation,
+                   watermark rebalancing, proactive-degrade shrinks).
 ``arrivals.py``  : open-loop arrival processes (seeded Poisson / bursty /
                    trace / batch) + latency percentile summaries.
 ``engine.py``    : the continuous-batching tick loop; per-slot objective id

@@ -58,6 +58,20 @@ Invariants
   on it: the 'preempt' overload policy evicts the cheapest active jobs
   for an urgent arrival, 'reject' and 'degrade' bound queue growth at
   overload.
+* **The fleet is elastic** (this PR): :meth:`SAServeEngine.drain` marks a
+  shard draining — no new placements; its jobs are checkpoint-evacuated
+  onto the survivors each tick (bounded by ``migration_budget``, highest
+  effective priority first, shrinking or swapping to the queue when no
+  survivor has full-width room) and the shard is retired once empty.
+  :meth:`SAServeEngine.resize` composes drain/add for mid-stream fleet
+  grow/shrink.  The scheduler's placement layer adds **watermark
+  rebalancing** (background moves off shards above ``high_watermark``
+  onto shards below ``low_watermark``, hysteresis by construction) and
+  **proactive degrade** (shrink *running* degrade-class jobs —
+  checkpoint, restore at fewer slots, never below ``min_chains`` — when
+  the queue head fits nowhere).  Every moved or shrunk trajectory stays
+  bit-exact versus an uninterrupted run with the same width schedule,
+  because all three reuse the placement-invariant checkpoint/restore.
 """
 from __future__ import annotations
 
@@ -69,7 +83,6 @@ from functools import partial
 from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import exchange as exch
@@ -78,7 +91,7 @@ from repro.kernels import ops
 from repro.service.request import RequestResult, SARequest
 from repro.service.scheduler import (AdmissionScheduler, QueueEntry,
                                      SchedulerConfig, ShardView)
-from repro.service.sharding import EngineShard, make_shards
+from repro.service.sharding import EngineShard, make_shard, make_shards
 from repro.service.slots import ActiveJob, SwappedJob
 
 #: Known optima of the servable (registry) objectives, for accuracy targets.
@@ -91,6 +104,8 @@ F_OPT = {
     om.KID_RASTRIGIN: 0.0,
     om.KID_ACKLEY: 0.0,
     om.KID_GRIEWANK: 0.0,
+    om.KID_EXPONENTIAL: -1.0,
+    om.KID_SALOMON: 0.0,
 }
 
 
@@ -159,6 +174,16 @@ class SAServeEngine:
         self.preemptions = 0          # swap-outs performed
         self.rejections = 0           # SLO admission-control drops
         self.migrations = 0           # cross-shard rebalancing moves
+        self.shrinks = 0              # proactive-degrade width reductions
+        self.slot_ticks = 0           # Σ over ticks of fleet slot count —
+                                      # the occupancy denominator (the
+                                      # fleet is elastic, so ticks x slots
+                                      # is no longer a constant product)
+        self.retired_shards: List[Tuple[int, int]] = []  # (index, tick)
+        self._next_shard_index = cfg.n_devices   # shard ids are stable and
+                                                 # never reused (resize/add)
+        self._ops: List[Tuple[int, int, object]] = []  # (tick, seq, fn)
+        self._op_seq = 0
         self._use_pallas = ops.resolve_use_pallas(cfg.use_pallas)
         if self._use_pallas and cfg.chains_per_slot % 8:
             raise ValueError(
@@ -226,6 +251,19 @@ class SAServeEngine:
             index=shard.index, free_slots=shard.pool.n_free, active=jobs,
             shapes=frozenset((j.req.dim, j.req.N) for j in jobs))
 
+    def _shard(self, index: int) -> EngineShard:
+        """Shard by stable index.  Indices are identities, not positions:
+        a retired shard leaves a gap and added shards get fresh ids."""
+        for shard in self.shards:
+            if shard.index == index:
+                return shard
+        raise ValueError(f"no live shard with index {index}")
+
+    @property
+    def live_shards(self) -> List[EngineShard]:
+        """Shards accepting new placements (not draining)."""
+        return [s for s in self.shards if not s.draining]
+
     @property
     def pool(self):
         """Single-shard convenience alias (tests, notebooks).  Multi-shard
@@ -253,35 +291,71 @@ class SAServeEngine:
 
     # ----------------------------------------------------------- admission
     def _admit(self) -> None:
-        # Rebalance first: if the queue head fits on no single shard but
-        # the pool as a whole has room, migrate jobs off a donor shard
+        cps = self.cfg.chains_per_slot
+        budget = self.cfg.migration_budget
+        # Drain evacuation has first claim on the per-tick move budget:
+        # jobs leave draining shards (migrate whole / shrink-migrate /
+        # swap to queue, in that order of preference) so the shards can
+        # retire.  Draining shards take no new placements — every view
+        # handed to the planners below is a survivor.
+        if any(s.draining for s in self.shards):
+            budget -= self._evacuate_draining(budget)
+            self._retire_drained()
+        views = {s.index: self._view(s) for s in self.live_shards}
+        # Head defrag: if the queue head fits on no single shard but the
+        # pool as a whole has room, migrate jobs off a donor shard
         # (checkpoint/restore, bit-exact) so the head becomes admissible
-        # this very tick.  Snapshots are built once and rebuilt only for
-        # the (budget-bounded, usually zero) shards a move touched.
-        views = [self._view(s) for s in self.shards]
+        # this very tick.  Snapshots are rebuilt only for the
+        # (budget-bounded, usually zero) shards a move touched.
         moves = self.scheduler.plan_migrations(
-            views, self.cfg.chains_per_slot,
-            self.tick_count, self.cfg.migration_budget)
+            list(views.values()), cps, self.tick_count, budget)
         for rid, src, dst in moves:
-            self._migrate_job(self.shards[src], rid, self.shards[dst])
+            self._migrate_job(self._shard(src), rid, self._shard(dst))
+        budget -= len(moves)
         for si in {si for move in moves for si in move[1:]}:
-            views[si] = self._view(self.shards[si])
+            views[si] = self._view(self._shard(si))
+        # Proactive degrade: when migration cannot seat the head (the
+        # pool is genuinely full), shrink running degrade-class jobs of
+        # strictly lower effective priority — checkpoint/restore at
+        # fewer slots, never below their floor — until it fits.
+        shrinks = []
+        if not moves and self.cfg.scheduler.proactive_degrade:
+            shrinks = self.scheduler.plan_shrinks(
+                list(views.values()), cps, self.tick_count,
+                self.cfg.scheduler.shrink_budget)
+            for rid, si, keep_slots in shrinks:
+                self._shrink_job(self._shard(si), rid, keep_slots)
+                views[si] = self._view(self._shard(si))
+        # Watermark rebalancing: background load-driven moves with
+        # whatever move budget the head didn't need.  Skipped on ticks
+        # head-defrag or a proactive shrink fired — the slots they freed
+        # are earmarked for the head and must survive untouched until
+        # admission below seats it (a rebalance move could otherwise
+        # land new work on the shrink's shard, wasting the irreversible
+        # width cut).
+        if not moves and not shrinks:
+            rmoves = self.scheduler.plan_rebalance(
+                list(views.values()), self.tick_count, budget)
+            for rid, src, dst in rmoves:
+                self._migrate_job(self._shard(src), rid, self._shard(dst))
+            for si in {si for move in rmoves for si in move[1:]}:
+                views[si] = self._view(self._shard(si))
         # Then one queue walk across all shards (scheduler.admit_sharded):
         # every entry, in effective-priority order, is tried at full
         # width on every shard — least-loaded first, (dim, N)-locality
         # tie-break — before its degrade/preempt fallback may fire, and
         # the preemption budget bounds evictions per tick across shards.
         plan = self.scheduler.admit_sharded(
-            views, self.cfg.chains_per_slot, self.tick_count)
+            list(views.values()), cps, self.tick_count)
         # Execution order matters: rejections first (they free nothing
         # but must be stamped this tick), then evictions (freeing slots
         # the plan's admissions count on), then placements.
         for entry in plan.rejected:
             self._reject(entry)
         for rid, si in plan.evict:
-            self._swap_out(self.shards[si], rid)
+            self._swap_out(self._shard(si), rid)
         for entry, granted_slots, si in plan.admitted:
-            self._place(self.shards[si], entry, granted_slots)
+            self._place(self._shard(si), entry, granted_slots)
 
     def _place(self, shard: EngineShard, entry: QueueEntry,
                granted_slots: int) -> None:
@@ -342,13 +416,12 @@ class SAServeEngine:
         The operator/test entry point for forcing a cross-shard move at a
         chosen temperature level (the scheduler's rebalancer calls the
         same checkpoint/restore path).  Returns False if the request is
-        not active, already home, or the target shard lacks room.
+        not active, already home, the target shard lacks room, or the
+        target is draining (it takes no new placements).
         """
-        if not 0 <= to_shard < len(self.shards):
-            raise ValueError(
-                f"to_shard {to_shard} out of range for "
-                f"{len(self.shards)} shards")
-        dst = self.shards[to_shard]
+        dst = self._shard(to_shard)     # ValueError on unknown/retired ids
+        if dst.draining:
+            return False
         for shard, job in self._iter_jobs():
             if job.req.req_id == req_id:
                 if shard.index == to_shard \
@@ -370,6 +443,171 @@ class SAServeEngine:
                 self._swap_out(shard, job.rid)
                 return True
         return False
+
+    # -------------------------------------------------------- elastic fleet
+    def _record_shrink(self, job: ActiveJob, from_chains: int) -> None:
+        job.granted_chains = len(job.slots) * self.cfg.chains_per_slot
+        job.shrunk_ticks.append(self.tick_count)
+        job.shrink_events.append((job.level, from_chains,
+                                  job.granted_chains))
+        self.shrinks += 1
+
+    def _shrink_job(self, shard: EngineShard, rid: int,
+                    keep_slots: int) -> None:
+        """Proactive degrade in place: checkpoint, drop the tail blocks,
+        restore ``keep_slots`` blocks on the same shard.  Surviving
+        chains keep logical indices [0, keep_slots * cps) — their
+        trajectories (and the job's best-so-far champion) are untouched;
+        only the width schedule changes, which a standalone replay of the
+        same schedule reproduces bit-exactly (``run_standalone``)."""
+        job = shard.rids.jobs[rid]
+        if not 0 < keep_slots < len(job.slots):
+            raise ValueError(
+                f"keep_slots must be in [1, {len(job.slots) - 1}], "
+                f"got {keep_slots}")
+        from_chains = job.granted_chains
+        blocks = shard.pool.checkpoint(rid)[:keep_slots]
+        shard.pool.release(rid)
+        job.slots = shard.pool.restore(rid, blocks)
+        self._record_shrink(job, from_chains)
+
+    def _shrink_migrate(self, src: EngineShard, rid: int, dst: EngineShard,
+                        keep_slots: int) -> None:
+        """Drain pressure valve: shrink and migrate in one checkpoint —
+        restore only the first ``keep_slots`` blocks on ``dst``."""
+        job = src.rids.jobs[rid]
+        from_chains = job.granted_chains
+        blocks = src.pool.checkpoint(rid)[:keep_slots]
+        src.pool.release(rid)
+        src.rids.free(rid)
+        dst.rids.alloc(job)
+        job.slots = dst.pool.restore(job.rid, blocks)
+        job.home_shard = dst.index
+        job.migrated_ticks.append(self.tick_count)
+        self.migrations += 1
+        self._record_shrink(job, from_chains)
+
+    def _evacuate_draining(self, budget: int) -> int:
+        """Execute this tick's drain plan; returns actions performed."""
+        draining = [self._view(s) for s in self.shards if s.draining]
+        survivors = [self._view(s) for s in self.live_shards]
+        actions = self.scheduler.plan_evacuation(
+            draining, survivors, self.cfg.chains_per_slot,
+            self.tick_count, budget)
+        for kind, rid, src, dst, width in actions:
+            if kind == "migrate":
+                self._migrate_job(self._shard(src), rid, self._shard(dst))
+            elif kind == "shrink":
+                self._shrink_migrate(self._shard(src), rid,
+                                     self._shard(dst), width)
+            else:
+                self._swap_out(self._shard(src), rid)
+        return len(actions)
+
+    def _retire_drained(self) -> None:
+        """Remove empty draining shards from the fleet (their index is
+        never reused; ``retired_shards`` records index and tick)."""
+        for shard in [s for s in self.shards
+                      if s.draining and not s.rids.jobs]:
+            self.shards.remove(shard)
+            self.retired_shards.append((shard.index, self.tick_count))
+
+    def drain(self, shard_index: int) -> None:
+        """Begin draining shard ``shard_index`` for retirement.
+
+        The shard takes no new placements; each tick its jobs are
+        checkpoint-evacuated onto the surviving shards (bounded by
+        ``migration_budget`` actions per tick, highest effective
+        priority first — migrated whole when a survivor has room,
+        shrunk into the roomiest survivor when degrade-eligible, swapped
+        to the queue as the last resort) and it is retired — removed
+        from the fleet — once empty.  Idempotent; raises if it would
+        leave no live shard.  Every evacuated trajectory stays bit-exact
+        (see docs/serving.md).
+        """
+        shard = self._shard(shard_index)
+        if shard.draining:
+            return
+        if len(self.live_shards) <= 1:
+            raise ValueError(
+                "cannot drain the last live shard; resize up first")
+        shard.draining = True
+        if not shard.rids.jobs:
+            self._retire_drained()
+
+    def add_shards(self, n: int) -> List[int]:
+        """Grow the fleet by ``n`` fresh shards (``n_slots`` slots each,
+        devices round-robin); returns their (new, never-reused) indices."""
+        if n < 0:
+            raise ValueError(f"n must be >= 0, got {n}")
+        new = []
+        for _ in range(n):
+            idx = self._next_shard_index
+            self._next_shard_index += 1
+            self.shards.append(make_shard(
+                idx, self.cfg.n_slots, self.cfg.chains_per_slot))
+            new.append(idx)
+        return new
+
+    def resize(self, n_devices: int) -> None:
+        """Elastically resize the fleet to ``n_devices`` live shards.
+
+        Growing first cancels in-progress drains (cheapest capacity:
+        the shard is already populated), then adds fresh shards.
+        Shrinking drains the emptiest live shards (fewest held slots,
+        ties to the highest index) — they retire as evacuation
+        completes, so the fleet passes through a transient
+        ``n_live + n_draining`` state rather than dropping capacity
+        instantaneously.
+        """
+        if n_devices < 1:
+            raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+        live = self.live_shards
+        if n_devices > len(live):
+            grow = n_devices - len(live)
+            for shard in sorted((s for s in self.shards if s.draining),
+                                key=lambda s: s.index):
+                if grow == 0:
+                    break
+                shard.draining = False      # cancel the drain: un-retire
+                grow -= 1
+            self.add_shards(grow)
+        elif n_devices < len(live):
+            doomed = sorted(live, key=lambda s: (s.pool.n_active, -s.index))
+            for shard in doomed[:len(live) - n_devices]:
+                self.drain(shard.index)
+
+    def degrade_active(self, req_id: int, n_chains: int) -> bool:
+        """Shrink the running request ``req_id`` to ``n_chains`` chains
+        (rounded up to whole slots) — the operator/test entry point for
+        proactive degrade at a chosen temperature level; the scheduler's
+        ``plan_shrinks`` drives the same path.  Returns False if the
+        request is not active or already at/below that width."""
+        slots_new = max(1, -(-n_chains // self.cfg.chains_per_slot))
+        for shard, job in self._iter_jobs():
+            if job.req.req_id == req_id:
+                if slots_new >= len(job.slots):
+                    return False
+                self._shrink_job(shard, job.rid, slots_new)
+                return True
+        return False
+
+    def schedule_op(self, tick: int, fn) -> None:
+        """Run ``fn()`` at the start of the first tick >= ``tick`` —
+        the hook ``serve_sa --drain-at/--resize`` uses to script fleet
+        changes onto the deterministic tick axis."""
+        self._ops.append((int(tick), self._op_seq, fn))
+        self._op_seq += 1
+        self._ops.sort(key=lambda op: op[:2])
+
+    @property
+    def _next_op_tick(self) -> float:
+        return self._ops[0][0] if self._ops else float("inf")
+
+    def _run_due_ops(self) -> None:
+        while self._ops and self._ops[0][0] <= self.tick_count:
+            _, _, fn = self._ops.pop(0)
+            fn()
 
     def _reject(self, entry: QueueEntry) -> None:
         """SLO fast-fail: terminal 'rejected' result, no solution."""
@@ -398,8 +636,13 @@ class SAServeEngine:
         serialize the shards: ``np.asarray`` blocks on the transfer, and
         device k+1 would not launch until device k had fully finished.
         """
+        self._run_due_ops()       # scripted drain/resize land tick-aligned
+        for shard in self.shards:
+            shard.resident_ticks += 1
+            self.slot_ticks += shard.pool.n_slots
         self._admit()
         if self.n_active == 0:
+            self._retire_drained()
             self.tick_count += 1
             return
 
@@ -417,6 +660,10 @@ class SAServeEngine:
                 self.group_launches += 1
         for launch in launches:
             self._collect_group(*launch)
+        # A draining shard whose last job just retired (or evacuated) is
+        # removed now, so a run that ends this tick leaves no zombie
+        # shards behind.
+        self._retire_drained()
         self.tick_count += 1
 
     def _collect_group(self, shard: EngineShard, n_steps: int,
@@ -494,7 +741,10 @@ class SAServeEngine:
         # device.  The call returns device arrays without blocking; the
         # collect pass materializes them after every shard has launched.
         dev = shard.device
-        put = lambda a: jax.device_put(a, dev)
+
+        def put(a):
+            return jax.device_put(a, dev)
+
         outs = _group_tick(
             put(x), put(kid_blk), put(T_blk), put(seed_blk), put(step0_blk),
             put(base_blk), put(seg), put(adopt), n_steps=n_steps, blk=cps,
@@ -533,7 +783,9 @@ class SAServeEngine:
             resumed_ticks=list(job.resumed_ticks),
             champion_history=list(job.history),
             home_shard=job.home_shard,
-            migrated_ticks=list(job.migrated_ticks)))
+            migrated_ticks=list(job.migrated_ticks),
+            shrunk_ticks=list(job.shrunk_ticks),
+            shrink_events=list(job.shrink_events)))
         shard.pool.release(job.rid)
         shard.rids.free(job.rid)
 
@@ -582,7 +834,17 @@ class SAServeEngine:
                     jump = int(math.ceil(nxt))
                     if max_ticks is not None:
                         jump = min(jump, max_ticks)
+                    if self._ops:
+                        # A scripted drain/resize must land on its exact
+                        # tick, not be leapt over.
+                        jump = min(jump, int(self._next_op_tick))
                     if jump > self.tick_count:
+                        # Idle time still counts against occupancy: the
+                        # fleet held its slots across the jumped ticks.
+                        delta = jump - self.tick_count
+                        for shard in self.shards:
+                            shard.resident_ticks += delta
+                            self.slot_ticks += delta * shard.pool.n_slots
                         self.tick_count = jump
                         continue
             self.tick()
@@ -591,22 +853,29 @@ class SAServeEngine:
 
     def stats(self) -> dict:
         wall = getattr(self, "wall_s", float("nan"))
-        ticks = max(self.tick_count, 1)
         evals = sum(r.n_evals for r in self.results)
-        n_slots_total = self.cfg.n_slots * len(self.shards)
-        per_s = lambda v: v / wall if wall and wall > 0 else 0.0
+
+        def per_s(v):
+            return v / wall if wall and wall > 0 else 0.0
+
         return {
             "ticks": self.tick_count,
             "devices": len(self.shards),
+            "draining": sum(s.draining for s in self.shards),
+            "shards_retired": len(self.retired_shards),
             "group_launches": self.group_launches,
             "submitted": self.n_submitted,
             "completed": sum(r.completed for r in self.results),
             "rejected": self.rejections,
             "preemptions": self.preemptions,
             "migrations": self.migrations,
+            "shrinks": self.shrinks,
             "sweeps": self.sweeps_done,
-            "occupancy": self.sweeps_done / (ticks * n_slots_total),
-            "shard_occupancy": [s.occupancy(ticks) for s in self.shards],
+            # The fleet is elastic, so the occupancy denominator is the
+            # accumulated slot-tick product, not ticks x a fixed slot
+            # count (they agree exactly for a static fleet).
+            "occupancy": self.sweeps_done / max(self.slot_ticks, 1),
+            "shard_occupancy": [s.occupancy() for s in self.shards],
             "wall_s": wall,
             "requests_per_s": per_s(len(self.results)),
             "sweeps_per_s": per_s(self.sweeps_done),
@@ -614,7 +883,8 @@ class SAServeEngine:
         }
 
 
-def run_standalone(req: SARequest, cfg: EngineConfig) -> RequestResult:
+def run_standalone(req: SARequest, cfg: EngineConfig,
+                   shrink_schedule=None) -> RequestResult:
     """Serve ``req`` alone on a dedicated single-device pool — the
     per-tenant baseline.
 
@@ -623,8 +893,30 @@ def run_standalone(req: SARequest, cfg: EngineConfig) -> RequestResult:
     champions for identical seeds) — on any home shard, across preemption
     and across cross-shard migration; tests assert it, serve_sa --check
     reports it.
+
+    ``shrink_schedule`` replays proactive degrade: ``(level, n_chains)``
+    pairs, applied in order once the job has completed ``level``
+    temperature levels (``RequestResult.shrink_events`` records exactly
+    this, as ``(level, from, to)``).  A job shrunk mid-flight by drain or
+    overload pressure is bit-exact versus this standalone run of the
+    same width schedule — the shrink itself (checkpoint, restore,
+    placement, co-tenants) perturbs nothing; only the logical width
+    trajectory matters.
     """
     alone = SAServeEngine(dataclasses.replace(
         cfg, n_slots=req.slots_needed(cfg.chains_per_slot), n_devices=1))
     alone.submit(req)
-    return alone.run()[0]
+    if not shrink_schedule:
+        return alone.run()[0]
+    pending = sorted((int(lvl), int(chains))
+                     for lvl, chains in shrink_schedule)
+    guard = 0
+    while not alone.done:
+        guard += 1
+        assert guard < 100000, "standalone replay failed to drain"
+        job = next((j for _, j in alone._iter_jobs()), None)
+        while pending and job is not None and job.level >= pending[0][0]:
+            alone.degrade_active(req.req_id, pending[0][1])
+            pending.pop(0)
+        alone.tick()
+    return alone.results[0]

@@ -161,6 +161,13 @@ class RequestResult:
     home_shard: int = 0         # engine shard that retired the request
                                 # (-1 if rejected: never placed)
     migrated_ticks: List[int] = dataclasses.field(default_factory=list)
+    # ---- elastic-fleet metadata (proactive degrade) ----
+    # One entry per mid-flight shrink: (ladder level at the shrink,
+    # chains before, chains after).  ``granted_chains`` above is the
+    # *final* width; the width at admission is the first event's
+    # 'before' entry (or granted_chains when the job never shrank).
+    shrunk_ticks: List[int] = dataclasses.field(default_factory=list)
+    shrink_events: List[tuple] = dataclasses.field(default_factory=list)
 
     # ---- derived status ----
     @property
@@ -185,6 +192,18 @@ class RequestResult:
     def n_migrations(self) -> int:
         """Cross-shard moves (checkpoint/restore between shard pools)."""
         return len(self.migrated_ticks)
+
+    @property
+    def n_shrinks(self) -> int:
+        """Mid-flight width reductions (proactive degrade)."""
+        return len(self.shrunk_ticks)
+
+    @property
+    def admitted_chains(self) -> int:
+        """Chains granted at admission (before any mid-flight shrink)."""
+        if self.shrink_events:
+            return int(self.shrink_events[0][1])
+        return self.granted_chains
 
     # ---- derived latencies: tick clock (deterministic) ----
     @property
@@ -240,6 +259,10 @@ class RequestResult:
             "home_shard": self.home_shard,
             "migrated_ticks": list(self.migrated_ticks),
             "n_migrations": self.n_migrations,
+            "shrunk_ticks": list(self.shrunk_ticks),
+            "shrink_events": [list(e) for e in self.shrink_events],
+            "n_shrinks": self.n_shrinks,
+            "admitted_chains": self.admitted_chains,
             "arrival_time": self.arrival_time,
             "submit_tick": self.submit_tick, "start_tick": self.start_tick,
             "first_tick": self.first_tick, "finish_tick": self.finish_tick,

@@ -55,6 +55,30 @@ scheduler additionally owns the **placement layer**:
   (checkpoint on the donor, restore on the recipient — bit-exact, since
   restore is placement-invariant) until the head is admissible.
 
+The **elastic-fleet layer** (this PR) extends placement in three ways,
+all riding the same bit-exact ``SwappedJob`` checkpoint/restore:
+
+* :meth:`AdmissionScheduler.plan_evacuation` — shard drain.  Jobs on a
+  draining shard are moved onto the survivors in effective-priority
+  order (highest first: the most important work is off the doomed
+  device soonest), bounded per tick.  A job no survivor can seat whole
+  is *shrunk into* the roomiest survivor if its overload class allows
+  (down to its ``min_chains`` floor), and swapped out to the queue as
+  the last resort — drain always makes progress and never loses work.
+* :meth:`AdmissionScheduler.plan_rebalance` — watermark rebalancing.
+  Generalizes head-of-queue defrag into a *background* load balancer:
+  every tick, narrow jobs are moved from shards whose utilization
+  exceeds ``high_watermark`` onto shards below ``low_watermark``.
+  Hysteresis is structural: a move is only planned when the donor stays
+  at least as loaded as the recipient afterwards, so the load ordering
+  never inverts and a later tick can never plan the reverse move.
+* :meth:`AdmissionScheduler.plan_shrinks` — proactive degrade.  When
+  the queue head fits on no shard and migration cannot help (the pool
+  is genuinely full), *running* degrade-class jobs of strictly lower
+  effective priority are shrunk in place (checkpoint -> restore at
+  fewer slots, never below their floor) until the head seats — the
+  admission-time 'degrade' policy applied to work already in flight.
+
 Invariants
 ----------
 * The scheduler never over-commits: the slots granted by one ``admit()``
@@ -95,6 +119,16 @@ class SchedulerConfig:
     default_deadline: Optional[float] = None  # deadline (ticks) for requests
                                               # that set none themselves
     preemption_budget: int = 1  # max swap-outs per tick
+    # ---- elastic-fleet knobs (inert at the defaults) ----
+    high_watermark: float = 1.0  # shard utilization above which the
+                                 # background rebalancer moves work off
+                                 # (1.0 = never: disabled)
+    low_watermark: float = 0.0   # shard utilization below which a shard
+                                 # may receive rebalanced work (0.0 =
+                                 # never: disabled)
+    proactive_degrade: bool = False  # shrink *running* degrade-class jobs
+                                     # when the queue head fits nowhere
+    shrink_budget: int = 1      # max in-place shrinks per tick
 
     def __post_init__(self):
         if self.policy not in ("priority", "fifo"):
@@ -106,6 +140,11 @@ class SchedulerConfig:
             raise ValueError("default_deadline must be >= 0 ticks")
         if self.preemption_budget < 0:
             raise ValueError("preemption_budget must be >= 0")
+        if not (0.0 <= self.low_watermark <= self.high_watermark <= 1.0):
+            raise ValueError(
+                "need 0 <= low_watermark <= high_watermark <= 1")
+        if self.shrink_budget < 0:
+            raise ValueError("shrink_budget must be >= 0")
 
 
 @dataclasses.dataclass
@@ -158,10 +197,31 @@ class ShardView:
     active: Tuple[ActiveJob, ...]       # jobs resident on the shard
     shapes: FrozenSet[Tuple[int, int]]  # (dim, N) dispatch shapes resident
 
+    @property
+    def used_slots(self) -> int:
+        return sum(len(j.slots) for j in self.active)
+
+    @property
+    def capacity(self) -> int:
+        """Total slots on the shard (free + held)."""
+        return self.free_slots + self.used_slots
+
 
 #: One planned cross-shard move: (rid on the donor shard, donor shard
 #: index, recipient shard index).
 Migration = Tuple[int, int, int]
+
+#: One planned in-place shrink (proactive degrade): (rid, shard index,
+#: slots to keep — strictly fewer than held, never below the floor).
+Shrink = Tuple[int, int, int]
+
+#: One planned drain-evacuation action, in execution order — always a
+#: 5-tuple ``(kind, rid, src, dst, width)``:
+#: ('migrate', rid, src, dst, width) moves the job whole;
+#: ('shrink', rid, src, dst, new_width) migrates keeping only the first
+#: ``new_width`` slots; ('swap', rid, src, -1, 0) checkpoints the job to
+#: the queue for a later bit-exact resume (no destination, no width).
+Evacuation = Tuple[str, int, int, int, int]
 
 
 class AdmissionScheduler:
@@ -300,6 +360,165 @@ class AdmissionScheduler:
                 freed += width
             if freed >= need and moves:
                 return moves
+        return []
+
+    # ---------------------------------------------------------- elastic fleet
+    def plan_evacuation(self, draining: Sequence[ShardView],
+                        survivors: Sequence[ShardView],
+                        chains_per_slot: int, tick: int,
+                        budget: int) -> List[Evacuation]:
+        """Plan this tick's shard-drain moves (bounded by ``budget``).
+
+        Jobs leave draining shards in effective-priority order (highest
+        first — the most important work is off the retiring device
+        soonest, and keeps annealing without a queue round-trip).  Per
+        job, in preference order:
+
+        1. **migrate** whole onto the survivor with the most free room
+           (lowest index on ties) — zero trajectory perturbation;
+        2. **shrink-migrate**: a degrade-class job that fits nowhere
+           whole is restored on the roomiest survivor at the width that
+           fits, never below its ``min_chains`` floor (the proactive-
+           degrade pressure valve applied to drain);
+        3. **swap** out to the queue — the job checkpoints to host and
+           resumes bit-exactly on whichever survivor next has room
+           (swapped jobs are admitted work: never rejected or degraded).
+
+        Drain therefore always makes progress and never loses work.
+        """
+        if budget <= 0 or not survivors:
+            return []
+        free = {s.index: s.free_slots for s in survivors}
+        actions: List[Evacuation] = []
+        jobs = [(j, d.index) for d in sorted(draining, key=lambda s: s.index)
+                for j in d.active]
+        jobs.sort(key=lambda ji: (-self.effective_priority(
+            ji[0].req, ji[0].submit_tick, tick), ji[1], ji[0].rid))
+        for job, src in jobs:
+            if len(actions) >= budget:
+                break
+            width = len(job.slots)
+            dst = min((i for i, f in free.items() if f >= width),
+                      key=lambda i: (-free[i], i), default=None)
+            if dst is not None:
+                actions.append(("migrate", job.rid, src, dst, width))
+                free[dst] -= width
+                continue
+            floor = job.req.slots_floor(chains_per_slot)
+            roomiest = min(free, key=lambda i: (-free[i], i))
+            if (self.overload_policy(job.req) == "degrade"
+                    and floor <= free[roomiest] and floor < width):
+                keep = min(free[roomiest], width - 1)
+                actions.append(("shrink", job.rid, src, roomiest, keep))
+                free[roomiest] -= keep
+                continue
+            actions.append(("swap", job.rid, src, -1, 0))
+        return actions
+
+    def plan_rebalance(self, shards: Sequence[ShardView], tick: int,
+                       budget: int) -> List[Migration]:
+        """Watermark rebalancing: background load-driven moves each tick.
+
+        Generalizes :meth:`plan_migrations` (which fires only for the
+        queue head) into a continuous balancer: while some shard's
+        utilization exceeds ``high_watermark`` and another sits below
+        ``low_watermark``, the narrowest job on the most-loaded shard
+        moves to the least-loaded one — checkpoint/restore, bit-exact —
+        bounded by ``budget`` per tick.
+
+        Hysteresis is structural, not temporal: a move is planned only
+        if the donor remains at least as loaded as the recipient after
+        it (``used_src - w >= used_dst + w``).  The load ordering never
+        inverts, so no later tick can profitably plan the reverse move —
+        thrash is impossible by construction, without cooldown state.
+        """
+        hi, lo = self.cfg.high_watermark, self.cfg.low_watermark
+        if budget <= 0 or len(shards) < 2 or (hi >= 1.0 and lo <= 0.0):
+            return []
+        cap = {s.index: s.capacity for s in shards}
+        used = {s.index: s.used_slots for s in shards}
+        jobs = {s.index: sorted(s.active, key=lambda j: (len(j.slots), j.rid))
+                for s in shards}
+        moves: List[Migration] = []
+        while len(moves) < budget:
+            util = {i: used[i] / max(cap[i], 1) for i in cap}
+            srcs = sorted((i for i in cap if util[i] > hi),
+                          key=lambda i: (-util[i], i))
+            dsts = sorted((i for i in cap if util[i] < lo),
+                          key=lambda i: (util[i], i))
+            planned = None
+            for si in srcs:
+                for job in jobs[si]:          # narrowest first
+                    w = len(job.slots)
+                    for di in dsts:
+                        if di == si or cap[di] - used[di] < w:
+                            continue
+                        if used[si] - w < used[di] + w:
+                            continue          # would invert the ordering
+                        planned = (job, si, di)
+                        break
+                    if planned:
+                        break
+                if planned:
+                    break
+            if planned is None:
+                break
+            job, si, di = planned
+            moves.append((job.rid, si, di))
+            jobs[si].remove(job)
+            used[si] -= len(job.slots)
+            used[di] += len(job.slots)
+        return moves
+
+    def plan_shrinks(self, shards: Sequence[ShardView],
+                     chains_per_slot: int, tick: int,
+                     budget: int) -> List[Shrink]:
+        """Proactive degrade: shrink *running* jobs to seat the queue head.
+
+        Fires only when the head fits on no shard at full width (the
+        same trigger as the admission-time fallbacks) and the pool has
+        no free room migration could consolidate.  Candidates are
+        degrade-class jobs holding more than their floor whose effective
+        priority is *strictly* below the head's (the preempt policy's
+        inversion guard, applied to width instead of residency).  On one
+        shard — cheapest victims first, largest reclaimable surplus on
+        ties — widths are cut just enough for the head to seat there;
+        all-or-nothing, bounded by ``budget`` per tick.
+
+        Returns ``(rid, shard index, slots to keep)`` in execution
+        order; empty when the head is seatable anyway or no shard can
+        reclaim enough width.
+        """
+        if budget <= 0 or not self._queue:
+            return []
+        head = self._head(tick)
+        if head is None:
+            return []
+        need = head.swapped.n_slots if head.swapped is not None \
+            else head.req.slots_needed(chains_per_slot)
+        if max((s.free_slots for s in shards), default=0) >= need:
+            return []                   # admission will seat it
+        head_eff = self.effective_priority(head.req, head.submit_tick, tick)
+        for view in sorted(shards, key=lambda s: (-s.free_slots, s.index)):
+            cands = []
+            for job in view.active:
+                floor = job.req.slots_floor(chains_per_slot)
+                eff = self.effective_priority(job.req, job.submit_tick, tick)
+                if (self.overload_policy(job.req) == "degrade"
+                        and len(job.slots) > floor and eff < head_eff):
+                    cands.append((eff, floor - len(job.slots), job.rid,
+                                  job, floor))
+            cands.sort()                # cheapest first, widest surplus ties
+            avail = view.free_slots
+            plan: List[Shrink] = []
+            for eff, _, rid, job, floor in cands:
+                if avail >= need or len(plan) >= budget:
+                    break
+                take = min(len(job.slots) - floor, need - avail)
+                plan.append((rid, view.index, len(job.slots) - take))
+                avail += take
+            if avail >= need and plan:
+                return plan
         return []
 
     # ------------------------------------------------------------- admission

@@ -36,8 +36,11 @@ from repro.service.scheduler import SchedulerConfig
 
 #: The synthetic-load mix: (objective, dim) pairs cycled over, crossed with
 #: a few cooling schedules — ≥3 objectives, ≥2 dims/schedules by design.
+#: Spans the full registry (including the PR-5 exponential/salomon growth:
+#: runtime kid dispatch serves them with zero new compiled programs).
 MIX_PROBLEMS = [
     ("rastrigin", 8), ("ackley", 16), ("schwefel", 8), ("griewank", 32),
+    ("exponential", 16), ("salomon", 8),
     ("rastrigin", 32), ("ackley", 8), ("schwefel", 16), ("griewank", 16),
 ]
 MIX_SCHEDULES = [
@@ -77,6 +80,20 @@ flag groups:
                   bursty (groups of --burst requests arrive together at
                   the same mean rate — the overload stressor).
                   --max-ticks bounds the run either way.
+  elastic fleet   --drain-at T (drain one shard at tick T: no new
+                  placements, jobs checkpoint-evacuate onto survivors,
+                  shard retires once empty; --drain-shard picks which,
+                  default the highest-index live shard), --resize T:N
+                  (repeatable: resize the fleet to N live shards at tick
+                  T, composing drain/add), --high/--low-watermark
+                  (background rebalancing: move narrow jobs off shards
+                  above high onto shards below low, hysteresis built in),
+                  --proactive-degrade (+ --shrink-budget): shrink
+                  *running* degrade-class jobs down to their min-chains
+                  floor when the queue head fits nowhere.  All of these
+                  reuse the bit-exact checkpoint/restore, so --check
+                  still holds (shrunk jobs are replayed standalone with
+                  the same width schedule).
   reporting       --check (default) re-runs every request standalone and
                   exits 1 unless all champions are bit-exact — the
                   placement-invariance oracle; --no-check skips it.
@@ -144,8 +161,30 @@ def main(argv=None):
                          "owns --slots slots (CPU-testable via XLA_FLAGS="
                          "--xla_force_host_platform_device_count)")
     ap.add_argument("--migration-budget", type=int, default=1,
-                    help="max cross-shard rebalancing moves per tick "
-                         "(0 disables automatic migration)")
+                    help="max cross-shard moves per tick — drain "
+                         "evacuation, head defrag and watermark "
+                         "rebalancing share it (0 disables all three)")
+    ap.add_argument("--drain-at", type=int, default=None,
+                    help="tick at which to drain one shard (evacuate and "
+                         "retire it mid-stream)")
+    ap.add_argument("--drain-shard", type=int, default=None,
+                    help="shard index for --drain-at (default: the "
+                         "highest-index live shard at that tick)")
+    ap.add_argument("--resize", action="append", default=None,
+                    metavar="TICK:N",
+                    help="resize the fleet to N live shards at TICK "
+                         "(repeatable; composes drain/add)")
+    ap.add_argument("--high-watermark", type=float, default=1.0,
+                    help="shard utilization above which the background "
+                         "rebalancer moves work off (1.0 disables)")
+    ap.add_argument("--low-watermark", type=float, default=0.0,
+                    help="shard utilization below which a shard may "
+                         "receive rebalanced work (0.0 disables)")
+    ap.add_argument("--proactive-degrade", action="store_true",
+                    help="shrink running degrade-class jobs (down to "
+                         "min_chains) when the queue head fits nowhere")
+    ap.add_argument("--shrink-budget", type=int, default=1,
+                    help="max proactive shrinks per tick")
     ap.add_argument("--variant", default="delta", choices=["delta", "full"],
                     help="objective evaluation: O(1) delta or O(dim) full")
     ap.add_argument("--seed", type=int, default=0,
@@ -188,6 +227,18 @@ def main(argv=None):
         # degenerating to --overload-policy none.
         ap.error(f"--overload-policy {args.overload_policy} requires "
                  "--deadline (the queueing-delay SLO it enforces)")
+    if args.drain_at is not None and args.devices < 2:
+        ap.error("--drain-at needs --devices >= 2 (the survivors absorb "
+                 "the drained shard's work)")
+    resizes = []
+    for spec in args.resize or []:
+        try:
+            t_str, n_str = spec.split(":")
+            resizes.append((int(t_str), int(n_str)))
+        except ValueError:
+            ap.error(f"--resize expects TICK:N, got {spec!r}")
+        if resizes[-1][1] < 1:
+            ap.error(f"--resize target must be >= 1 shard, got {spec!r}")
 
     cfg = EngineConfig(
         n_slots=args.slots, chains_per_slot=args.chains_per_slot,
@@ -196,8 +247,21 @@ def main(argv=None):
         scheduler=SchedulerConfig(policy=args.policy,
                                   overload=args.overload_policy,
                                   default_deadline=args.deadline,
-                                  preemption_budget=args.preemption_budget))
+                                  preemption_budget=args.preemption_budget,
+                                  high_watermark=args.high_watermark,
+                                  low_watermark=args.low_watermark,
+                                  proactive_degrade=args.proactive_degrade,
+                                  shrink_budget=args.shrink_budget))
     engine = SAServeEngine(cfg)
+    # Scripted fleet changes land on the deterministic tick axis.
+    for t, n in sorted(resizes):
+        engine.schedule_op(t, lambda n=n: engine.resize(n))
+    if args.drain_at is not None:
+        def _drain():
+            target = args.drain_shard if args.drain_shard is not None \
+                else max(s.index for s in engine.live_shards)
+            engine.drain(target)
+        engine.schedule_op(args.drain_at, _drain)
     reqs = make_mix(args.requests, args.chains_per_slot, seed=args.seed,
                     max_slots_per_req=min(args.max_slots_per_req, args.slots))
     arrivals = make_arrivals(reqs, args.arrivals, args.rate,
@@ -221,10 +285,14 @@ def main(argv=None):
         for req in served:
             res = by_id[req.req_id]
             # A degraded admission is bit-exact vs a standalone run at the
-            # *granted* chain count (same logical chain indices and RNG).
-            solo_req = req if res.granted_chains >= req.n_chains else \
-                dataclasses.replace(req, n_chains=res.granted_chains)
-            solo = run_standalone(solo_req, cfg)
+            # *admitted* chain count (same logical chain indices and RNG);
+            # a job shrunk mid-flight (drain / proactive degrade) is
+            # bit-exact vs a standalone run that replays the same width
+            # schedule on the level axis.
+            solo_req = req if res.admitted_chains >= req.n_chains else \
+                dataclasses.replace(req, n_chains=res.admitted_chains)
+            sched = [(lvl, to) for lvl, _frm, to in res.shrink_events]
+            solo = run_standalone(solo_req, cfg, shrink_schedule=sched)
             if res.f_best == solo.f_best:
                 n_exact += 1
             else:
@@ -243,6 +311,12 @@ def main(argv=None):
                 "chains_per_slot": args.chains_per_slot,
                 "devices": args.devices,
                 "migration_budget": args.migration_budget,
+                "drain_at": args.drain_at, "drain_shard": args.drain_shard,
+                "resize": sorted(resizes),
+                "high_watermark": args.high_watermark,
+                "low_watermark": args.low_watermark,
+                "proactive_degrade": args.proactive_degrade,
+                "shrink_budget": args.shrink_budget,
                 "variant": args.variant, "policy": args.policy,
                 "overload_policy": args.overload_policy,
                 "deadline": args.deadline,
@@ -270,12 +344,19 @@ def main(argv=None):
               f"{stats['sweeps_per_s']:.1f} sweeps/s, "
               f"{stats['chain_steps_per_s']:.3g} chain-steps/s | "
               f"occupancy {stats['occupancy']:.1%}")
-        if args.devices > 1:
+        if args.devices > 1 or stats["shards_retired"]:
             shard_util = " ".join(f"{u:.0%}" for u in
                                   stats["shard_occupancy"])
-            print(f"[serve_sa] {args.devices} shards x {args.slots} slots: "
-                  f"per-shard utilization [{shard_util}], "
+            print(f"[serve_sa] {stats['devices']} shards x {args.slots} "
+                  f"slots (started with {args.devices}): per-shard "
+                  f"utilization [{shard_util}], "
                   f"{stats['migrations']} migrations")
+        if stats["shards_retired"] or stats["draining"] or stats["shrinks"]:
+            retired = ", ".join(f"shard {i} at tick {t}"
+                                for i, t in engine.retired_shards)
+            print(f"[serve_sa] elastic fleet: {stats['shards_retired']} "
+                  f"retired ({retired or 'none'}), {stats['draining']} "
+                  f"still draining, {stats['shrinks']} proactive shrinks")
         if lat["incomplete"]:
             print(f"[serve_sa] {lat['incomplete']} requests still in flight "
                   f"or queued at the --max-ticks horizon (not rejected)")
@@ -301,7 +382,11 @@ def main(argv=None):
                 line += f" preempted x{res.n_preemptions}"
             if res.n_migrations:
                 line += f" migrated x{res.n_migrations}"
-            if res.degraded:
+            if res.n_shrinks:
+                line += (f" shrunk x{res.n_shrinks} "
+                         f"({res.admitted_chains}->{res.granted_chains} "
+                         "chains)")
+            elif res.degraded:
                 line += (f" degraded {res.granted_chains}/"
                          f"{res.requested_chains} chains")
             if args.check:

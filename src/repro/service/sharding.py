@@ -68,22 +68,47 @@ class EngineShard:
     segmented reduce identical to the single-pool engine.  Dispatch
     groups never span shards — each shard's groups compile and launch on
     its own device.
+
+    The fleet is *elastic* (engine.py ``drain``/``resize``): a shard
+    marked ``draining`` accepts no new placements while the engine
+    checkpoint-evacuates its jobs onto the survivors, and is retired —
+    removed from the fleet — once empty.  Shard ``index`` is therefore a
+    stable identity, not a list position: retired indices are never
+    reused, and shards added later get fresh indices.
     """
 
-    index: int                  # shard id == position on the (pool,) mesh
+    index: int                  # stable shard id (never reused)
     device: object              # jax.Device the shard's programs run on
     pool: SlotPool
     rids: RidTable
     sweeps_done: int = 0        # block-sweeps on this shard (utilization
                                 # numerator for per-shard occupancy)
+    resident_ticks: int = 0     # engine ticks this shard was in the fleet
+                                # (utilization denominator — shards may
+                                # join/leave mid-run)
+    draining: bool = False      # no new placements; evacuating to retire
 
     @property
     def jobs(self):
         """rid -> ActiveJob resident on this shard."""
         return self.rids.jobs
 
-    def occupancy(self, ticks: int) -> float:
-        return self.sweeps_done / (max(ticks, 1) * self.pool.n_slots)
+    def occupancy(self, ticks: int = 0) -> float:
+        """Fraction of this shard's slot-ticks spent sweeping.  Uses the
+        shard's own residency by default (elastic fleets: shards join and
+        leave mid-run); pass ``ticks`` to override the denominator."""
+        denom = ticks if ticks else self.resident_ticks
+        return self.sweeps_done / (max(denom, 1) * self.pool.n_slots)
+
+
+def make_shard(index: int, n_slots: int, chains_per_slot: int) -> EngineShard:
+    """Build one shard on the device backing ``index`` (round-robin over
+    the physical devices — the elastic-fleet grow path, where shards are
+    added one at a time with fresh indices)."""
+    devices = jax.devices()
+    return EngineShard(index=index, device=devices[index % len(devices)],
+                       pool=SlotPool(n_slots, chains_per_slot),
+                       rids=RidTable(n_slots))
 
 
 def make_shards(n_devices: int, n_slots: int,

@@ -68,6 +68,14 @@ class ActiveJob:
     # bit-exact, because restore is placement-invariant).
     home_shard: int = 0
     migrated_ticks: List[int] = dataclasses.field(default_factory=list)
+    # Proactive-degrade lifecycle: ticks at which the running job was
+    # shrunk (checkpoint -> restore at fewer slots), and the shrink
+    # schedule on the *level* axis — ``(level, from_chains, to_chains)``
+    # per shrink — which is what a standalone replay needs to reproduce
+    # the trajectory bit-exactly (the surviving chains keep their logical
+    # indices [0, to_chains), so only the width schedule matters).
+    shrunk_ticks: List[int] = dataclasses.field(default_factory=list)
+    shrink_events: List[tuple] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, get_arch, shrink
+from repro.configs import get_arch, shrink
 from repro.models import model as M
 
 # one representative per family keeps runtime low; mamba/moe/mla/encdec and
@@ -99,9 +99,6 @@ def test_adamw_second_moment_is_sharded_like_param():
         lambda p: {"params": p, "opt": init_opt_state(p, OptConfig())},
         pshapes)
     sspecs = state_specs(ss, pspecs)
-    flat_p = jax.tree_util.tree_leaves_with_path(pspecs,
-        is_leaf=lambda x: hasattr(x, "_normalized_spec_for_aval") or
-                          type(x).__name__ == "PartitionSpec")
     # v and m mirror the param tree: compare leaf-by-leaf
     pv = jax.tree_util.tree_leaves(sspecs["opt"]["v"],
         is_leaf=lambda x: type(x).__name__ == "PartitionSpec")

@@ -1,13 +1,9 @@
 """Data-pipeline determinism/elasticity + checkpoint fault-tolerance."""
-import dataclasses
 import json
-import threading
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.manager import (CheckpointManager, all_steps,
                                       restore_state, save_state)

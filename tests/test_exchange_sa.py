@@ -1,10 +1,8 @@
 """Exchange operators + end-to-end SA behaviour (paper §2.2, §4.1)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import SAConfig, sa_minimize
 from repro.core import exchange as exch

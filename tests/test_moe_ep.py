@@ -44,11 +44,12 @@ def local_loss(rp, x):
 
 def ep_loss(rp, x):
     fn = partial(L.moe_apply, **kw, ep_axis="model", ep_size=8)
-    y = jax.shard_map(fn, mesh=mesh,
-                      in_specs=({"router": P(), "w_gate": P("model"),
-                                 "w_up": P("model"), "w_down": P("model")},
-                                P()),
-                      out_specs=P(), check_vma=False)(rp, x)
+    from repro.launch.mesh import shard_map
+    y = shard_map(fn, mesh=mesh,
+                  in_specs=({"router": P(), "w_gate": P("model"),
+                             "w_up": P("model"), "w_down": P("model")},
+                            P()),
+                  out_specs=P(), check_vma=False)(rp, x)
     return jnp.sum(y ** 2)
 
 l0, g0 = jax.value_and_grad(local_loss)(routed, x)

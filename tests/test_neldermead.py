@@ -1,7 +1,6 @@
 """Nelder-Mead local minimizer + hybrid SA->NM (paper §4.2)."""
 import jax
 import numpy as np
-import pytest
 
 from repro.core import SAConfig, hybrid_minimize, nelder_mead
 from repro.objectives import functions as F

@@ -6,7 +6,7 @@ import pytest
 pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.reduce_min import argmin_reduce, block_argmin_pallas
+from repro.kernels.reduce_min import argmin_reduce
 
 
 @pytest.mark.parametrize("n,blk", [(64, 8), (256, 64), (1024, 128),

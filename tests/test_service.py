@@ -1,8 +1,6 @@
 """Multi-tenant SA serving engine: scheduler packing/refill invariants,
 per-slot temperature correctness (bit-exact vs standalone), and tenant
 isolation in the masked (segmented) champion exchange."""
-import dataclasses
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -278,7 +276,17 @@ def test_make_mix_is_heterogeneous():
 # ------------------------------------------------------ runtime kid dispatch
 def test_kernel_per_block_kid_matches_scalar_calls():
     """(blk0 on rastrigin, blk1 on ackley) in ONE launch == two scalar-kid
-    launches — mixed-objective co-batches are bit-exact."""
+    launches — mixed-objective co-batches follow the identical trajectory.
+
+    The *states* (and therefore every Metropolis accept/reject decision)
+    must be bit-equal.  The returned objective value is the delta-variant's
+    running accumulator, and the runtime-dispatch and static-kid programs
+    are two different XLA lowerings — their fusion clusters may contract
+    floats differently, so the cached f is held to ULP scale rather than
+    bitwise.  (The serving bit-exactness oracle — engine vs run_standalone
+    — compares runtime-vs-runtime, the same program, and stays bitwise;
+    test_mixed_objective_cobatch_matches_standalone asserts that.)
+    """
     from repro.kernels import objective_math as om
     rng = np.random.default_rng(3)
     x = np.empty((16, 4), np.float32)
@@ -299,8 +307,9 @@ def test_kernel_per_block_kid_matches_scalar_calls():
                                      chain_base=jnp.asarray([8], jnp.uint32))
     np.testing.assert_array_equal(np.asarray(xa[:8]), np.asarray(x1))
     np.testing.assert_array_equal(np.asarray(xa[8:]), np.asarray(x2))
-    np.testing.assert_array_equal(np.asarray(fa),
-                                  np.asarray(jnp.concatenate([f1, f2])))
+    np.testing.assert_allclose(np.asarray(fa),
+                               np.asarray(jnp.concatenate([f1, f2])),
+                               rtol=1e-6, atol=1e-5)
 
 
 @pytest.mark.parametrize("variant", ["delta", "full"])

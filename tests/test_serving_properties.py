@@ -292,3 +292,86 @@ def test_engine_invariants_under_random_preemption(data):
         assert res.f_best == solo.f_best
         np.testing.assert_array_equal(res.x_best, solo.x_best)
         assert res.champion_history == solo.champion_history
+
+
+@pytest.mark.slow
+@given(st.data())
+@settings(max_examples=12, deadline=None)
+def test_engine_invariants_under_random_drain_resize(data):
+    """Elastic-fleet property (PR 5): random arrivals x random
+    drain/resize/proactive-degrade/watermark points => no slot leaks on
+    any surviving shard, exactly one terminal status per request, no job
+    lost or duplicated across shard retirement, retired shard indices
+    never reused, and every completed request bit-exact vs a standalone
+    replay of its width schedule."""
+    n_slots = 2
+    n0 = data.draw(st.integers(2, 3))
+    watermarks = data.draw(st.booleans())
+    cfg = EngineConfig(
+        n_slots=n_slots, chains_per_slot=CPS, n_devices=n0,
+        use_pallas=False,
+        migration_budget=data.draw(st.integers(1, 2)),
+        scheduler=SchedulerConfig(
+            overload="degrade", default_deadline=40.0,
+            proactive_degrade=data.draw(st.booleans()),
+            high_watermark=0.75 if watermarks else 1.0,
+            low_watermark=0.25 if watermarks else 0.0))
+    n_reqs = data.draw(st.integers(2, 6))
+    reqs = [_req(i,
+                 n_chains=data.draw(st.integers(1, 2)) * CPS,
+                 min_chains=CPS,
+                 rho=0.7,
+                 priority=data.draw(st.integers(0, 3)))
+            for i in range(n_reqs)]
+    times = [data.draw(st.floats(0, 10, allow_nan=False,
+                                 allow_infinity=False))
+             for _ in reqs]
+    engine = SAServeEngine(cfg)
+    arrivals = ArrivalProcess.trace(reqs, times)
+
+    guard = 0
+    while not (engine.done and arrivals.exhausted):
+        guard += 1
+        assert guard < 500, "engine failed to drain (livelock?)"
+        for t, r in arrivals.due(engine.tick_count):
+            engine.submit(r, t)
+        live = engine.live_shards
+        roll = data.draw(st.integers(0, 9))
+        if roll == 0 and len(live) > 1:
+            engine.drain(data.draw(st.sampled_from(
+                sorted(s.index for s in live))))
+        elif roll == 1:
+            engine.resize(data.draw(st.integers(1, 4)))
+        elif roll == 2:
+            active = sorted(j.req.req_id for _, j in engine._iter_jobs())
+            if active:
+                engine.degrade_active(data.draw(st.sampled_from(active)),
+                                      CPS)
+        engine.tick()
+        resident = [j.req.req_id for _, j in engine._iter_jobs()]
+        assert len(resident) == len(set(resident)), "double placement"
+        retired = [i for i, _ in engine.retired_shards]
+        assert len(retired) == len(set(retired)), "shard index reused"
+        assert not (set(retired)
+                    & {s.index for s in engine.shards}), "zombie shard"
+
+    # No slot leaked on any surviving shard; every rid recycled.
+    for shard in engine.shards:
+        assert shard.pool.n_free == n_slots
+        assert np.all(shard.pool.owner == -1)
+        assert not shard.rids.jobs and len(shard.rids._free) == n_slots
+    # Exactly one terminal status per submitted request: nothing lost in
+    # a retired shard, nothing duplicated by evacuation.
+    ids = sorted(r.req_id for r in engine.results)
+    assert ids == list(range(n_reqs))
+    for res in engine.results:
+        if not res.completed:
+            continue
+        req = reqs[res.req_id]
+        if res.admitted_chains < req.n_chains:
+            req = dataclasses.replace(req, n_chains=res.admitted_chains)
+        sched = [(lvl, to) for lvl, _frm, to in res.shrink_events]
+        solo = run_standalone(req, cfg, shrink_schedule=sched)
+        assert res.f_best == solo.f_best
+        np.testing.assert_array_equal(res.x_best, solo.x_best)
+        assert res.champion_history == solo.champion_history

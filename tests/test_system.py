@@ -1,8 +1,4 @@
 """System-level coherence checks: public API, configs, shape/skip rules."""
-import numpy as np
-import pytest
-
-import repro
 from repro.configs import ARCH_IDS, get_arch
 from repro.configs.common import SHAPES
 
@@ -12,7 +8,9 @@ def test_public_api_imports():
                             sa_minimize)
     from repro.objectives import SUITE, get
     assert len(SUITE) == 41
-    assert callable(sa_minimize)
+    for api in (SAConfig, SAResult, hybrid_minimize, nelder_mead,
+                sa_minimize, get):
+        assert callable(api)
 
 
 def test_all_ten_archs_registered():
