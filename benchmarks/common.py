@@ -1,8 +1,10 @@
-"""Shared benchmark plumbing: timing, tables, error metrics."""
+"""Shared benchmark plumbing: timing, tables, provenance, error metrics."""
 from __future__ import annotations
 
 import dataclasses
 import json
+import platform
+import subprocess
 import time
 from pathlib import Path
 from typing import Callable, Optional
@@ -11,10 +13,82 @@ import jax
 import numpy as np
 
 ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+_REPO = Path(__file__).resolve().parent.parent
 
 
 def block(x):
     return jax.block_until_ready(x)
+
+
+def _git_sha() -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=_REPO, capture_output=True,
+            text=True, timeout=10)
+        sha = out.stdout.strip()
+        if out.returncode == 0 and sha:
+            dirty = subprocess.run(
+                ["git", "status", "--porcelain"], cwd=_REPO,
+                capture_output=True, text=True, timeout=10)
+            return sha + ("-dirty" if dirty.stdout.strip() else "")
+    except Exception:
+        pass
+    return None
+
+
+def provenance(**extra) -> dict:
+    """Reproducibility stamp for BENCH_*.json artifacts.
+
+    Records where a number came from — git sha (with a ``-dirty``
+    marker), jax/numpy versions, backend and device census, host
+    platform — so a committed benchmark JSON is auditable long after the
+    machine that produced it is gone.  Per-bench facts (seed, config)
+    are passed through ``extra``; everything else every artifact shares.
+    """
+    devices = jax.devices()
+    info = {
+        "git_sha": _git_sha(),
+        "jax_version": jax.__version__,
+        "numpy_version": np.__version__,
+        "backend": jax.default_backend(),
+        "device_count": len(devices),
+        "device_kind": devices[0].device_kind if devices else None,
+        "python_version": platform.python_version(),
+        "platform": platform.platform(),
+    }
+    info.update(extra)
+    return info
+
+
+def _sanitize(obj):
+    """Map non-finite floats to None: committed artifacts must be strict
+    RFC 8259 JSON (bare NaN breaks jq / JSON.parse / Go decoders)."""
+    if isinstance(obj, dict):
+        return {k: _sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_sanitize(v) for v in obj]
+    if isinstance(obj, (np.floating, np.integer)):
+        obj = obj.item()
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return None
+    return obj
+
+
+def write_bench(out: Path, doc: dict, **prov_extra) -> Path:
+    """Write one benchmark artifact with the provenance stamp attached.
+
+    The single chokepoint every ``BENCH_*.json`` writer goes through:
+    stamps :func:`provenance` (plus per-bench ``prov_extra`` such as the
+    seed), sanitizes non-finite floats and writes deterministic
+    (sorted-key) JSON.
+    """
+    out = Path(out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    doc = dict(doc)
+    doc["provenance"] = provenance(**prov_extra)
+    out.write_text(json.dumps(_sanitize(doc), indent=2, sort_keys=True,
+                              allow_nan=False, default=float) + "\n")
+    return out
 
 
 def time_fn(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
@@ -64,11 +138,8 @@ class Table:
             print("  ".join(v.rjust(w) for v, w in zip(row, widths)))
 
     def save(self, name: str):
-        out = ARTIFACTS / "bench"
-        out.mkdir(parents=True, exist_ok=True)
-        (out / f"{name}.json").write_text(
-            json.dumps({"title": self.title, "rows": self.rows}, indent=1,
-                       default=float))
+        write_bench(ARTIFACTS / "bench" / f"{name}.json",
+                    {"title": self.title, "rows": self.rows})
 
 
 @dataclasses.dataclass

@@ -51,31 +51,45 @@ queueing delay; everything lands in
   PYTHONPATH=src python benchmarks/serve_sa_latency.py --drain \
       --devices 4 --slots 2 --chains-per-slot 8 --requests 48 \
       --drain-tick 12
+
+``--wall`` is the host-tick-bottleneck bench (ROADMAP item 1): the same
+seeded stream is served once per ``--wall-devices`` shard count and
+**wall-clock** req/s (not req/tick) is reported, with the per-phase tick
+breakdown (``schedule / admit / dispatch / device_wait / materialize /
+retire``, telemetry.py) from a bit-exact instrumented re-run attached —
+so "more shards, more per-tick goodput, worse wall-clock" decomposes
+into *which phase* eats the time.  Lands in
+``artifacts/bench/BENCH_serve_wall.json``.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+      python benchmarks/serve_sa_latency.py --wall --wall-devices 1,2,4 \
+      --requests 24 --slots 2 --chains-per-slot 8 --max-ticks 120
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 from pathlib import Path
 
 try:
-    from .common import Table
+    from .common import Table, write_bench
 except ImportError:  # run as a plain script: python benchmarks/serve_sa_latency.py
     import sys
     sys.path.insert(0, str(Path(__file__).resolve().parent))
-    from common import Table
+    from common import Table, write_bench
 
 from repro.service.arrivals import ArrivalProcess, latency_summary
 from repro.service.engine import EngineConfig, SAServeEngine
 from repro.service.scheduler import SchedulerConfig
 from repro.service.serve_sa import _jsonable, make_mix
+from repro.service.telemetry import TICK_PHASES, Telemetry
 
 #: Default artifact paths (repo-relative), one per benchmark mode.
 _BENCH_DIR = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 DEFAULT_OVERLOAD_OUT = _BENCH_DIR / "BENCH_serve_overload.json"
 DEFAULT_DRAIN_OUT = _BENCH_DIR / "BENCH_serve_drain.json"
 DEFAULT_SCALE_OUT = _BENCH_DIR / "BENCH_serve_scale.json"
+DEFAULT_WALL_OUT = _BENCH_DIR / "BENCH_serve_wall.json"
 
 
 def bench_rate(rate: float, n_requests: int, n_slots: int,
@@ -181,10 +195,9 @@ def run_overload(args):
     for policy, row in doc["policies"].items():
         table.add(policy=policy, **{k: row[k] for k in cols[1:]})
     table.show()
-    out = Path(args.out) if args.out else DEFAULT_OVERLOAD_OUT
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(_jsonable(doc), indent=2, sort_keys=True,
-                              allow_nan=False) + "\n")
+    out = write_bench(Path(args.out) if args.out else DEFAULT_OVERLOAD_OUT,
+                      _jsonable(doc), seed=args.seed,
+                      arrival_seed=args.arrival_seed)
     print(f"\nwrote {out}")
     base = doc["policies"]["none"]
     for policy in ("reject", "degrade"):
@@ -296,10 +309,9 @@ def run_drain(args):
     for name in ("baseline", "drain"):
         table.add(run=name, **{k: doc[name][k] for k in cols[1:]})
     table.show()
-    out = Path(args.out) if args.out else DEFAULT_DRAIN_OUT
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(_jsonable(doc), indent=2, sort_keys=True,
-                              allow_nan=False) + "\n")
+    out = write_bench(Path(args.out) if args.out else DEFAULT_DRAIN_OUT,
+                      _jsonable(doc), seed=args.seed,
+                      arrival_seed=args.arrival_seed)
     print(f"\nwrote {out}")
     d = doc["drain"]
     print(f"drain: {d['completed']}/{d['submitted']} completed, "
@@ -353,8 +365,6 @@ def run_scale_devices(args):
               f"{hi['goodput_req_per_tick']:.3f} req/tick), p99 queue delay "
               f"{lo['queue_delay_p99']:.1f}t -> {hi['queue_delay_p99']:.1f}t "
               f"on the same seeded stream")
-    out = Path(args.out) if args.out else DEFAULT_SCALE_OUT
-    out.parent.mkdir(parents=True, exist_ok=True)
     doc = {
         "config": {
             "requests": args.requests, "slots": args.slots,
@@ -365,8 +375,126 @@ def run_scale_devices(args):
         },
         "rows": rows,
     }
-    out.write_text(json.dumps(_jsonable(doc), indent=2, sort_keys=True,
-                              allow_nan=False) + "\n")
+    out = write_bench(Path(args.out) if args.out else DEFAULT_SCALE_OUT,
+                      _jsonable(doc), seed=args.seed,
+                      arrival_seed=args.arrival_seed)
+    print(f"wrote {out}")
+    return rows
+
+
+def bench_wall_point(n_devices: int, args) -> dict:
+    """One wall-clock point: the same seeded stream on an n-shard fleet.
+
+    Two runs per point: a *plain* run (telemetry off — the headline
+    req/s, unperturbed by fencing) and an *instrumented* run (telemetry
+    on) whose per-phase breakdown attributes the tick's wall time.  Both
+    serve the identical stream, and the instrumented run is bit-exact
+    with the plain one (the engine's telemetry guarantee) — only wall
+    timings differ.
+    """
+
+    def serve(telemetry):
+        cfg = EngineConfig(
+            n_slots=args.slots, chains_per_slot=args.chains_per_slot,
+            n_devices=n_devices, variant=args.variant,
+            scheduler=SchedulerConfig(policy="priority"))
+        engine = SAServeEngine(cfg, telemetry=telemetry)
+        reqs = make_mix(args.requests, args.chains_per_slot, seed=args.seed,
+                        max_slots_per_req=min(2, args.slots))
+        engine.run_stream(
+            ArrivalProcess.poisson(reqs, rate=args.rate,
+                                   seed=args.arrival_seed),
+            max_ticks=args.max_ticks)
+        return engine
+
+    plain = serve(None)
+    tel = Telemetry()
+    timed = serve(tel)
+    stats = plain.stats()
+    tstats = timed.stats()
+    phase_hist = tel.m_tick_phase
+    phases = {}
+    for phase in TICK_PHASES:
+        s = phase_hist.summary(phase)
+        if s["count"]:
+            phases[phase] = {
+                "total_s": s["sum"], "mean_s": s["mean"],
+                "p50_s": s["p50"], "p90_s": s["p90"], "p99_s": s["p99"],
+                "count": s["count"],
+            }
+    timed_total = sum(p["total_s"] for p in phases.values())
+    return {
+        "devices": n_devices,
+        "completed": stats["completed"],
+        "ticks": stats["ticks"],
+        "wall_s": stats["wall_s"],
+        "requests_per_s": stats["requests_per_s"],
+        "sweeps_per_s": stats["sweeps_per_s"],
+        "chain_steps_per_s": stats["chain_steps_per_s"],
+        "goodput_req_per_tick": (stats["completed"] / stats["ticks"]
+                                 if stats["ticks"] else 0.0),
+        "tick_wall_ms": (1e3 * stats["wall_s"] / stats["ticks"]
+                         if stats["ticks"] else 0.0),
+        "phases": phases,                     # from the instrumented run
+        "phase_share": {p: v["total_s"] / timed_total
+                        for p, v in phases.items()} if timed_total else {},
+        "instrumented_wall_s": tstats["wall_s"],
+        "per_shard_phase_seconds": tstats["phases"].get("per_shard", {}),
+        "group_launches": stats["group_launches"],
+    }
+
+
+def run_wall(args):
+    """The ROADMAP-item-1 bench: wall-clock req/s vs shard count, with the
+    per-phase tick breakdown that localizes the host-tick bottleneck."""
+    counts = [int(c) for c in args.wall_devices.split(",")]
+    table = Table(
+        f"SA serving engine: wall-clock goodput vs shards "
+        f"(same seeded stream @ {args.rate:g} req/tick, "
+        f"{args.slots} slots/shard; phase shares from an instrumented "
+        "re-run)",
+        ["devices", "completed", "ticks", "wall_s", "requests_per_s",
+         "tick_wall_ms", "schedule%", "dispatch%", "device_wait%",
+         "materialize%", "other%"],
+        fmt={"wall_s": ".2f", "requests_per_s": ".2f", "tick_wall_ms": ".2f",
+             "schedule%": ".1%", "dispatch%": ".1%", "device_wait%": ".1%",
+             "materialize%": ".1%", "other%": ".1%"})
+    rows = []
+    for n in counts:
+        row = bench_wall_point(n, args)
+        rows.append(row)
+        share = row["phase_share"]
+        main_phases = ("schedule", "dispatch", "device_wait", "materialize")
+        table.add(**{k: row[k] for k in table.columns if "%" not in k},
+                  **{f"{p}%": share.get(p, 0.0) for p in main_phases},
+                  **{"other%": sum(v for p, v in share.items()
+                                   if p not in main_phases)})
+    table.show()
+    if len(rows) > 1:
+        lo, hi = rows[0], rows[-1]
+        print(f"\n{hi['devices']} shards vs {lo['devices']}: "
+              f"{lo['requests_per_s']:.2f} -> {hi['requests_per_s']:.2f} "
+              f"req/s wall-clock; dominant phase at {hi['devices']} shards: "
+              + max(rows[-1]["phase_share"],
+                    key=rows[-1]["phase_share"].get, default="n/a"))
+    doc = {
+        "config": {
+            "requests": args.requests, "slots": args.slots,
+            "chains_per_slot": args.chains_per_slot,
+            "variant": args.variant, "seed": args.seed,
+            "arrival_seed": args.arrival_seed, "rate": args.rate,
+            "wall_devices": counts, "max_ticks": args.max_ticks,
+        },
+        "note": ("requests_per_s/wall_s are from the telemetry-off run; "
+                 "phases/phase_share from a bit-exact instrumented re-run "
+                 "(block_until_ready fencing separates dispatch from "
+                 "device_wait). Wall figures are machine-dependent; the "
+                 "phase *shares* are the durable signal."),
+        "rows": rows,
+    }
+    out = write_bench(Path(args.out) if args.out else DEFAULT_WALL_OUT,
+                      _jsonable(doc), seed=args.seed,
+                      arrival_seed=args.arrival_seed)
     print(f"wrote {out}")
     return rows
 
@@ -408,6 +536,12 @@ def main(argv=None):
     ap.add_argument("--migration-budget", type=int, default=2,
                     help="cross-shard moves per tick (drain evacuation, "
                          "defrag and rebalancing share it)")
+    ap.add_argument("--wall", action="store_true",
+                    help="wall-clock goodput bench: req/s (not req/tick) "
+                         "vs shard count with the per-phase tick "
+                         "breakdown; writes BENCH_serve_wall.json")
+    ap.add_argument("--wall-devices", default="1,2,4",
+                    help="comma-separated shard counts for --wall")
     ap.add_argument("--drain", action="store_true",
                     help="elastic-fleet acceptance: drain one of "
                          "--devices shards at --drain-tick under load; "
@@ -432,6 +566,9 @@ def main(argv=None):
 
     if args.overload:
         return run_overload(args)
+
+    if args.wall:
+        return run_wall(args)
 
     if args.drain:
         return run_drain(args)

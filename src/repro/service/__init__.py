@@ -30,6 +30,14 @@ Layers
                    champion exchange masked per request (tenant isolation).
 ``serve_sa.py``  : CLI driver + synthetic heterogeneous load, closed- or
                    open-loop (``--arrivals poisson --rate ...``).
+``telemetry.py`` : opt-in observability bundle — metrics registry
+                   (counters/gauges/streaming histograms, Prometheus
+                   text + JSON export), per-phase tick timers, the
+                   deterministic decision event log, and the jax
+                   compile-event counter.  Off by default: zero overhead,
+                   bit-exact when on (docs/observability.md).
+``trace.py``     : Chrome/Perfetto ``trace_event`` builder + checked-in
+                   schema validation (``serve_sa --trace out.json``).
 
 Usage::
 
@@ -56,6 +64,9 @@ from repro.service.scheduler import (AdmissionPlan, AdmissionScheduler,
                                      QueueEntry, SchedulerConfig, ShardView)
 from repro.service.sharding import EngineShard, slot_pool_devices
 from repro.service.slots import ActiveJob, SlotPool, SwappedJob
+from repro.service.telemetry import (EventLog, MetricsRegistry, PhaseTimer,
+                                     Telemetry, TICK_PHASES, compile_events)
+from repro.service.trace import TraceBuilder, validate_trace
 
 __all__ = [
     "EngineConfig", "SAServeEngine", "run_standalone", "F_OPT",
@@ -66,4 +77,6 @@ __all__ = [
     "SlotPool", "ActiveJob", "SwappedJob",
     "EngineShard", "slot_pool_devices",
     "ArrivalProcess", "latency_summary",
+    "Telemetry", "MetricsRegistry", "PhaseTimer", "EventLog",
+    "TICK_PHASES", "compile_events", "TraceBuilder", "validate_trace",
 ]

@@ -93,6 +93,7 @@ from repro.service.scheduler import (AdmissionScheduler, QueueEntry,
                                      SchedulerConfig, ShardView)
 from repro.service.sharding import EngineShard, make_shard, make_shards
 from repro.service.slots import ActiveJob, SwappedJob
+from repro.service.telemetry import NULL as NULL_TELEMETRY
 
 #: Known optima of the servable (registry) objectives, for accuracy targets.
 #: Schwefel is the paper's normalized form, so its optimum is dim-free.
@@ -155,7 +156,7 @@ def _group_tick(x, kid_blk, T_blk, seed_blk, step0_blk, base_blk, seg, adopt,
 class SAServeEngine:
     """Multi-tenant annealing server: one device program per (shard, group)."""
 
-    def __init__(self, cfg: Optional[EngineConfig] = None):
+    def __init__(self, cfg: Optional[EngineConfig] = None, telemetry=None):
         # Build a fresh default per engine: a mutable-default-argument
         # EngineConfig() would be evaluated once and shared by every engine
         # constructed without a config (tests pin this down).
@@ -164,6 +165,13 @@ class SAServeEngine:
         self.shards: List[EngineShard] = make_shards(
             cfg.n_devices, cfg.n_slots, cfg.chains_per_slot)
         self.scheduler = AdmissionScheduler(cfg.scheduler)
+        # Observability is opt-in and purely host-side: the default NULL
+        # telemetry no-ops every hook (no span objects, no metrics, no
+        # behavior change), and an enabled Telemetry never touches a
+        # device buffer or an admission decision — trajectories stay
+        # bit-exact with tracing on (tests + serve_sa --check --trace).
+        self.telemetry = NULL_TELEMETRY if telemetry is None else telemetry
+        self.scheduler.telemetry = self.telemetry
         self.results: List[RequestResult] = []
         self.tick_count = 0
         self.n_submitted = 0          # requests offered via submit(): the
@@ -190,6 +198,11 @@ class SAServeEngine:
                 f"chains_per_slot={cfg.chains_per_slot} must be a multiple "
                 "of 8 (TPU sublanes) on the Pallas path")
         self._epoch = time.perf_counter()
+        # Phase spans share the engine's monotonic epoch; the NULL
+        # telemetry hands back a shared no-op timer (zero allocation).
+        self._pt = self.telemetry.make_phase_timer(self._now)
+        if self.telemetry.trace is not None:
+            self.telemetry.trace.bind_clock(self._now)
         #: req_id -> (arrival_time in ticks, submit wall time): lifecycle
         #: info that must survive the queue (the scheduler only keeps the
         #: submit tick).
@@ -238,6 +251,10 @@ class SAServeEngine:
             self._now())
         self.scheduler.submit(req, self.tick_count)
         self.n_submitted += 1
+        if self.telemetry.trace is not None:
+            self.telemetry.trace.request_begin(
+                req.req_id, objective=req.objective, dim=req.dim,
+                n_chains=req.n_chains, tick=self.tick_count)
 
     # ----------------------------------------------------------- shard views
     def _iter_jobs(self) -> Iterator[Tuple[EngineShard, ActiveJob]]:
@@ -293,6 +310,8 @@ class SAServeEngine:
     def _admit(self) -> None:
         cps = self.cfg.chains_per_slot
         budget = self.cfg.migration_budget
+        pt = self._pt          # phase spans: planning = 'schedule',
+        #                        executing the plans = 'admit'
         # Drain evacuation has first claim on the per-tick move budget:
         # jobs leave draining shards (migrate whole / shrink-migrate /
         # swap to queue, in that order of preference) so the shards can
@@ -301,16 +320,18 @@ class SAServeEngine:
         if any(s.draining for s in self.shards):
             budget -= self._evacuate_draining(budget)
             self._retire_drained()
-        views = {s.index: self._view(s) for s in self.live_shards}
-        # Head defrag: if the queue head fits on no single shard but the
-        # pool as a whole has room, migrate jobs off a donor shard
-        # (checkpoint/restore, bit-exact) so the head becomes admissible
-        # this very tick.  Snapshots are rebuilt only for the
-        # (budget-bounded, usually zero) shards a move touched.
-        moves = self.scheduler.plan_migrations(
-            list(views.values()), cps, self.tick_count, budget)
-        for rid, src, dst in moves:
-            self._migrate_job(self._shard(src), rid, self._shard(dst))
+        with pt("schedule"):
+            views = {s.index: self._view(s) for s in self.live_shards}
+            # Head defrag: if the queue head fits on no single shard but
+            # the pool as a whole has room, migrate jobs off a donor shard
+            # (checkpoint/restore, bit-exact) so the head becomes
+            # admissible this very tick.  Snapshots are rebuilt only for
+            # the (budget-bounded, usually zero) shards a move touched.
+            moves = self.scheduler.plan_migrations(
+                list(views.values()), cps, self.tick_count, budget)
+        with pt("admit"):
+            for rid, src, dst in moves:
+                self._migrate_job(self._shard(src), rid, self._shard(dst))
         budget -= len(moves)
         for si in {si for move in moves for si in move[1:]}:
             views[si] = self._view(self._shard(si))
@@ -320,12 +341,14 @@ class SAServeEngine:
         # fewer slots, never below their floor — until it fits.
         shrinks = []
         if not moves and self.cfg.scheduler.proactive_degrade:
-            shrinks = self.scheduler.plan_shrinks(
-                list(views.values()), cps, self.tick_count,
-                self.cfg.scheduler.shrink_budget)
-            for rid, si, keep_slots in shrinks:
-                self._shrink_job(self._shard(si), rid, keep_slots)
-                views[si] = self._view(self._shard(si))
+            with pt("schedule"):
+                shrinks = self.scheduler.plan_shrinks(
+                    list(views.values()), cps, self.tick_count,
+                    self.cfg.scheduler.shrink_budget)
+            with pt("admit"):
+                for rid, si, keep_slots in shrinks:
+                    self._shrink_job(self._shard(si), rid, keep_slots)
+                    views[si] = self._view(self._shard(si))
         # Watermark rebalancing: background load-driven moves with
         # whatever move budget the head didn't need.  Skipped on ticks
         # head-defrag or a proactive shrink fired — the slots they freed
@@ -334,10 +357,13 @@ class SAServeEngine:
         # land new work on the shrink's shard, wasting the irreversible
         # width cut).
         if not moves and not shrinks:
-            rmoves = self.scheduler.plan_rebalance(
-                list(views.values()), self.tick_count, budget)
-            for rid, src, dst in rmoves:
-                self._migrate_job(self._shard(src), rid, self._shard(dst))
+            with pt("schedule"):
+                rmoves = self.scheduler.plan_rebalance(
+                    list(views.values()), self.tick_count, budget)
+            with pt("admit"):
+                for rid, src, dst in rmoves:
+                    self._migrate_job(self._shard(src), rid,
+                                      self._shard(dst))
             for si in {si for move in rmoves for si in move[1:]}:
                 views[si] = self._view(self._shard(si))
         # Then one queue walk across all shards (scheduler.admit_sharded):
@@ -345,26 +371,37 @@ class SAServeEngine:
         # width on every shard — least-loaded first, (dim, N)-locality
         # tie-break — before its degrade/preempt fallback may fire, and
         # the preemption budget bounds evictions per tick across shards.
-        plan = self.scheduler.admit_sharded(
-            list(views.values()), cps, self.tick_count)
+        with pt("schedule"):
+            plan = self.scheduler.admit_sharded(
+                list(views.values()), cps, self.tick_count)
         # Execution order matters: rejections first (they free nothing
         # but must be stamped this tick), then evictions (freeing slots
         # the plan's admissions count on), then placements.
-        for entry in plan.rejected:
-            self._reject(entry)
-        for rid, si in plan.evict:
-            self._swap_out(self._shard(si), rid)
-        for entry, granted_slots, si in plan.admitted:
-            self._place(self._shard(si), entry, granted_slots)
+        with pt("admit"):
+            for entry in plan.rejected:
+                self._reject(entry)
+            for rid, si in plan.evict:
+                self._swap_out(self._shard(si), rid)
+            for entry, granted_slots, si in plan.admitted:
+                self._place(self._shard(si), entry, granted_slots)
 
     def _place(self, shard: EngineShard, entry: QueueEntry,
                granted_slots: int) -> None:
+        tel = self.telemetry
         if entry.swapped is not None:       # swap-in: bit-exact resume
             job = entry.swapped.job
             job.resumed_ticks.append(self.tick_count)
             shard.rids.alloc(job)
             job.slots = shard.pool.restore(job.rid, entry.swapped.blocks)
             job.home_shard = shard.index
+            if tel.enabled:
+                tel.decision(self.tick_count, "resume",
+                             req_id=job.req.req_id, shard=shard.index,
+                             slots=len(job.slots))
+                if tel.trace is not None:
+                    tel.trace.request_instant(
+                        job.req.req_id, "resume", shard=shard.index,
+                        tick=self.tick_count)
             return
         req = entry.req
         arrival, submit_wall = self._submit_info.pop(
@@ -379,6 +416,16 @@ class SAServeEngine:
         shard.rids.alloc(job)
         job.slots = shard.pool.assign(job.rid, req, n_slots=granted_slots)
         job.granted_chains = granted_slots * self.cfg.chains_per_slot
+        if tel.enabled:
+            tel.decision(self.tick_count, "admit", req_id=req.req_id,
+                         shard=shard.index, granted_slots=granted_slots,
+                         requested_chains=req.n_chains,
+                         granted_chains=job.granted_chains)
+            if tel.trace is not None:
+                tel.trace.request_instant(
+                    req.req_id, "admit", shard=shard.index,
+                    granted_chains=job.granted_chains,
+                    tick=self.tick_count)
 
     def _swap_out(self, shard: EngineShard, rid: int) -> None:
         """Preempt: checkpoint a job's device-visible state to host, free
@@ -393,6 +440,15 @@ class SAServeEngine:
         job.preempted_ticks.append(self.tick_count)
         self.scheduler.requeue(SwappedJob(job=job, blocks=blocks))
         self.preemptions += 1
+        tel = self.telemetry
+        if tel.enabled:
+            tel.decision(self.tick_count, "preempt",
+                         req_id=job.req.req_id, shard=shard.index,
+                         level=job.level)
+            if tel.trace is not None:
+                tel.trace.request_instant(
+                    job.req.req_id, "preempt", shard=shard.index,
+                    level=job.level, tick=self.tick_count)
 
     def _migrate_job(self, src: EngineShard, rid: int,
                      dst: EngineShard) -> None:
@@ -409,6 +465,15 @@ class SAServeEngine:
         job.home_shard = dst.index
         job.migrated_ticks.append(self.tick_count)
         self.migrations += 1
+        tel = self.telemetry
+        if tel.enabled:
+            tel.decision(self.tick_count, "migrate",
+                         req_id=job.req.req_id, src=src.index,
+                         dst=dst.index, level=job.level)
+            if tel.trace is not None:
+                tel.trace.request_instant(
+                    job.req.req_id, "migrate", src=src.index,
+                    dst=dst.index, tick=self.tick_count)
 
     def migrate(self, req_id: int, to_shard: int) -> bool:
         """Move the in-flight request ``req_id`` to shard ``to_shard``.
@@ -451,6 +516,16 @@ class SAServeEngine:
         job.shrink_events.append((job.level, from_chains,
                                   job.granted_chains))
         self.shrinks += 1
+        tel = self.telemetry
+        if tel.enabled:
+            tel.decision(self.tick_count, "shrink",
+                         req_id=job.req.req_id, shard=job.home_shard,
+                         level=job.level, from_chains=from_chains,
+                         to_chains=job.granted_chains)
+            if tel.trace is not None:
+                tel.trace.request_instant(
+                    job.req.req_id, "shrink", from_chains=from_chains,
+                    to_chains=job.granted_chains, tick=self.tick_count)
 
     def _shrink_job(self, shard: EngineShard, rid: int,
                     keep_slots: int) -> None:
@@ -489,28 +564,36 @@ class SAServeEngine:
 
     def _evacuate_draining(self, budget: int) -> int:
         """Execute this tick's drain plan; returns actions performed."""
-        draining = [self._view(s) for s in self.shards if s.draining]
-        survivors = [self._view(s) for s in self.live_shards]
-        actions = self.scheduler.plan_evacuation(
-            draining, survivors, self.cfg.chains_per_slot,
-            self.tick_count, budget)
-        for kind, rid, src, dst, width in actions:
-            if kind == "migrate":
-                self._migrate_job(self._shard(src), rid, self._shard(dst))
-            elif kind == "shrink":
-                self._shrink_migrate(self._shard(src), rid,
-                                     self._shard(dst), width)
-            else:
-                self._swap_out(self._shard(src), rid)
+        with self._pt("schedule"):
+            draining = [self._view(s) for s in self.shards if s.draining]
+            survivors = [self._view(s) for s in self.live_shards]
+            actions = self.scheduler.plan_evacuation(
+                draining, survivors, self.cfg.chains_per_slot,
+                self.tick_count, budget)
+        with self._pt("admit"):
+            for kind, rid, src, dst, width in actions:
+                if kind == "migrate":
+                    self._migrate_job(self._shard(src), rid,
+                                      self._shard(dst))
+                elif kind == "shrink":
+                    self._shrink_migrate(self._shard(src), rid,
+                                         self._shard(dst), width)
+                else:
+                    self._swap_out(self._shard(src), rid)
         return len(actions)
 
     def _retire_drained(self) -> None:
         """Remove empty draining shards from the fleet (their index is
-        never reused; ``retired_shards`` records index and tick)."""
+        never reused; ``retired_shards`` records index and tick).  A
+        retired shard's telemetry series survive it: per-shard metrics
+        are labelled by the stable index in the registry, which is never
+        pruned."""
         for shard in [s for s in self.shards
                       if s.draining and not s.rids.jobs]:
             self.shards.remove(shard)
             self.retired_shards.append((shard.index, self.tick_count))
+            self.telemetry.decision(self.tick_count, "shard_retired",
+                                    shard=shard.index)
 
     def drain(self, shard_index: int) -> None:
         """Begin draining shard ``shard_index`` for retirement.
@@ -532,6 +615,8 @@ class SAServeEngine:
             raise ValueError(
                 "cannot drain the last live shard; resize up first")
         shard.draining = True
+        self.telemetry.decision(self.tick_count, "drain", shard=shard_index,
+                                resident_jobs=len(shard.rids.jobs))
         if not shard.rids.jobs:
             self._retire_drained()
 
@@ -547,6 +632,8 @@ class SAServeEngine:
             self.shards.append(make_shard(
                 idx, self.cfg.n_slots, self.cfg.chains_per_slot))
             new.append(idx)
+            self.telemetry.decision(self.tick_count, "shard_added",
+                                    shard=idx)
         return new
 
     def resize(self, n_devices: int) -> None:
@@ -623,6 +710,13 @@ class SAServeEngine:
             finish_wall=self._now(), requested_chains=req.n_chains,
             granted_chains=0, home_shard=-1))
         self.rejections += 1
+        tel = self.telemetry
+        if tel.enabled:
+            tel.decision(self.tick_count, "reject", req_id=req.req_id,
+                         waited=self.tick_count - entry.submit_tick)
+            if tel.trace is not None:
+                tel.trace.request_end(req.req_id, reason="rejected",
+                                      tick=self.tick_count)
 
     # ---------------------------------------------------------------- tick
     def tick(self) -> None:
@@ -635,7 +729,17 @@ class SAServeEngine:
         retire finished requests.  Collecting inline per group would
         serialize the shards: ``np.asarray`` blocks on the transfer, and
         device k+1 would not launch until device k had fully finished.
+
+        With telemetry enabled, each phase of the tick runs under a
+        monotonic span (``schedule / admit / dispatch / device_wait /
+        materialize / retire``), and an explicit ``block_until_ready``
+        fence per shard separates host-side launch cost (``dispatch``)
+        from device compute (``device_wait``).  The fence changes *when*
+        the host observes completion, never what was computed: the
+        launch-all-then-collect order is preserved, so telemetry is
+        bit-exact (tests assert it).
         """
+        pt = self._pt
         self._run_due_ops()       # scripted drain/resize land tick-aligned
         for shard in self.shards:
             shard.resident_ticks += 1
@@ -643,6 +747,7 @@ class SAServeEngine:
         self._admit()
         if self.n_active == 0:
             self._retire_drained()
+            self._end_tick_telemetry()
             self.tick_count += 1
             return
 
@@ -655,26 +760,65 @@ class SAServeEngine:
             groups: Dict[Tuple[int, int], List[ActiveJob]] = defaultdict(list)
             for job in shard.rids.jobs.values():
                 groups[(job.req.dim, job.req.N)].append(job)
-            for (dim, n_steps), jobs in sorted(groups.items()):
-                launches.append(self._launch_group(shard, dim, n_steps, jobs))
-                self.group_launches += 1
+            with pt("dispatch", shard.index):
+                for (dim, n_steps), jobs in sorted(groups.items()):
+                    launches.append(
+                        self._launch_group(shard, dim, n_steps, jobs))
+                    self.group_launches += 1
+        if self.telemetry.enabled:
+            self.telemetry.m_launches.inc(len(launches))
+            # Fence: wait for each shard's device arrays so device compute
+            # lands in its own span instead of smearing into the first
+            # np.asarray of the collect pass.  All programs are already
+            # in flight, so waiting shard-by-shard keeps the overlap.
+            for launch in launches:
+                with pt("device_wait", launch[0].index):
+                    jax.block_until_ready(launch[4])
+        finished = []
         for launch in launches:
-            self._collect_group(*launch)
+            with pt("materialize", launch[0].index):
+                finished.extend(self._collect_group(*launch))
+        with pt("retire"):
+            for shard, job, reason in finished:
+                self._retire(shard, job, reason)
         # A draining shard whose last job just retired (or evacuated) is
         # removed now, so a run that ends this tick leaves no zombie
         # shards behind.
         self._retire_drained()
+        self._end_tick_telemetry()
         self.tick_count += 1
 
+    def _end_tick_telemetry(self) -> None:
+        """Drain this tick's spans into the registry / trace (no-op when
+        telemetry is off — the null timer drains empty)."""
+        tel = self.telemetry
+        if not tel.enabled:
+            return
+        acc, shard_acc, raw = self._pt.drain()
+        for (shard_idx, phase), secs in shard_acc.items():
+            shard = next((s for s in self.shards if s.index == shard_idx),
+                         None)
+            if shard is not None:
+                shard.phase_seconds[phase] = \
+                    shard.phase_seconds.get(phase, 0.0) + secs
+        tel.end_tick(self.tick_count, acc, shard_acc, raw, self.shards,
+                     len(self.scheduler), self.n_active)
+
     def _collect_group(self, shard: EngineShard, n_steps: int,
-                       jobs: List[ActiveJob], slot_list, outs) -> None:
-        """Materialize one group's results and advance its jobs one level."""
+                       jobs: List[ActiveJob], slot_list, outs):
+        """Materialize one group's results and advance its jobs one level;
+        returns the finished ``(shard, job, reason)`` triples for the
+        caller's retire pass (slot frees can wait: admission happens at
+        the top of the next tick, so deferring the release is
+        equivalent)."""
         cps = self.cfg.chains_per_slot
+        tel = self.telemetry
         x2, xb, fb = (np.asarray(outs[0]), np.asarray(outs[2]),
                       np.asarray(outs[3]))
         for b, (s, job) in enumerate(slot_list):
             # Copy: a bare slice would alias (and pin) the whole padded buffer.
             shard.pool.set_block(s, x2[b * cps:(b + 1) * cps].copy())
+        finished = []
         for job in jobs:
             f = float(fb[job.rid])
             if f < job.best_f:
@@ -690,9 +834,12 @@ class SAServeEngine:
             job.evals += n_steps * job.granted_chains
             job.T *= job.req.rho
             job.history.append(job.best_f)       # champion trajectory/level
+            if tel.enabled:
+                tel.tenant_slot_ticks(job.req.req_id, len(job.slots))
             reason = self._finish_reason(job)
             if reason is not None:
-                self._retire(shard, job, reason)
+                finished.append((shard, job, reason))
+        return finished
 
     def _launch_group(self, shard: EngineShard, dim: int, n_steps: int,
                       jobs: List[ActiveJob]):
@@ -788,6 +935,15 @@ class SAServeEngine:
             shrink_events=list(job.shrink_events)))
         shard.pool.release(job.rid)
         shard.rids.free(job.rid)
+        tel = self.telemetry
+        if tel.enabled:
+            tel.decision(self.tick_count, "retire", req_id=job.req.req_id,
+                         shard=shard.index, reason=reason, level=job.level,
+                         best_f=job.best_f)
+            if tel.trace is not None:
+                tel.trace.request_end(job.req.req_id, reason=reason,
+                                      tick=self.tick_count,
+                                      levels=job.level, best_f=job.best_f)
 
     # ----------------------------------------------------------------- run
     def run(self, max_ticks: Optional[int] = None) -> List[RequestResult]:
@@ -880,7 +1036,21 @@ class SAServeEngine:
             "requests_per_s": per_s(len(self.results)),
             "sweeps_per_s": per_s(self.sweeps_done),
             "chain_steps_per_s": per_s(evals),
+            # Cumulative per-phase wall seconds (empty unless telemetry
+            # was enabled): aggregate and per shard.
+            "phases": self._phase_stats(),
         }
+
+    def _phase_stats(self) -> dict:
+        if not self.telemetry.enabled:
+            return {}
+        hist = self.telemetry.m_tick_phase
+        agg = {phase: hist.summary(phase)
+               for (phase,) in sorted(hist.series)}
+        per_shard = {
+            str(s.index): dict(sorted(s.phase_seconds.items()))
+            for s in self.shards if s.phase_seconds}
+        return {"aggregate": agg, "per_shard": per_shard}
 
 
 def run_standalone(req: SARequest, cfg: EngineConfig,

@@ -102,10 +102,26 @@ Invariants
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.service.request import OVERLOAD_POLICIES, SARequest
 from repro.service.slots import ActiveJob, SwappedJob
+from repro.service.telemetry import NULL as NULL_TELEMETRY
+
+
+def _planned(kind: str):
+    """Report a planner's action count to the scheduler's telemetry
+    (``sa_scheduler_plans_total{plan=kind}``).  A no-op call when
+    telemetry is off (the default ``NULL`` bundle)."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(self, *args, **kwargs):
+            out = fn(self, *args, **kwargs)
+            self.telemetry.plan(kind, len(out))
+            return out
+        return wrapper
+    return deco
 
 
 @dataclasses.dataclass(frozen=True)
@@ -232,6 +248,9 @@ class AdmissionScheduler:
         # instance would make every scheduler alias one object.
         self.cfg = SchedulerConfig() if cfg is None else cfg
         self._queue: List[QueueEntry] = []
+        # The engine re-binds this to its own bundle; standalone
+        # schedulers observe nothing.
+        self.telemetry = NULL_TELEMETRY
 
     def __len__(self) -> int:
         return len(self._queue)
@@ -310,6 +329,7 @@ class AdmissionScheduler:
         return sorted(shards, key=lambda s: self._shard_key(
             s.free_slots, head_shape in s.shapes, s.index))
 
+    @_planned("migrate")
     def plan_migrations(self, shards: Sequence[ShardView],
                         chains_per_slot: int, tick: int,
                         budget: int) -> List[Migration]:
@@ -363,6 +383,7 @@ class AdmissionScheduler:
         return []
 
     # ---------------------------------------------------------- elastic fleet
+    @_planned("evacuate")
     def plan_evacuation(self, draining: Sequence[ShardView],
                         survivors: Sequence[ShardView],
                         chains_per_slot: int, tick: int,
@@ -415,6 +436,7 @@ class AdmissionScheduler:
             actions.append(("swap", job.rid, src, -1, 0))
         return actions
 
+    @_planned("rebalance")
     def plan_rebalance(self, shards: Sequence[ShardView], tick: int,
                        budget: int) -> List[Migration]:
         """Watermark rebalancing: background load-driven moves each tick.
@@ -470,6 +492,7 @@ class AdmissionScheduler:
             used[di] += len(job.slots)
         return moves
 
+    @_planned("shrink")
     def plan_shrinks(self, shards: Sequence[ShardView],
                      chains_per_slot: int, tick: int,
                      budget: int) -> List[Shrink]:
@@ -658,6 +681,7 @@ class AdmissionScheduler:
         taken = {id(e) for e, _, _ in plan.admitted}
         taken.update(id(e) for e in plan.rejected)
         self._queue = [e for e in self._queue if id(e) not in taken]
+        self.telemetry.plan("admit", len(plan.admitted))
         return plan
 
     @staticmethod

@@ -103,6 +103,18 @@ flag groups:
                   under fixed seeds) and per-request lifecycle records
                   (plus wall-clock latencies for operators).
 
+  observability   --trace out.json (Chrome/Perfetto trace_event timeline:
+                  per-phase tick spans per shard + request lifecycle
+                  tracks), --events out.jsonl (deterministic scheduler-
+                  decision log, byte-identical under fixed seeds),
+                  --metrics out.prom (Prometheus text exposition).  Any
+                  of the three enables the telemetry bundle: per-phase
+                  tick timing with block_until_ready fencing, streaming
+                  p50/p90/p99, and a metrics snapshot in --json.  Off by
+                  default — zero overhead, and provably bit-exact when
+                  on (--check passes either way).  See
+                  docs/observability.md.
+
 The tick clock is the engine's native time axis: one tick = one
 temperature level for every active slot.  See docs/serving.md.
 """
@@ -216,7 +228,18 @@ def main(argv=None):
     ap.add_argument("--max-ticks", type=int, default=None,
                     help="hard tick budget (default: run to drain)")
     ap.add_argument("--json", dest="as_json", action="store_true",
-                    help="emit one JSON document instead of the text report")
+                    help="emit one JSON document instead of the text report "
+                         "(includes a metrics snapshot when telemetry is on)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome/Perfetto trace_event JSON of the "
+                         "run (per-phase tick spans + request lifecycles); "
+                         "enables telemetry")
+    ap.add_argument("--events", default=None, metavar="OUT.jsonl",
+                    help="write the deterministic scheduler-decision log "
+                         "(one JSON record per line); enables telemetry")
+    ap.add_argument("--metrics", default=None, metavar="OUT.prom",
+                    help="write a Prometheus text exposition of the "
+                         "metrics registry; enables telemetry")
     ap.add_argument("--check", dest="check", action="store_true",
                     default=True,
                     help="compare every champion vs a standalone run")
@@ -252,7 +275,14 @@ def main(argv=None):
                                   low_watermark=args.low_watermark,
                                   proactive_degrade=args.proactive_degrade,
                                   shrink_budget=args.shrink_budget))
-    engine = SAServeEngine(cfg)
+    telemetry = None
+    if args.trace or args.events or args.metrics:
+        from repro.service.telemetry import EventLog, Telemetry
+        from repro.service.trace import TraceBuilder
+        telemetry = Telemetry(
+            trace=TraceBuilder() if args.trace else None,
+            events=EventLog() if args.events else None)
+    engine = SAServeEngine(cfg, telemetry=telemetry)
     # Scripted fleet changes land on the deterministic tick axis.
     for t, n in sorted(resizes):
         engine.schedule_op(t, lambda n=n: engine.resize(n))
@@ -271,6 +301,24 @@ def main(argv=None):
     stats = engine.stats()
     lat = latency_summary(results, ticks=engine.tick_count,
                           n_submitted=engine.n_submitted)
+
+    if args.trace:
+        with open(args.trace, "w", encoding="utf-8") as fh:
+            fh.write(telemetry.trace.dumps())
+        if not args.as_json:
+            print(f"[serve_sa] trace: {len(telemetry.trace.events)} events "
+                  f"-> {args.trace} (open at https://ui.perfetto.dev)")
+    if args.events:
+        with open(args.events, "w", encoding="utf-8") as fh:
+            fh.write(telemetry.events.dumps())
+        if not args.as_json:
+            print(f"[serve_sa] events: {len(telemetry.events.records)} "
+                  f"decision records -> {args.events}")
+    if args.metrics:
+        with open(args.metrics, "w", encoding="utf-8") as fh:
+            fh.write(telemetry.registry.exposition())
+        if not args.as_json:
+            print(f"[serve_sa] metrics -> {args.metrics}")
 
     by_id = {r.req_id: r for r in results}
     # Requests with a terminal result, split by status; rejected requests
@@ -330,6 +378,8 @@ def main(argv=None):
             "results": [r.to_dict()
                         for r in sorted(results, key=lambda r: r.req_id)],
         }
+        if telemetry is not None:
+            doc["metrics"] = telemetry.registry.snapshot()
         if args.check:
             doc["check"] = {"bit_exact": n_exact, "served": len(served),
                             "rejected_req_ids": rejected_ids,

@@ -87,6 +87,11 @@ class EngineShard:
                                 # (utilization denominator — shards may
                                 # join/leave mid-run)
     draining: bool = False      # no new placements; evacuating to retire
+    phase_seconds: dict = dataclasses.field(default_factory=dict)
+                                # cumulative wall seconds per tick phase
+                                # (telemetry.py); empty when telemetry is
+                                # off — populated by the engine's
+                                # per-shard span folding
 
     @property
     def jobs(self):
