@@ -1,0 +1,148 @@
+#!/usr/bin/env python
+"""Gate the wall-clock goodput bench (BENCH_serve_wall.json).
+
+ROADMAP item 1's acceptance lives here: macro-tick fusion must keep the
+host dispatch path off the critical path, and adding shards must not
+*cost* wall-clock throughput.  CI runs this against the artifact it just
+generated, compared to the committed one, so a regression hard-fails the
+job instead of silently landing in an uploaded artifact nobody reads.
+
+Checks on the fresh artifact (machine-consistent, within one run):
+
+1. dispatch share at the highest shard count < --max-dispatch-share
+   (default 0.5; the pre-macro-tick baseline was 0.938).  The share is
+   ``phase_cpu_share.dispatch`` when present — host thread-CPU seconds
+   spent dispatching / instrumented wall, which stays truthful when
+   device compute timeshares cores with the engine loop (CPU backend,
+   small runners) — falling back to the wall-span share for old
+   artifacts;
+2. wall-clock req/s at the highest shard count >= (1 - --invert-slack)
+   x req/s at the next lower shard count (scaling must not invert;
+   the slack absorbs run-to-run noise on shared runners).
+
+Checks against the committed baseline (--baseline) use only
+machine-durable signals — phase *shares* and scaling *ratios*, never
+absolute wall seconds (the artifact's own note explains why):
+
+3. fresh dispatch share at max shards <= baseline share + --share-slack;
+4. fresh scaling ratio (req/s at max shards / req/s at min shards)
+   >= baseline ratio * (1 - --ratio-slack).
+
+Exit 0 when every check passes, 1 otherwise (each failure is printed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _rows(path):
+    with open(path) as fh:
+        doc = json.load(fh)
+    rows = sorted(doc.get("rows", []), key=lambda r: r["devices"])
+    if len(rows) < 2:
+        sys.exit(f"{path}: need rows for >= 2 shard counts, got {len(rows)}")
+    return rows
+
+
+def _dispatch_share(row):
+    cpu = row.get("phase_cpu_share")
+    if cpu is not None:
+        return float(cpu.get("dispatch", 0.0))
+    return float(row["phase_share"]["dispatch"])
+
+
+def _scaling_ratio(rows):
+    lo, hi = rows[0], rows[-1]
+    if lo["requests_per_s"] <= 0:
+        sys.exit("min-shard req/s is zero; bench horizon too short to gate on")
+    return hi["requests_per_s"] / lo["requests_per_s"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifact", help="fresh BENCH_serve_wall.json to gate")
+    ap.add_argument(
+        "--baseline",
+        default=None,
+        help="committed BENCH_serve_wall.json to compare durable signals against",
+    )
+    ap.add_argument("--max-dispatch-share", type=float, default=0.5)
+    ap.add_argument(
+        "--invert-slack",
+        type=float,
+        default=0.10,
+        help="allowed relative req/s shortfall of the top shard count vs "
+        "the next lower one (noise tolerance for the inversion check)",
+    )
+    ap.add_argument(
+        "--share-slack",
+        type=float,
+        default=0.10,
+        help="allowed dispatch-share increase vs baseline (absolute)",
+    )
+    ap.add_argument(
+        "--ratio-slack",
+        type=float,
+        default=0.25,
+        help="allowed relative drop in the max/min req/s scaling ratio",
+    )
+    args = ap.parse_args(argv)
+
+    rows = _rows(args.artifact)
+    top, prev = rows[-1], rows[-2]
+    share = _dispatch_share(top)
+    ratio = _scaling_ratio(rows)
+    failures = []
+
+    print(
+        f"[wall-gate] {args.artifact}: devices={[r['devices'] for r in rows]} "
+        f"req/s={[round(r['requests_per_s'], 3) for r in rows]} "
+        f"dispatch_share@{top['devices']}={share:.3f} scaling_ratio={ratio:.3f}"
+    )
+
+    if share >= args.max_dispatch_share:
+        failures.append(
+            f"dispatch share at {top['devices']} shards is {share:.3f} "
+            f">= {args.max_dispatch_share} — host launch path is back on "
+            f"the critical path"
+        )
+    if top["requests_per_s"] < prev["requests_per_s"] * (1 - args.invert_slack):
+        failures.append(
+            f"wall-clock req/s inverted: {top['devices']} shards "
+            f"({top['requests_per_s']:.3f}) < {prev['devices']} shards "
+            f"({prev['requests_per_s']:.3f}) * (1 - {args.invert_slack})"
+        )
+
+    if args.baseline:
+        base = _rows(args.baseline)
+        base_share = _dispatch_share(base[-1])
+        base_ratio = _scaling_ratio(base)
+        print(
+            f"[wall-gate] baseline {args.baseline}: "
+            f"dispatch_share@{base[-1]['devices']}={base_share:.3f} "
+            f"scaling_ratio={base_ratio:.3f}"
+        )
+        if share > base_share + args.share_slack:
+            failures.append(
+                f"dispatch share regressed vs committed artifact: "
+                f"{share:.3f} > {base_share:.3f} + {args.share_slack}"
+            )
+        if ratio < base_ratio * (1 - args.ratio_slack):
+            failures.append(
+                f"req/s scaling ratio regressed vs committed artifact: "
+                f"{ratio:.3f} < {base_ratio:.3f} * (1 - {args.ratio_slack})"
+            )
+
+    for msg in failures:
+        print(f"[wall-gate] FAIL: {msg}")
+    if failures:
+        return 1
+    print("[wall-gate] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

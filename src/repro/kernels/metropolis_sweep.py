@@ -78,9 +78,20 @@ def _step_draws(seed, cidx, step0, i):
     return rng.draws3(seed, cidx, (step0 + i).astype(jnp.uint32))
 
 
-def _sweep_kernel(kid_ref, seed_ref, step0_ref, t_ref, base_ref, x_ref,
-                  xo_ref, fo_ref, *, kid_static, n_steps: int, blk: int,
-                  variant: str):
+def _sweep_kernel(*refs, kid_static, n_steps: int, blk: int,
+                  variant: str, with_live: bool = False):
+    if with_live:
+        # Macro-tick serving path: ``live`` is the per-slot level cursor —
+        # blocks whose request has exhausted its planned ladder levels for
+        # this macro-tick pass their state through bit-exactly (acc forced
+        # to False; the counter-based RNG is stateless so no draws are
+        # consumed on their behalf).
+        (kid_ref, seed_ref, step0_ref, t_ref, base_ref, live_ref, x_ref,
+         xo_ref, fo_ref) = refs
+    else:
+        (kid_ref, seed_ref, step0_ref, t_ref, base_ref, x_ref,
+         xo_ref, fo_ref) = refs
+        live_ref = None
     dim = x_ref.shape[-1]
 
     pid = pl.program_id(0)
@@ -101,6 +112,7 @@ def _sweep_kernel(kid_ref, seed_ref, step0_ref, t_ref, base_ref, x_ref,
     step0 = step0_ref[pid]
     T = t_ref[pid]
     base = base_ref[pid]
+    live = None if live_ref is None else live_ref[pid] != 0
     cidx = base + lax.broadcasted_iota(jnp.int32, (blk, 1), 0).astype(jnp.uint32)
     coords = lax.broadcasted_iota(jnp.int32, (blk, dim), 1)
 
@@ -128,6 +140,8 @@ def _sweep_kernel(kid_ref, seed_ref, step0_ref, t_ref, base_ref, x_ref,
             sgnP1 = sgnP * sg.astype(sgnP.dtype)
             f1 = combine(kid, S1, logP1, sgnP1, dim)
             acc = uacc <= _accept_prob(fx, f1, T)  # (blk, 1)
+            if live is not None:
+                acc = acc & live
             x = jnp.where(onehot & acc, newval, x)
             fx = jnp.where(acc, f1, fx)
             S = jnp.where(acc, S1, S)
@@ -148,6 +162,8 @@ def _sweep_kernel(kid_ref, seed_ref, step0_ref, t_ref, base_ref, x_ref,
             x1 = jnp.where(onehot, newval, x)
             f1 = full_eval(kid, x1, dim)
             acc = uacc <= _accept_prob(fx, f1, T)
+            if live is not None:
+                acc = acc & live
             x = jnp.where(acc, x1, x)
             fx = jnp.where(acc, f1, fx)
             return x, fx
@@ -189,7 +205,8 @@ def _validate_kid(kid) -> None:
 
 def metropolis_sweep_pallas(x, T, seed, step0, *, kid, n_steps: int,
                             blk: int = 256, variant: str = "delta",
-                            interpret: bool = False, chain_base=None):
+                            interpret: bool = False, chain_base=None,
+                            live=None):
     """Run an N-step Metropolis sweep for all chains.
 
     Args:
@@ -210,6 +227,12 @@ def metropolis_sweep_pallas(x, T, seed, step0, *, kid, n_steps: int,
          layout). The RNG stream of chain c in block b is indexed by
          ``chain_base[b] + c``, which is what makes a request's streams
          identical no matter which slots the scheduler packed it into.
+      live: optional per-block level cursor (bool/int32, (chains//blk,)).
+         A dead block (``live == 0``) passes its state through bit-exactly
+         — every accept is masked off, so ``x`` is unchanged and no random
+         stream advances (counter-based RNG draws are stateless).  The
+         macro-tick engine uses this so co-batched requests with different
+         remaining ladder depths fuse into one K-level dispatch.
 
     Returns (x_out, f_out): (chains, dim) and (chains,).
     """
@@ -217,7 +240,7 @@ def metropolis_sweep_pallas(x, T, seed, step0, *, kid, n_steps: int,
     _validate_kid(kid)
     pad = (-chains) % blk
     if pad:
-        if chain_base is not None or any(
+        if chain_base is not None or live is not None or any(
                 jnp.ndim(v) and jnp.size(v) > 1 for v in (T, seed, step0, kid)):
             raise ValueError(
                 f"chains={chains} must be a multiple of blk={blk} when "
@@ -235,9 +258,10 @@ def metropolis_sweep_pallas(x, T, seed, step0, *, kid, n_steps: int,
     # Concrete scalar kid -> compile the single objective branch; array or
     # traced kid -> runtime SMEM dispatch (one lowering for all objectives).
     kid_static = int(kid) if isinstance(kid, (int, np.integer)) else None
+    with_live = live is not None
     kernel = functools.partial(
         _sweep_kernel, kid_static=kid_static, n_steps=n_steps, blk=blk,
-        variant=variant)
+        variant=variant, with_live=with_live)
 
     kid_arr = _per_block(kid, n_blocks, jnp.int32, "kid")
     seed_arr = _per_block(seed, n_blocks, jnp.uint32, "seed")
@@ -249,17 +273,21 @@ def metropolis_sweep_pallas(x, T, seed, step0, *, kid, n_steps: int,
     else:
         base_arr = _per_block(chain_base, n_blocks, jnp.uint32, "chain_base")
 
+    inputs = [kid_arr, seed_arr, step0_arr, t_arr, base_arr]
+    n_smem = 5
+    if with_live:
+        inputs.append(_per_block(live, n_blocks, jnp.int32, "live"))
+        n_smem = 6
+    inputs.append(x)
+
+    name = (f"metropolis_sweep_{variant}" if kid_static is None
+            else f"metropolis_sweep_{variant}_k{kid_static}")
     x_out, f_out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((blk, dim), lambda i: (i, 0)),
-        ],
+        in_specs=(
+            [pl.BlockSpec(memory_space=pltpu.SMEM)] * n_smem
+            + [pl.BlockSpec((blk, dim), lambda i: (i, 0))]),
         out_specs=[
             pl.BlockSpec((blk, dim), lambda i: (i, 0)),
             pl.BlockSpec((blk, 1), lambda i: (i, 0)),
@@ -269,7 +297,6 @@ def metropolis_sweep_pallas(x, T, seed, step0, *, kid, n_steps: int,
             jax.ShapeDtypeStruct((n_chains_p, 1), x.dtype),
         ],
         interpret=interpret,
-        name=(f"metropolis_sweep_{variant}" if kid_static is None
-              else f"metropolis_sweep_{variant}_k{kid_static}"),
-    )(kid_arr, seed_arr, step0_arr, t_arr, base_arr, x)
+        name=name + ("_lv" if with_live else ""),
+    )(*inputs)
     return x_out[:chains], f_out[:chains, 0]

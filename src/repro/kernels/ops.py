@@ -77,7 +77,7 @@ _metropolis_sweep_static = partial(jax.jit, static_argnames=(
 def metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, chain_base, *,
                            n_steps: int, blk: int,
                            variant: str = "delta", use_pallas: bool = False,
-                           interpret: bool = False):
+                           interpret: bool = False, live=None):
     """Heterogeneous-slot Metropolis sweep: one serving slot per chain-block.
 
     ``x`` is ``(n_blocks * blk, dim)`` — the packed states of every active
@@ -90,12 +90,18 @@ def metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, chain_base, *,
     columns for the jnp oracle.  Both produce identical streams, so slot
     placement never changes a request's trajectory.
 
+    ``live`` (optional, per-block bool/int32) is the macro-tick level
+    cursor: a dead block passes its state through bit-exactly — used by
+    the fused K-level engine path when co-batched requests have different
+    remaining ladder depths.
+
     Returns (x_out (n_blocks*blk, dim), f_out (n_blocks*blk,)).
     """
     from repro.kernels.metropolis_sweep import _validate_kid
     _validate_kid(kids)
     return _metropolis_sweep_slots(
-        x, kids, T_blocks, seeds, step0s, chain_base, n_steps=n_steps,
+        x, kids, T_blocks, seeds, step0s, chain_base, live=live,
+        n_steps=n_steps,
         blk=blk, variant=variant, use_pallas=use_pallas, interpret=interpret)
 
 
@@ -105,7 +111,7 @@ def _metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, chain_base, *,
                             n_steps: int, blk: int,
                             variant: str = "delta",
                             use_pallas: bool = False,
-                            interpret: bool = False):
+                            interpret: bool = False, live=None):
     chains = x.shape[0]
     if chains % blk:
         raise ValueError(
@@ -114,7 +120,7 @@ def _metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, chain_base, *,
         from repro.kernels.metropolis_sweep import metropolis_sweep_pallas as mk
         return mk(x, T_blocks, seeds, step0s, kid=kids, n_steps=n_steps,
                   blk=blk, variant=variant, interpret=interpret,
-                  chain_base=chain_base)
+                  chain_base=chain_base, live=live)
     n_blocks = chains // blk
 
     def expand(a):
@@ -125,9 +131,11 @@ def _metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, chain_base, *,
 
     lane = jnp.tile(jnp.arange(blk, dtype=jnp.uint32), n_blocks)
     cidx = expand(chain_base).astype(jnp.uint32) + lane
+    live_c = None if live is None else expand(live)
     return ref_mod.metropolis_sweep_ref(
         x, expand(T_blocks), expand(seeds), expand(step0s),
-        kid=expand(kids), n_steps=n_steps, variant=variant, cidx=cidx)
+        kid=expand(kids), n_steps=n_steps, variant=variant, cidx=cidx,
+        live=live_c)
 
 
 def kid_for(objective) -> Optional[int]:

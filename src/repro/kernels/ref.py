@@ -43,7 +43,7 @@ def _col(v, chains: int, dtype):
 
 
 def metropolis_sweep_ref(x, T, seed, step0, *, kid, n_steps: int,
-                         variant: str = "delta", cidx=None):
+                         variant: str = "delta", cidx=None, live=None):
     from repro.kernels.metropolis_sweep import _validate_kid
     _validate_kid(kid)
     # Concrete scalar kid -> single-branch specialization (1x objective
@@ -52,33 +52,33 @@ def metropolis_sweep_ref(x, T, seed, step0, *, kid, n_steps: int,
     if isinstance(kid, (int, np.integer)):
         return _metropolis_sweep_ref_static(
             x, T, seed, step0, kid=int(kid), n_steps=n_steps,
-            variant=variant, cidx=cidx)
+            variant=variant, cidx=cidx, live=live)
     return _metropolis_sweep_ref(x, T, seed, step0, kid=kid, n_steps=n_steps,
-                                 variant=variant, cidx=cidx)
+                                 variant=variant, cidx=cidx, live=live)
 
 
 @partial(jax.jit, static_argnames=("kid", "n_steps", "variant"))
 def _metropolis_sweep_ref_static(x, T, seed, step0, *, kid: int,
                                  n_steps: int, variant: str = "delta",
-                                 cidx=None):
+                                 cidx=None, live=None):
     lo, hi = om.BOX[kid]
     return _sweep_ref_body(x, T, seed, step0, kid, np.float32(lo),
                            np.float32(hi), om.init_acc, om.combine, om.term,
-                           om.full_eval, n_steps, variant, cidx)
+                           om.full_eval, n_steps, variant, cidx, live)
 
 
 @partial(jax.jit, static_argnames=("n_steps", "variant"))
 def _metropolis_sweep_ref(x, T, seed, step0, *, kid, n_steps: int,
-                          variant: str = "delta", cidx=None):
+                          variant: str = "delta", cidx=None, live=None):
     kid = _col(kid, x.shape[0], jnp.int32)
     lo, hi = om.box_rt(kid, dtype=x.dtype)  # (chains, 1) box bounds
     return _sweep_ref_body(x, T, seed, step0, kid, lo, hi, om.init_acc_rt,
                            om.combine_rt, om.term_rt, om.full_eval_rt,
-                           n_steps, variant, cidx)
+                           n_steps, variant, cidx, live)
 
 
 def _sweep_ref_body(x, T, seed, step0, kid, lo, hi, init_acc, combine, term,
-                    full_eval, n_steps, variant, cidx):
+                    full_eval, n_steps, variant, cidx, live=None):
     chains, dim = x.shape
     if cidx is None:
         cidx = jnp.arange(chains, dtype=jnp.uint32)[:, None]  # (chains, 1)
@@ -88,6 +88,10 @@ def _sweep_ref_body(x, T, seed, step0, kid, lo, hi, init_acc, combine, term,
     seed = _col(seed, chains, jnp.uint32)
     step0 = _col(step0, chains, jnp.uint32)
     T = _col(T, chains, x.dtype)
+    # Per-chain level cursor (macro-tick serving): a dead chain's accepts
+    # are all masked off so its state passes through bit-exactly — the
+    # oracle-side mirror of the kernel's per-block ``live`` SMEM input.
+    live = None if live is None else _col(live, chains, jnp.bool_)
 
     if variant == "delta":
         S, logP, sgnP = init_acc(kid, x)
@@ -111,6 +115,8 @@ def _sweep_ref_body(x, T, seed, step0, kid, lo, hi, init_acc, combine, term,
             sgnP1 = sgnP * sg.astype(sgnP.dtype)
             f1 = combine(kid, S1, logP1, sgnP1, dim)
             acc = uacc <= jnp.exp(jnp.clip(-(f1 - fx) / T, -80.0, 80.0))
+            if live is not None:
+                acc = acc & live
             x = jnp.where(onehot & acc, newval, x)
             fx = jnp.where(acc, f1, fx)
             S = jnp.where(acc, S1, S)
@@ -131,6 +137,8 @@ def _sweep_ref_body(x, T, seed, step0, kid, lo, hi, init_acc, combine, term,
             x1 = jnp.where(onehot, newval, x)
             f1 = full_eval(kid, x1, dim)
             acc = uacc <= jnp.exp(jnp.clip(-(f1 - fx) / T, -80.0, 80.0))
+            if live is not None:
+                acc = acc & live
             x = jnp.where(acc, x1, x)
             fx = jnp.where(acc, f1, fx)
             return x, fx

@@ -7,8 +7,9 @@ for the system — which is how serving systems are actually benchmarked
 (and how Russkov et al.'s replica-redistribution setting measures admission
 latency under live load).
 
-Time is measured in **engine ticks**: one tick = one temperature level for
-every active slot, the engine's natural clock.  Arrival timestamps may be
+Time is measured in **engine ticks** — temperature levels, the engine's
+natural clock (one macro-tick advances it by the levels it consumed, so
+the unit is K-invariant).  Arrival timestamps may be
 fractional; a request with arrival time ``t`` becomes visible to the
 scheduler at the first tick ``>= t``.  Everything here is host-side numpy
 and deterministic under a fixed seed, so latency distributions are

@@ -15,8 +15,15 @@ The annealing analogue of a vLLM/LightLLM decode loop (launch/serve.py):
 
 Invariants
 ----------
-* **One tick = one temperature level** for every active slot; a request's
-  temperature ladder position is exactly its count of ticks in residence.
+* **One tick = ``macro_k`` temperature levels** for every active slot
+  (one when K=1, the classic tick).  ``tick_count`` always advances on
+  the *ladder-level* clock — by K per active macro-tick — so a request's
+  temperature ladder position is exactly its count of level-ticks in
+  residence and every lifecycle timestamp keeps level units at any K.
+  Admission, preemption, migration and fleet ops land only on macro-tick
+  boundaries (the top of ``tick()``); within a macro-tick the K levels —
+  including the per-level champion exchange — run fused in one device
+  program with donated ping-pong state buffers (``_group_tick_fused``).
 * **kid is runtime**: per-slot *objective id, temperature, RNG seed, step
   cursor and chain base* are runtime arrays threaded down to the kernel
   (one SMEM entry per block, indexed by ``program_id``) — none of them can
@@ -78,12 +85,15 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+import warnings
 from collections import defaultdict
 from functools import partial
 from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.core import exchange as exch
 from repro.kernels import objective_math as om
@@ -94,6 +104,14 @@ from repro.service.scheduler import (AdmissionScheduler, QueueEntry,
 from repro.service.sharding import EngineShard, make_shard, make_shards
 from repro.service.slots import ActiveJob, SwappedJob
 from repro.service.telemetry import NULL as NULL_TELEMETRY
+
+# The fused macro-tick program donates its input state buffer (the double
+# buffer ping-pongs between launches).  Backends without donation support
+# (CPU) warn instead of reusing the buffer — functionally identical, so
+# silence exactly that warning.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable",
+    category=UserWarning)
 
 #: Known optima of the servable (registry) objectives, for accuracy targets.
 #: Schwefel is the paper's normalized form, so its optimum is dim-free.
@@ -122,6 +140,13 @@ class EngineConfig:
     interpret: bool = False     # Pallas interpret mode (tests on CPU)
     migration_budget: int = 1   # max cross-shard moves per tick (0 = no
                                 # automatic rebalancing)
+    macro_k: int = 1            # ladder levels fused into one device
+                                # dispatch (a "macro-tick").  1 = the
+                                # classic one-level tick; K>1 amortizes
+                                # host packing/launch over K levels, and
+                                # admission/preemption/migration land only
+                                # on macro-tick boundaries.  Trajectories
+                                # are bit-exact at any K (tests).
     scheduler: SchedulerConfig = dataclasses.field(
         default_factory=SchedulerConfig)
 
@@ -130,6 +155,8 @@ class EngineConfig:
             raise ValueError(f"n_devices must be >= 1, got {self.n_devices}")
         if self.migration_budget < 0:
             raise ValueError("migration_budget must be >= 0")
+        if self.macro_k < 1:
+            raise ValueError(f"macro_k must be >= 1, got {self.macro_k}")
 
 
 @partial(jax.jit, static_argnames=("n_steps", "blk", "variant",
@@ -151,6 +178,57 @@ def _group_tick(x, kid_blk, T_blk, seed_blk, step0_blk, base_blk, seg, adopt,
         blk=blk, variant=variant, use_pallas=use_pallas, interpret=interpret)
     return exch.exchange_sync_segmented(x, fx, seg, num_segments,
                                         adopt_mask=adopt)
+
+
+@partial(jax.jit, static_argnames=("k", "n_steps", "blk", "variant",
+                                   "use_pallas", "interpret",
+                                   "num_segments"),
+         donate_argnums=(0,))
+def _group_tick_fused(x, kid_blk, T_lvls, seed_blk, step0_blk, base_blk,
+                      levels_blk, seg, adopt, *, k: int, n_steps: int,
+                      blk: int, variant: str, use_pallas: bool,
+                      interpret: bool, num_segments: int):
+    """K temperature levels for one dispatch group, in one device program.
+
+    The macro-tick: an on-device ``fori_loop`` over ``k`` iterations of
+    [one-level sweep + segmented champion exchange] — exactly the K=1
+    ``_group_tick`` body K times, so each level's floating-point stream is
+    identical to K separate dispatches.  Per-level controls:
+
+    * ``T_lvls`` is ``(k, n_blocks)`` — each block's host-precomputed
+      temperature ladder slice, one SMEM row per level;
+    * level ``i`` sweeps with RNG step cursor ``step0 + i*n_steps``;
+    * ``levels_blk`` is the per-slot level cursor: blocks whose request
+      has fewer than ``k`` planned levels go *dead* (``live = i <
+      levels_blk``) — the kernel masks their accepts so state passes
+      through bit-exactly, and the adopt mask keeps their chains out of
+      the exchange.
+
+    Per-level champions come back stacked — ``(k, num_segments)`` values
+    and ``(k, num_segments, dim)`` states — for the host to fold level by
+    level (truncating at early finishes).  ``x`` is **donated**: the
+    engine's double buffer ping-pongs between launches, so chain state
+    never round-trips to host while a group's membership is stable.
+    """
+    dim = x.shape[1]
+
+    def body(i, carry):
+        x, fb_all, xb_all = carry
+        live = i < levels_blk                       # (n_blocks,) cursor
+        T_i = lax.dynamic_index_in_dim(T_lvls, i, 0, keepdims=False)
+        step0_i = step0_blk + jnp.uint32(n_steps) * i.astype(jnp.uint32)
+        x, fx = ops.metropolis_sweep_slots(
+            x, kid_blk, T_i, seed_blk, step0_i, base_blk, n_steps=n_steps,
+            blk=blk, variant=variant, use_pallas=use_pallas,
+            interpret=interpret, live=live)
+        live_c = jnp.repeat(live, blk)
+        x, fx, xb, fb = exch.exchange_sync_segmented(
+            x, fx, seg, num_segments, adopt_mask=adopt & live_c)
+        return x, fb_all.at[i].set(fb), xb_all.at[i].set(xb)
+
+    fb0 = jnp.full((k, num_segments), jnp.inf, x.dtype)
+    xb0 = jnp.zeros((k, num_segments, dim), x.dtype)
+    return lax.fori_loop(0, k, body, (x, fb0, xb0))
 
 
 class SAServeEngine:
@@ -720,7 +798,8 @@ class SAServeEngine:
 
     # ---------------------------------------------------------------- tick
     def tick(self) -> None:
-        """Admit, then advance every active slot by one temperature level.
+        """Admit, then advance every active slot by ``macro_k`` temperature
+        levels in one fused dispatch per group (one level when K=1).
 
         Two passes over the shards: *launch* every ``(shard, dim, N)``
         group's device program first (JAX dispatch is asynchronous, so
@@ -730,11 +809,22 @@ class SAServeEngine:
         serialize the shards: ``np.asarray`` blocks on the transfer, and
         device k+1 would not launch until device k had fully finished.
 
+        Macro-ticks (K>1): the top of a tick is a **macro-tick boundary**
+        — scripted ops, admission, preemption, migration and rebalancing
+        all land here, then every group runs K ladder levels on device
+        with per-level champion exchange (``_group_tick_fused``) before
+        the next boundary.  ``tick_count`` stays on the *ladder-level*
+        clock: an active macro-tick advances it by the most levels any
+        job consumed (K mid-flight, less only when every job terminated
+        inside the macro-tick; 1 per idle tick), so arrival timestamps,
+        queue-delay and lifecycle latencies keep level units at any K.
+
         With telemetry enabled, each phase of the tick runs under a
         monotonic span (``schedule / admit / dispatch / device_wait /
         materialize / retire``), and an explicit ``block_until_ready``
         fence per shard separates host-side launch cost (``dispatch``)
-        from device compute (``device_wait``).  The fence changes *when*
+        from device compute (``device_wait``) — at K>1 the fence simply
+        covers the whole fused K-level program.  The fence changes *when*
         the host observes completion, never what was computed: the
         launch-all-then-collect order is preserved, so telemetry is
         bit-exact (tests assert it).
@@ -750,7 +840,7 @@ class SAServeEngine:
             self._end_tick_telemetry()
             self.tick_count += 1
             return
-
+        K = self.cfg.macro_k
         launches = []
         for shard in self.shards:
             # Dispatch groups are keyed by shape alone — (dim, N) —
@@ -763,7 +853,9 @@ class SAServeEngine:
             with pt("dispatch", shard.index):
                 for (dim, n_steps), jobs in sorted(groups.items()):
                     launches.append(
-                        self._launch_group(shard, dim, n_steps, jobs))
+                        self._launch_group(shard, dim, n_steps, jobs)
+                        if K == 1 else
+                        self._launch_group_fused(shard, dim, n_steps, jobs))
                     self.group_launches += 1
         if self.telemetry.enabled:
             self.telemetry.m_launches.inc(len(launches))
@@ -775,26 +867,45 @@ class SAServeEngine:
                 with pt("device_wait", launch[0].index):
                     jax.block_until_ready(launch[4])
         finished = []
+        advance = 1
         for launch in launches:
             with pt("materialize", launch[0].index):
-                finished.extend(self._collect_group(*launch))
+                if K == 1:
+                    finished.extend(self._collect_group(*launch))
+                else:
+                    got, levels = self._collect_group_fused(*launch)
+                    finished.extend(got)
+                    advance = max(advance, levels)
+        if advance > 1:
+            # The macro-tick held the fleet's slots for `advance` ladder
+            # levels (admission waits for the next boundary), so occupancy
+            # bills that many slot-ticks per slot — `advance` is the max
+            # levels any job actually consumed, < K only when every job
+            # terminated inside this macro-tick (the clock must not run
+            # past the last level anyone swept, or goodput/occupancy
+            # denominators would drift off the K=1 axis).
+            for shard in self.shards:
+                shard.resident_ticks += advance - 1
+                self.slot_ticks += shard.pool.n_slots * (advance - 1)
         with pt("retire"):
-            for shard, job, reason in finished:
-                self._retire(shard, job, reason)
+            for shard, job, reason, finish_tick in finished:
+                self._retire(shard, job, reason, finish_tick=finish_tick)
         # A draining shard whose last job just retired (or evacuated) is
         # removed now, so a run that ends this tick leaves no zombie
         # shards behind.
         self._retire_drained()
-        self._end_tick_telemetry()
-        self.tick_count += 1
+        self._end_tick_telemetry(levels=advance)
+        self.tick_count += advance
 
-    def _end_tick_telemetry(self) -> None:
+    def _end_tick_telemetry(self, levels: int = 1) -> None:
         """Drain this tick's spans into the registry / trace (no-op when
-        telemetry is off — the null timer drains empty)."""
+        telemetry is off — the null timer drains empty).  ``levels`` is
+        the ladder-level advance of this tick (K for an active macro-tick)
+        so the tick counter metric stays on the level clock."""
         tel = self.telemetry
         if not tel.enabled:
             return
-        acc, shard_acc, raw = self._pt.drain()
+        acc, shard_acc, raw, cpu = self._pt.drain()
         for (shard_idx, phase), secs in shard_acc.items():
             shard = next((s for s in self.shards if s.index == shard_idx),
                          None)
@@ -802,14 +913,15 @@ class SAServeEngine:
                 shard.phase_seconds[phase] = \
                     shard.phase_seconds.get(phase, 0.0) + secs
         tel.end_tick(self.tick_count, acc, shard_acc, raw, self.shards,
-                     len(self.scheduler), self.n_active)
+                     len(self.scheduler), self.n_active, levels=levels,
+                     cpu=cpu)
 
     def _collect_group(self, shard: EngineShard, n_steps: int,
                        jobs: List[ActiveJob], slot_list, outs):
         """Materialize one group's results and advance its jobs one level;
-        returns the finished ``(shard, job, reason)`` triples for the
-        caller's retire pass (slot frees can wait: admission happens at
-        the top of the next tick, so deferring the release is
+        returns the finished ``(shard, job, reason, finish_tick)`` tuples
+        for the caller's retire pass (slot frees can wait: admission
+        happens at the top of the next tick, so deferring the release is
         equivalent)."""
         cps = self.cfg.chains_per_slot
         tel = self.telemetry
@@ -838,8 +950,183 @@ class SAServeEngine:
                 tel.tenant_slot_ticks(job.req.req_id, len(job.slots))
             reason = self._finish_reason(job)
             if reason is not None:
-                finished.append((shard, job, reason))
+                finished.append((shard, job, reason, self.tick_count))
         return finished
+
+    def _collect_group_fused(self, shard: EngineShard, n_steps: int,
+                             jobs: List[ActiveJob], slot_list, outs,
+                             planned: Dict[int, int]):
+        """Fold one fused macro-tick's results on host.
+
+        Only the per-level champion stacks transfer to host (small); chain
+        state stays device-resident — the pool already holds refs into
+        ``outs[0]`` (set at launch).  Each job's levels are counted
+        exactly as K=1 collects would: fold champion, advance the cursors,
+        append history, check the finish reason — stopping at the first
+        terminal level.  A target stop mid-macro-tick therefore truncates
+        the job identically to the K=1 engine; the extra device levels it
+        already swept are discarded with its slots at retire.  Budget and
+        ladder stops cannot fire early: the launch planned at most that
+        many levels.  ``finish_tick`` is the ladder-level clock value of
+        the finishing level — boundary + counted − 1 — so lifecycle
+        latencies keep level units at any K.
+
+        Returns ``(finished, max_counted)``: the terminal tuples plus the
+        most levels any job in this group consumed — the caller advances
+        the tick clock by the fleet-wide max, keeping ``tick_count`` equal
+        to the K=1 engine's at every boundary.
+        """
+        tel = self.telemetry
+        boundary = self.tick_count
+        fb_all = np.asarray(outs[1])    # (K, num_segments) champion values
+        xb_all = np.asarray(outs[2])    # (K, num_segments, dim) champions
+        finished = []
+        max_counted = 1
+        for job in jobs:
+            if job.first_tick < 0:
+                job.first_tick = boundary
+                job.first_tick_wall = self._now()
+            counted = 0
+            reason = None
+            for i in range(planned[job.rid]):
+                f = float(fb_all[i, job.rid])
+                if f < job.best_f:
+                    job.best_f = f
+                    job.best_x = xb_all[i, job.rid].copy()
+                counted += 1
+                self.sweeps_done += len(job.slots)
+                shard.sweeps_done += len(job.slots)
+                job.level += 1
+                job.steps_done += n_steps
+                job.evals += n_steps * job.granted_chains
+                job.T *= job.req.rho
+                job.history.append(job.best_f)   # champion trajectory/level
+                if tel.enabled:
+                    tel.tenant_slot_ticks(job.req.req_id, len(job.slots))
+                reason = self._finish_reason(job)
+                if reason is not None:
+                    break
+            max_counted = max(max_counted, counted)
+            if reason is not None:
+                finished.append((shard, job, reason, boundary + counted - 1))
+        return finished, max_counted
+
+    def _launch_group_fused(self, shard: EngineShard, dim: int, n_steps: int,
+                            jobs: List[ActiveJob]):
+        """Pack the group's controls, reuse (or rebuild) its device state
+        buffer, and launch one fused K-level program (async).
+
+        Per-job level planning: ``min(K, remaining ladder, remaining eval
+        budget)`` — computed on host so budget/ladder finishes land on
+        exactly the K=1 level, never overshooting.  Temperatures for the
+        K levels are iterated in float64 on host (``t *= rho``, matching
+        the K=1 cursor update) and threaded as a ``(K, n_blocks)`` SMEM
+        array.
+
+        The double buffer: if every slot of the group still references
+        this group's cached output buffer at its packed rows — membership,
+        order and content unchanged since the last boundary — the host
+        repack and transfer of chain state are skipped entirely and the
+        cached buffer is donated straight back to the device.  Any
+        checkpoint/migrate/shrink/retire in between breaks the signature
+        and falls back to a host repack (get_block materializes refs on
+        demand).
+        """
+        cps = self.cfg.chains_per_slot
+        K = self.cfg.macro_k
+        slot_list: List[Tuple[int, ActiveJob]] = [
+            (s, job) for job in jobs for s in job.slots]
+        n_blocks = len(slot_list)
+        n_padded = 1
+        while n_padded < n_blocks:
+            n_padded *= 2
+
+        planned: Dict[int, int] = {}
+        for job in jobs:
+            p = min(K, max(1, job.req.n_levels - job.level))
+            if job.req.max_evals is not None:
+                per_level = max(1, n_steps * job.granted_chains)
+                remaining = job.req.max_evals - job.evals
+                p = min(p, max(1, -(-remaining // per_level)))
+            planned[job.rid] = p
+
+        kid_blk = np.empty((n_padded,), np.int32)
+        T_lvls = np.empty((K, n_padded), np.float32)
+        seed_blk = np.empty((n_padded,), np.uint32)
+        step0_blk = np.empty((n_padded,), np.uint32)
+        base_blk = np.empty((n_padded,), np.uint32)
+        levels_blk = np.empty((n_padded,), np.int32)
+        seg = np.empty((n_padded * cps,), np.int32)
+        adopt = np.empty((n_padded * cps,), bool)
+        for b, (s, job) in enumerate(slot_list):
+            kid_blk[b] = np.int32(job.req.kid)
+            t = job.T
+            for i in range(K):
+                # float64 iteration, f32 per level — identical to K=1's
+                # pack-then-advance of the float ``job.T`` cursor.
+                T_lvls[i, b] = t
+                t *= job.req.rho
+            seed_blk[b] = np.uint32(job.req.seed)
+            step0_blk[b] = np.uint32(job.steps_done)
+            base_blk[b] = shard.pool.chain_base[s]
+            levels_blk[b] = planned[job.rid]
+            seg[b * cps:(b + 1) * cps] = job.rid
+            adopt[b * cps:(b + 1) * cps] = job.req.exchange == "sync"
+        for b in range(n_blocks, n_padded):
+            # Pad blocks are *dead* (zero planned levels): pure
+            # pass-through, so whatever a reused buffer holds in its pad
+            # rows is legal — they cost lanes, not correctness.
+            kid_blk[b] = kid_blk[0]
+            T_lvls[:, b] = T_lvls[:, 0]
+            seed_blk[b] = seed_blk[0]
+            step0_blk[b] = step0_blk[0]
+            base_blk[b] = base_blk[0]
+            levels_blk[b] = 0
+            seg[b * cps:(b + 1) * cps] = self.cfg.n_slots
+            adopt[b * cps:(b + 1) * cps] = False
+
+        dev = shard.device
+
+        cache = shard.group_cache.get((dim, n_steps))
+        x_dev = None
+        if cache is not None and cache["n_padded"] == n_padded:
+            buf = cache["buf"]
+            for b, (s, _job) in enumerate(slot_list):
+                ref = shard.pool.device_ref(s)
+                if ref is None or ref.buf is not buf or ref.start != b * cps:
+                    break
+            else:
+                x_dev = buf              # cache hit: skip repack + transfer
+        if x_dev is None:
+            x = np.empty((n_padded * cps, dim), np.float32)
+            for b, (s, _job) in enumerate(slot_list):
+                x[b * cps:(b + 1) * cps] = shard.pool.get_block(s)
+            for b in range(n_blocks, n_padded):
+                x[b * cps:(b + 1) * cps] = x[:cps]
+            x_dev = jax.device_put(x, dev)
+
+        # One batched transfer for all control arrays: eight separate
+        # device_put dispatches were the dominant per-launch host cost
+        # once the state buffer started cache-hitting.
+        ctrl = jax.device_put(
+            (kid_blk, T_lvls, seed_blk, step0_blk, base_blk, levels_blk,
+             seg, adopt), dev)
+        outs = _group_tick_fused(
+            x_dev, *ctrl,
+            k=K, n_steps=n_steps, blk=cps, variant=self.cfg.variant,
+            use_pallas=self._use_pallas, interpret=self.cfg.interpret,
+            num_segments=self.cfg.n_slots + 1)
+        out_x = outs[0]
+        # The group's state now lives in the output buffer.  Point every
+        # slot there (lazily — materialized only by checkpoint/migrate/
+        # shrink or a cache-miss repack) and arm the double buffer for the
+        # next boundary.  The donated input has no readers left: every
+        # ref into it was just replaced.
+        for b, (s, _job) in enumerate(slot_list):
+            shard.pool.set_device_block(s, out_x, b * cps, (b + 1) * cps)
+        shard.group_cache[(dim, n_steps)] = {"buf": out_x,
+                                             "n_padded": n_padded}
+        return shard, n_steps, jobs, slot_list, outs, planned
 
     def _launch_group(self, shard: EngineShard, dim: int, n_steps: int,
                       jobs: List[ActiveJob]):
@@ -914,13 +1201,19 @@ class SAServeEngine:
             return "ladder"
         return None
 
-    def _retire(self, shard: EngineShard, job: ActiveJob, reason: str) -> None:
+    def _retire(self, shard: EngineShard, job: ActiveJob, reason: str,
+                finish_tick: Optional[int] = None) -> None:
+        # finish_tick is on the ladder-level clock: the K=1 path passes
+        # the current tick; the fused path passes boundary + counted - 1
+        # (the level at which the finish reason actually fired).
+        if finish_tick is None:
+            finish_tick = self.tick_count
         self.results.append(RequestResult(
             req_id=job.req.req_id, objective=job.req.objective,
             dim=job.req.dim, x_best=job.best_x, f_best=job.best_f,
             levels_run=job.level, n_evals=job.evals,
             submit_tick=job.submit_tick, start_tick=job.start_tick,
-            finish_tick=self.tick_count, finish_reason=reason,
+            finish_tick=finish_tick, finish_reason=reason,
             arrival_time=job.arrival_time, first_tick=job.first_tick,
             submit_wall=job.submit_wall, admit_wall=job.admit_wall,
             first_tick_wall=job.first_tick_wall, finish_wall=self._now(),
@@ -1050,7 +1343,10 @@ class SAServeEngine:
         per_shard = {
             str(s.index): dict(sorted(s.phase_seconds.items()))
             for s in self.shards if s.phase_seconds}
-        return {"aggregate": agg, "per_shard": per_shard}
+        cpu = {phase: secs for (phase,), secs
+               in sorted(self.telemetry.m_phase_cpu.series.items())}
+        return {"aggregate": agg, "per_shard": per_shard,
+                "cpu_seconds": cpu}
 
 
 def run_standalone(req: SARequest, cfg: EngineConfig,
@@ -1072,6 +1368,12 @@ def run_standalone(req: SARequest, cfg: EngineConfig,
     same width schedule — the shrink itself (checkpoint, restore,
     placement, co-tenants) perturbs nothing; only the logical width
     trajectory matters.
+
+    The replay applies pending shrinks at macro-tick boundaries, so at
+    ``cfg.macro_k > 1`` the schedule's levels must be K-aligned — which
+    engine-recorded ``shrink_events`` always are, because the engine only
+    shrinks at boundaries and mid-flight jobs run exactly K levels per
+    macro-tick.
     """
     alone = SAServeEngine(dataclasses.replace(
         cfg, n_slots=req.slots_needed(cfg.chains_per_slot), n_devices=1))

@@ -64,7 +64,15 @@ flag groups:
                   and rebalances by bit-exact cross-shard migration.  On
                   CPU, XLA_FLAGS=--xla_force_host_platform_device_count=N
                   provides N real host devices; with fewer physical
-                  devices, logical shards share them round-robin).
+                  devices, logical shards share them round-robin),
+                  --macro-k (temperature levels fused into one device
+                  dispatch: K > 1 amortizes the host's per-launch pack /
+                  transfer / collect cost over K ladder levels and keeps
+                  chain state device-resident between launches via
+                  donated double buffers.  Scheduling decisions land on
+                  macro-tick boundaries only; the tick clock stays in
+                  ladder-level units and every trajectory stays bit-exact
+                  at any K — --check passes unchanged).
   admission       --policy priority (aged, default) | fifo.
   overload / SLO  --overload-policy none (default) | reject (drop a
                   request once it queues past --deadline ticks) | degrade
@@ -115,8 +123,10 @@ flag groups:
                   on (--check passes either way).  See
                   docs/observability.md.
 
-The tick clock is the engine's native time axis: one tick = one
-temperature level for every active slot.  See docs/serving.md.
+The tick clock is the engine's native time axis, measured in ladder
+levels: one macro-tick advances it by --macro-k (one level per active
+slot per unit).  Latency percentiles are therefore comparable across K.
+See docs/serving.md.
 """
 
 
@@ -172,6 +182,10 @@ def main(argv=None):
                     help="engine shards on the (pool,) device mesh; each "
                          "owns --slots slots (CPU-testable via XLA_FLAGS="
                          "--xla_force_host_platform_device_count)")
+    ap.add_argument("--macro-k", type=int, default=1,
+                    help="temperature levels fused per device dispatch "
+                         "(macro-tick size; 1 = classic per-level launch). "
+                         "Bit-exact at any value")
     ap.add_argument("--migration-budget", type=int, default=1,
                     help="max cross-shard moves per tick — drain "
                          "evacuation, head defrag and watermark "
@@ -266,6 +280,7 @@ def main(argv=None):
     cfg = EngineConfig(
         n_slots=args.slots, chains_per_slot=args.chains_per_slot,
         n_devices=args.devices, variant=args.variant,
+        macro_k=args.macro_k,
         migration_budget=args.migration_budget,
         scheduler=SchedulerConfig(policy=args.policy,
                                   overload=args.overload_policy,
@@ -357,7 +372,7 @@ def main(argv=None):
             "config": {
                 "requests": args.requests, "slots": args.slots,
                 "chains_per_slot": args.chains_per_slot,
-                "devices": args.devices,
+                "devices": args.devices, "macro_k": args.macro_k,
                 "migration_budget": args.migration_budget,
                 "drain_at": args.drain_at, "drain_shard": args.drain_shard,
                 "resize": sorted(resizes),

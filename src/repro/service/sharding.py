@@ -92,6 +92,16 @@ class EngineShard:
                                 # (telemetry.py); empty when telemetry is
                                 # off — populated by the engine's
                                 # per-shard span folding
+    group_cache: dict = dataclasses.field(default_factory=dict)
+                                # (dim, N) -> {"buf": device array,
+                                # "n_padded": int}: the fused macro-tick
+                                # path's double buffer.  When a group's
+                                # membership is unchanged since its last
+                                # launch (every slot still references this
+                                # buffer at its packed rows), the host
+                                # repack + transfer is skipped and the
+                                # buffer is donated straight back to the
+                                # next launch (engine._launch_group_fused)
 
     @property
     def jobs(self):

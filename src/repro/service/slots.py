@@ -9,8 +9,14 @@ so RNG streams are invariant to which physical slots the scheduler picked
 (launch/serve.py's SlotCache, with (x, T-ladder position, best) instead of
 KV rows).
 
-All state here is host-side numpy; device arrays are packed per dispatch
-group by the engine each tick.
+Slot state is *logically* host-side numpy; device arrays are packed per
+dispatch group by the engine each tick.  Under macro-tick fusion the
+engine leaves chain state device-resident between launches: a slot may
+hold a :class:`DeviceBlockRef` — a lazy view into the group's packed
+device output — instead of a numpy block.  ``get_block`` materializes the
+ref to host on demand (checkpoint, migration, shrink, repack), so every
+consumer of the pool keeps its host-numpy contract while the steady-state
+dispatch path skips the host round-trip entirely.
 """
 from __future__ import annotations
 
@@ -20,6 +26,28 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.service.request import SARequest
+
+
+class DeviceBlockRef:
+    """Lazy slot content: rows ``[start, stop)`` of a packed device array.
+
+    Created by the engine's fused launch path (the group's donated output
+    buffer), materialized to host numpy on first ``get_block``.  Identity
+    of ``buf`` is what the engine's dispatch cache keys on: if every slot
+    of a group still references the same buffer at the same rows, the
+    packed state on device is current and the host repack + transfer can
+    be skipped (and the buffer donated back to the next launch).
+    """
+
+    __slots__ = ("buf", "start", "stop")
+
+    def __init__(self, buf, start: int, stop: int):
+        self.buf = buf
+        self.start = start
+        self.stop = stop
+
+    def materialize(self) -> np.ndarray:
+        return np.asarray(self.buf[self.start:self.stop])
 
 
 @dataclasses.dataclass
@@ -129,10 +157,26 @@ class SlotPool:
     def get_block(self, slot: int) -> np.ndarray:
         x = self._x[slot]
         assert x is not None, f"slot {slot} is empty"
+        if isinstance(x, DeviceBlockRef):
+            # Materialize the device-resident block to host and cache it:
+            # checkpoint/migrate/shrink and cache-miss repacks all come
+            # through here, and repeated reads must not re-transfer.
+            x = x.materialize()
+            self._x[slot] = x
         return x
 
     def set_block(self, slot: int, x: np.ndarray) -> None:
         self._x[slot] = x
+
+    def set_device_block(self, slot: int, buf, start: int, stop: int) -> None:
+        """Point ``slot`` at rows [start, stop) of a packed device array
+        (the fused launch's output) instead of a host copy."""
+        self._x[slot] = DeviceBlockRef(buf, start, stop)
+
+    def device_ref(self, slot: int) -> Optional[DeviceBlockRef]:
+        """The slot's un-materialized device ref, or None if host-resident."""
+        x = self._x[slot]
+        return x if isinstance(x, DeviceBlockRef) else None
 
     # ---------------------------------------------------------- lifecycle
     def assign(self, rid: int, req: SARequest,

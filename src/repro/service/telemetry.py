@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import json
 import math
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 #: The engine tick's phase taxonomy, in execution order (docs/observability.md):
@@ -303,16 +304,24 @@ class PhaseTimer:
 
     Spans never nest (the tick's phases are sequential), so one instance
     re-enters itself — no object allocation per span.  ``drain()`` returns
-    and resets the accumulated (aggregate, per-shard, raw span) state;
-    the engine folds it into histograms / trace events at tick end.
+    and resets the accumulated (aggregate, per-shard, raw span, host-CPU)
+    state; the engine folds it into histograms / trace events at tick end.
+
+    Each span records **two** clocks: monotonic wall time and the host
+    thread's CPU time (``time.thread_time``).  On a host core dedicated to
+    the engine loop the two agree; when the host shares cores with device
+    compute threads (CPU backend, oversubscribed CI runners) wall spans
+    absorb whatever work the OS timesliced in, while thread-CPU counts
+    only cycles the engine loop itself burned — the durable measure of
+    host-side cost per phase.
     """
 
     #: Class-wide count of spans ever entered — the zero-overhead witness:
     #: with telemetry disabled this must not move (tests assert it).
     spans_entered = 0
 
-    __slots__ = ("_clock", "acc", "shard_acc", "raw", "keep_raw",
-                 "_phase", "_shard", "_t0")
+    __slots__ = ("_clock", "acc", "shard_acc", "raw", "cpu_acc", "keep_raw",
+                 "_phase", "_shard", "_t0", "_c0")
 
     def __init__(self, clock, keep_raw: bool = False):
         self._clock = clock         # monotonic epoch-relative seconds
@@ -320,6 +329,7 @@ class PhaseTimer:
         self.acc: Dict[str, float] = {}
         self.shard_acc: Dict[Tuple[int, str], float] = {}
         self.raw: List[Tuple[str, Optional[int], float, float]] = []
+        self.cpu_acc: Dict[str, float] = {}
 
     def __call__(self, phase: str, shard: Optional[int] = None):
         self._phase, self._shard = phase, shard
@@ -328,12 +338,15 @@ class PhaseTimer:
     def __enter__(self):
         PhaseTimer.spans_entered += 1
         self._t0 = self._clock()
+        self._c0 = time.thread_time()
         return self
 
     def __exit__(self, *exc):
+        dc = time.thread_time() - self._c0
         t1 = self._clock()
         dt = t1 - self._t0
         self.acc[self._phase] = self.acc.get(self._phase, 0.0) + dt
+        self.cpu_acc[self._phase] = self.cpu_acc.get(self._phase, 0.0) + dc
         if self._shard is not None:
             key = (self._shard, self._phase)
             self.shard_acc[key] = self.shard_acc.get(key, 0.0) + dt
@@ -342,9 +355,10 @@ class PhaseTimer:
         return False
 
     def drain(self):
-        acc, shard_acc, raw = self.acc, self.shard_acc, self.raw
-        self.acc, self.shard_acc, self.raw = {}, {}, []
-        return acc, shard_acc, raw
+        acc, shard_acc, raw, cpu = (self.acc, self.shard_acc, self.raw,
+                                    self.cpu_acc)
+        self.acc, self.shard_acc, self.raw, self.cpu_acc = {}, {}, [], {}
+        return acc, shard_acc, raw, cpu
 
 
 class NullPhaseTimer:
@@ -362,7 +376,7 @@ class NullPhaseTimer:
         return False
 
     def drain(self):
-        return {}, {}, []
+        return {}, {}, [], {}
 
 
 NULL_PHASE_TIMER = NullPhaseTimer()
@@ -472,6 +486,11 @@ class Telemetry:
             "sa_shard_phase_seconds_total",
             "Cumulative wall seconds per shard per tick phase",
             ("shard", "phase"))
+        self.m_phase_cpu = r.counter(
+            "sa_tick_phase_cpu_seconds_total",
+            "Cumulative host-thread CPU seconds per tick phase "
+            "(thread_time: excludes time the OS gave to other threads)",
+            ("phase",))
         self.m_tick = r.histogram(
             "sa_tick_seconds", "Wall seconds per engine tick")
         self.m_ticks = r.counter("sa_ticks_total", "Engine ticks executed")
@@ -516,18 +535,28 @@ class Telemetry:
         self.m_plans.inc(n_actions, kind)
 
     def end_tick(self, tick: int, acc, shard_acc, raw, shards,
-                 queue_depth: int, n_active: int) -> None:
+                 queue_depth: int, n_active: int, levels: int = 1,
+                 cpu=None) -> None:
         """Fold one tick's (drained) spans + fleet state into the
-        registry and trace."""
+        registry and trace.
+
+        ``levels`` is how many ladder levels the engine tick advanced (the
+        macro-tick factor K when work ran fused, 1 otherwise):
+        ``sa_ticks_total`` counts ladder levels, keeping it equal to the
+        engine's ``tick_count`` clock at any K.  ``cpu`` is the tick's
+        per-phase host-thread CPU seconds (the PhaseTimer's second clock).
+        """
         total = 0.0
         for phase, secs in acc.items():
             self.m_tick_phase.observe(secs, phase)
             total += secs
         for (shard, phase), secs in shard_acc.items():
             self.m_shard_phase.inc(secs, str(shard), phase)
+        for phase, secs in (cpu or {}).items():
+            self.m_phase_cpu.inc(secs, phase)
         if total:
             self.m_tick.observe(total)
-        self.m_ticks.inc()
+        self.m_ticks.inc(levels)
         self.m_queue_depth.set(queue_depth)
         self.m_active.set(n_active)
         used = held = 0
@@ -566,7 +595,7 @@ class NullTelemetry:
         pass
 
     def end_tick(self, tick, acc, shard_acc, raw, shards, queue_depth,
-                 n_active):
+                 n_active, levels=1, cpu=None):
         pass
 
     def tenant_slot_ticks(self, req_id, n_slots):

@@ -146,6 +146,35 @@ def test_new_objectives_serve_bit_exact_and_share_one_program():
         assert results[r.req_id].champion_history == solo.champion_history
 
 
+@pytest.mark.parametrize("dim,n_steps,macro_k", [(4, 10, 4), (8, 10, 4), (4, 10, 2)])
+def test_fused_macro_tick_compiles_one_program_per_shape(dim, n_steps, macro_k):
+    """Compile stability under macro-tick fusion: co-batching all six
+    SERVABLE objectives at one (dim, N, K) traces exactly ONE fused
+    program — the K-level loop keeps the objective id a runtime input —
+    and every champion stays bit-exact vs standalone."""
+    from repro.service.engine import _group_tick_fused
+
+    can_count = hasattr(_group_tick_fused, "clear_cache") and hasattr(
+        _group_tick_fused, "_cache_size"
+    )
+    if can_count:
+        _group_tick_fused.clear_cache()
+    cfg = _cfg(n_slots=6, macro_k=macro_k)
+    engine = SAServeEngine(cfg)
+    reqs = [_req(i, obj, dim=dim, N=n_steps) for i, obj in enumerate(ALL_NAMES)]
+    for r in reqs:
+        engine.submit(r)
+    results = {r.req_id: r for r in engine.run(max_ticks=200)}
+    assert len(results) == 6
+    if can_count:
+        # One fused lowering serves the whole registry at this shape.
+        assert _group_tick_fused._cache_size() == 1
+    for r in reqs:
+        solo = run_standalone(r, cfg)
+        assert results[r.req_id].f_best == solo.f_best
+        assert results[r.req_id].champion_history == solo.champion_history
+
+
 @pytest.mark.parametrize("name", NEW_NAMES)
 def test_new_objectives_anneal_toward_their_optimum(name):
     """Sanity: a short ladder makes real progress toward the registered

@@ -296,6 +296,65 @@ def test_engine_invariants_under_random_preemption(data):
 
 @pytest.mark.slow
 @given(st.data())
+@settings(max_examples=10, deadline=None)
+def test_macro_tick_fusion_bit_exact_under_random_ops(data):
+    """Macro-tick tentpole property: random K x random width-preserving
+    op schedules (preempt / resize / drain) on a 2-shard fleet => every
+    request's champion history is bit-equal to the K=1 engine's and to
+    ``run_standalone`` — fusing K levels into one dispatch perturbs no
+    trajectory regardless of where the fleet is reshaped."""
+    k = data.draw(st.sampled_from([2, 4, 8]))
+    n_reqs = data.draw(st.integers(2, 5))
+    reqs = [_req(i,
+                 n_chains=data.draw(st.integers(1, 2)) * CPS,
+                 rho=0.7,                # 7-level ladders: K spans several
+                 priority=data.draw(st.integers(0, 3)))
+            for i in range(n_reqs)]
+    ops = []
+    for _ in range(data.draw(st.integers(0, 4))):
+        tick = data.draw(st.integers(0, 20))
+        kind = data.draw(st.sampled_from(["preempt", "resize", "drain"]))
+        arg = (data.draw(st.integers(0, n_reqs - 1)) if kind == "preempt"
+               else data.draw(st.integers(1, 3)))
+        ops.append((tick, kind, arg))
+
+    def serve(macro_k):
+        cfg = EngineConfig(n_slots=3, chains_per_slot=CPS, n_devices=2,
+                           use_pallas=False, macro_k=macro_k,
+                           migration_budget=2)
+        engine = SAServeEngine(cfg)
+        for tick, kind, arg in ops:
+            if kind == "preempt":
+                engine.schedule_op(tick,
+                                   lambda a=arg: engine.preempt(a))
+            elif kind == "resize":
+                engine.schedule_op(tick,
+                                   lambda a=arg: engine.resize(a))
+            else:                        # drain the highest live shard
+                engine.schedule_op(
+                    tick,
+                    lambda e=engine: e.drain(
+                        max(s.index for s in e.live_shards))
+                    if len(e.live_shards) > 1 else None)
+        for r in reqs:
+            engine.submit(r)
+        return {r.req_id: r for r in engine.run(max_ticks=3000)}, cfg
+
+    base, _ = serve(1)
+    fused, cfg = serve(k)
+    assert base.keys() == fused.keys() == set(range(n_reqs))
+    for req in reqs:
+        a, b = base[req.req_id], fused[req.req_id]
+        assert a.champion_history == b.champion_history
+        assert a.f_best == b.f_best
+        np.testing.assert_array_equal(a.x_best, b.x_best)
+        assert a.finish_reason == b.finish_reason
+        solo = run_standalone(req, cfg)
+        assert b.champion_history == solo.champion_history
+
+
+@pytest.mark.slow
+@given(st.data())
 @settings(max_examples=12, deadline=None)
 def test_engine_invariants_under_random_drain_resize(data):
     """Elastic-fleet property (PR 5): random arrivals x random

@@ -201,6 +201,37 @@ def test_phase_metrics_cover_the_taxonomy():
     assert st["phases"]["per_shard"]["0"]["dispatch"] > 0
 
 
+def test_phase_timer_tracks_host_cpu_alongside_wall():
+    import time
+
+    t = PhaseTimer(time.perf_counter)
+    with t("dispatch", shard=0):
+        sum(range(50_000))        # burn host CPU: cpu time must register
+    acc, shard_acc, raw, cpu = t.drain()
+    assert set(cpu) == {"dispatch"}
+    # One thread's CPU time can never exceed the span's wall time.
+    assert 0.0 <= cpu["dispatch"] <= acc["dispatch"] + 1e-3
+    # drain() resets both clocks.
+    assert t.drain() == ({}, {}, [], {})
+
+
+def test_phase_cpu_metric_covers_host_phases_and_stats():
+    tel = Telemetry()
+    engine, _ = _serve(tel)
+    cpu = engine.stats()["phases"]["cpu_seconds"]
+    wall = {p: s["sum"]
+            for p, s in engine.stats()["phases"]["aggregate"].items()}
+    # The launch path burned host CPU, and the registry mirrors stats().
+    assert cpu["dispatch"] > 0
+    assert cpu == {p: secs for (p,), secs
+                   in tel.registry["sa_tick_phase_cpu_seconds_total"]
+                   .series.items()}
+    # Run-total host CPU per phase is bounded by the wall spans it ran in
+    # (thread_time of one thread cannot exceed elapsed wall).
+    for phase, secs in cpu.items():
+        assert secs <= wall[phase] + 1e-2
+
+
 def test_metrics_survive_drain_and_resize():
     tel = Telemetry(events=EventLog())
     cfg = _cfg(n_slots=2, n_devices=3, migration_budget=2)
@@ -279,6 +310,68 @@ def test_event_log_is_deterministic_and_replayable():
         assert rec["tick"] >= 0
     kinds = {r["event"] for r in records}
     assert "admit" in kinds and "retire" in kinds
+
+
+# ----------------------------------------------------- macro-tick fusion
+def test_macro_tick_disabled_telemetry_allocates_zero_spans():
+    """The zero-overhead guarantee survives fusion: a K=4 run with
+    telemetry off never enters a span."""
+    spans_before = PhaseTimer.spans_entered
+    engine, results = _serve(macro_k=4)
+    assert len(results) == 4
+    assert PhaseTimer.spans_entered == spans_before
+    assert engine.telemetry.enabled is False
+
+
+def test_macro_tick_phases_cover_taxonomy_and_level_clock():
+    """At K>1 the per-tick spans still cover the whole phase taxonomy
+    (device_wait fences the fused K-level program; dispatch is the host
+    pack+launch), and sa_ticks_total stays on the ladder-level clock —
+    equal to tick_count, which counts levels, not launches."""
+    tel = Telemetry()
+    engine, _ = _serve(tel, macro_k=4)
+    snap = tel.registry.snapshot()
+    phases = {k.split("=", 1)[1]
+              for k in snap["sa_tick_phase_seconds"]["series"]}
+    assert phases == set(TICK_PHASES)
+    for summary in snap["sa_tick_phase_seconds"]["series"].values():
+        assert summary["count"] > 0
+    assert snap["sa_ticks_total"]["series"][""] == engine.tick_count
+    # Far fewer launches than levels: the fusion actually engaged.
+    assert engine.group_launches < engine.tick_count
+
+
+def test_macro_tick_event_log_deterministic_and_boundary_stamped():
+    """The decision log stays byte-identical run-to-run at K=4, and every
+    decision is stamped with the macro-tick-boundary tick clock (this
+    closed-loop mix runs uncontended, so boundaries sit at multiples of
+    K until the final partial macro-tick — no decision may carry an
+    intra-macro-tick timestamp)."""
+    def serve():
+        tel = Telemetry(events=EventLog())
+        engine, _ = _serve(tel, macro_k=4)
+        return tel.events
+
+    log_a, log_b = serve(), serve()
+    assert log_a.dumps() == log_b.dumps()
+    records = EventLog.loads(log_a.dumps())
+    assert {r["event"] for r in records} >= {"admit", "retire"}
+    for rec in records:
+        assert rec["tick"] % 4 == 0, "decision stamped off a boundary"
+
+
+def test_macro_tick_trace_validates_and_is_bit_exact():
+    tel = Telemetry(trace=TraceBuilder(), events=EventLog())
+    _, plain = _serve(macro_k=4)
+    engine, traced = _serve(tel, macro_k=4)
+    assert plain.keys() == traced.keys()
+    for rid in plain:
+        assert plain[rid].champion_history == traced[rid].champion_history
+        assert plain[rid].finish_tick == traced[rid].finish_tick
+    doc = tel.trace.to_json()
+    assert validate_trace(doc) == []
+    tick_spans = [e for e in doc["traceEvents"] if e.get("cat") == "tick"]
+    assert {e["name"] for e in tick_spans} <= set(TICK_PHASES)
 
 
 # ------------------------------------------------------------------ CLI
