@@ -1,0 +1,149 @@
+"""Workload-class quality benchmark: levels-to-target for SA / PT / PA.
+
+Four cohorts of IDENTICAL seeded requests (same objective, dim, chain
+count, cooling schedule, seeds — only the workload class differs) are
+served through the engine, each request stopping the moment its champion
+crosses ``target_error``.  The metric is **temperature levels run until
+the target stop** — the ladder-axis cost of reaching a fixed solution
+quality; a request that never crosses runs the full ladder and counts at
+ladder length (a conservative penalty), and is excluded from the hit
+rate.
+
+Cohorts:
+
+* ``sa``      — plain parallel SA, ``exchange='async'`` (paper V1: no
+                inter-chain communication — the baseline the PT/PA gate
+                compares against);
+* ``sa+sync`` — SA with the champion broadcast (paper V2), for context;
+* ``pt``      — parallel tempering: chains hold rungs of the request's
+                geometric [T0, T_min] ladder, even/odd Metropolis swaps
+                every level.  The cold rungs refine from level 1 instead
+                of waiting for the schedule to cool, which is exactly
+                what the levels-to-target metric measures;
+* ``pa``      — population annealing: per-level Boltzmann resampling
+                concentrates the population in the best basins as the
+                inverse-temperature increments grow.
+
+The run is deterministic (counter-based RNG, fixed seeds, closed-loop
+admission), so the committed artifact is reproducible bit-for-bit on the
+same backend.  ``scripts/check_pt_bench.py`` gates the result: PT (and,
+for the committed artifact, PA) must reach the target in fewer mean
+levels than plain SA.
+
+  PYTHONPATH=src python benchmarks/serve_pt_bench.py \
+      --out artifacts/bench/BENCH_serve_pt.json
+"""
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+import numpy as np
+
+try:
+    from .common import ARTIFACTS, write_bench
+except ImportError:  # run as a plain script
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent))
+    from common import ARTIFACTS, write_bench
+
+from repro.service.engine import EngineConfig, SAServeEngine
+from repro.service.request import SARequest
+
+
+def run_cohort(label: str, method: str, exchange: str, args) -> dict:
+    """Serve one cohort of identically-seeded requests; return its row."""
+    cfg = EngineConfig(n_slots=args.slots,
+                       chains_per_slot=args.chains_per_slot,
+                       n_devices=1, macro_k=args.macro_k, use_pallas=False)
+    engine = SAServeEngine(cfg)
+    reqs = [SARequest(req_id=i, objective=args.objective, dim=args.dim,
+                      n_chains=args.chains, seed=args.seed0 + i,
+                      method=method, exchange=exchange,
+                      T0=args.T0, T_min=args.T_min, rho=args.rho, N=args.N,
+                      target_error=args.target)
+            for i in range(args.seeds)]
+    for r in reqs:
+        engine.submit(r)
+    results = {r.req_id: r for r in engine.run(max_ticks=args.max_ticks)}
+    levels = [results[i].levels_run for i in range(args.seeds)]
+    hits = [results[i].finish_reason == "target" for i in range(args.seeds)]
+    errs = [abs(results[i].f_best) for i in range(args.seeds)]  # f_opt = 0
+    return {
+        "label": label, "method": method, "exchange": exchange,
+        "levels": levels, "mean_levels": float(np.mean(levels)),
+        "median_levels": float(np.median(levels)),
+        "hit_rate": float(np.mean(hits)), "n": args.seeds,
+        "mean_error": float(np.mean(errs)),
+    }
+
+
+COHORTS = [
+    ("sa", "sa", "async"),          # plain SA: the gate baseline
+    ("sa+sync", "sa", "sync"),
+    ("pt", "pt", "sync"),
+    ("pa", "pa", "sync"),
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--objective", default="rastrigin")
+    ap.add_argument("--dim", type=int, default=6)
+    ap.add_argument("--chains", type=int, default=64,
+                    help="chains per request (PT ladder width = rung count)")
+    ap.add_argument("--seeds", type=int, default=8,
+                    help="requests per cohort (seed0..seed0+n-1)")
+    ap.add_argument("--seed0", type=int, default=1000)
+    ap.add_argument("--target", type=float, default=3.0,
+                    help="target error (|f_best - f_opt|) that stops a run")
+    ap.add_argument("--T0", type=float, default=100.0)
+    ap.add_argument("--T-min", dest="T_min", type=float, default=0.5)
+    ap.add_argument("--rho", type=float, default=0.88)   # ~39-level ladder
+    ap.add_argument("--N", type=int, default=20)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--chains-per-slot", type=int, default=16)
+    ap.add_argument("--macro-k", type=int, default=1)
+    ap.add_argument("--max-ticks", type=int, default=20000)
+    ap.add_argument("--out", default=None,
+                    help="write BENCH JSON here (default: "
+                         "artifacts/bench/BENCH_serve_pt.json)")
+    args = ap.parse_args(argv)
+
+    rows = []
+    for label, method, exchange in COHORTS:
+        row = run_cohort(label, method, exchange, args)
+        rows.append(row)
+        print(f"[serve_pt] {label:<8} mean_levels={row['mean_levels']:6.1f} "
+              f"hit={row['hit_rate']:.0%} mean_err={row['mean_error']:.2f} "
+              f"levels={row['levels']}")
+
+    doc = {
+        "bench": "serve_pt",
+        "config": {
+            "objective": args.objective, "dim": args.dim,
+            "chains": args.chains, "seeds": args.seeds,
+            "seed0": args.seed0, "target_error": args.target,
+            "T0": args.T0, "T_min": args.T_min, "rho": args.rho,
+            "N": args.N, "slots": args.slots,
+            "chains_per_slot": args.chains_per_slot,
+            "macro_k": args.macro_k,
+        },
+        "metric": "mean temperature levels run until the champion crossed "
+                  "target_error (misses run the full ladder and count at "
+                  "ladder length)",
+        "note": "levels are integers determined by bit-exact trajectories: "
+                "reproducible on the same backend/jax version; "
+                "scripts/check_pt_bench.py gates pt (and pa) vs the plain "
+                "'sa' baseline",
+        "rows": rows,
+    }
+    out = ARTIFACTS / "bench" / "BENCH_serve_pt.json" if args.out is None \
+        else Path(args.out)
+    write_bench(out, doc, seed0=args.seed0, seeds=args.seeds)
+    print(f"[serve_pt] wrote {out}")
+    return doc
+
+
+if __name__ == "__main__":
+    main()

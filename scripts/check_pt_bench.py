@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Gate the workload-class quality bench (BENCH_serve_pt.json).
+
+The PT/PA tentpole's acceptance lives here: on the same seeded
+Rastrigin-class stream, parallel tempering — and, for the committed
+artifact, population annealing — must reach the target error in fewer
+mean temperature levels than plain SA (the ``sa`` row: exchange='async',
+no inter-chain communication).  CI runs this twice: against the
+committed artifact (validates the committed claim, including PA) and
+against a freshly generated reduced smoke (PT only — its margin is
+~2.5x and robust to backend drift; PA's is real but thin enough that a
+tiny-seed smoke would be noise-gated).
+
+Checks:
+
+1. rows exist for 'sa' and 'pt' (and 'pa' with --require-pa);
+2. every gated cohort's hit_rate >= the sa baseline's (reaching the
+   target less often can't be laundered into a levels win — misses only
+   count at full-ladder length);
+3. pt.mean_levels < sa.mean_levels * --max-ratio (default 1.0: strictly
+   fewer levels);
+4. with --require-pa: pa.mean_levels < sa.mean_levels * --max-ratio.
+
+Exit 0 when every check passes, 1 otherwise (each failure is printed).
+
+  python scripts/check_pt_bench.py artifacts/bench/BENCH_serve_pt.json \
+      --require-pa
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifact", help="BENCH_serve_pt.json to gate")
+    ap.add_argument("--require-pa", action="store_true",
+                    help="also require the pa cohort to beat plain sa")
+    ap.add_argument("--max-ratio", type=float, default=1.0,
+                    help="gated mean_levels must be < sa mean_levels x "
+                         "this (1.0 = strictly fewer levels)")
+    args = ap.parse_args(argv)
+
+    with open(args.artifact) as fh:
+        doc = json.load(fh)
+    rows = {r["label"]: r for r in doc.get("rows", [])}
+
+    failures = []
+    needed = ["sa", "pt"] + (["pa"] if args.require_pa else [])
+    for label in needed:
+        if label not in rows:
+            failures.append(f"missing cohort row {label!r}")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        sys.exit(1)
+
+    sa = rows["sa"]
+    if sa["hit_rate"] <= 0.0:
+        failures.append("sa baseline never reached the target — the "
+                        "levels metric is vacuous; loosen --target")
+    gated = ["pt"] + (["pa"] if args.require_pa else [])
+    for label in gated:
+        row = rows[label]
+        if row["hit_rate"] < sa["hit_rate"]:
+            failures.append(
+                f"{label} hit_rate {row['hit_rate']:.2f} < sa baseline "
+                f"{sa['hit_rate']:.2f}")
+        bound = sa["mean_levels"] * args.max_ratio
+        if not row["mean_levels"] < bound:
+            failures.append(
+                f"{label} mean_levels {row['mean_levels']:.1f} not < "
+                f"{bound:.1f} (sa {sa['mean_levels']:.1f} x "
+                f"{args.max_ratio})")
+        else:
+            print(f"OK: {label} mean_levels {row['mean_levels']:.1f} < "
+                  f"sa {sa['mean_levels']:.1f} "
+                  f"(hit {row['hit_rate']:.0%} vs {sa['hit_rate']:.0%})")
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        sys.exit(1)
+    print(f"check_pt_bench: all gates passed for {args.artifact}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,13 +22,20 @@ class HybridResult:
     sa: SAResult
     nm: NMResult
 
+    # NM polishes the SA champion but can terminate on a worse simplex
+    # (iteration cap, degenerate geometry); report the coherent (x, f)
+    # pair from whichever stage actually won, never a mix of the two.
+    @property
+    def _winner(self):
+        return self.nm if self.nm.f_best <= self.sa.f_best else self.sa
+
     @property
     def x_best(self):
-        return self.nm.x_best
+        return self._winner.x_best
 
     @property
     def f_best(self) -> float:
-        return min(self.nm.f_best, self.sa.f_best)
+        return self._winner.f_best
 
 
 def hybrid_minimize(objective: Objective, sa_config: SAConfig,

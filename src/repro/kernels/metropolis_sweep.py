@@ -79,19 +79,26 @@ def _step_draws(seed, cidx, step0, i):
 
 
 def _sweep_kernel(*refs, kid_static, n_steps: int, blk: int,
-                  variant: str, with_live: bool = False):
-    if with_live:
-        # Macro-tick serving path: ``live`` is the per-slot level cursor —
-        # blocks whose request has exhausted its planned ladder levels for
-        # this macro-tick pass their state through bit-exactly (acc forced
-        # to False; the counter-based RNG is stateless so no draws are
-        # consumed on their behalf).
-        (kid_ref, seed_ref, step0_ref, t_ref, base_ref, live_ref, x_ref,
-         xo_ref, fo_ref) = refs
+                  variant: str, with_live: bool = False,
+                  with_chain_t: bool = False):
+    # Ref layout: 5-or-6 SMEM control refs, then the VMEM tensor refs.
+    # ``live`` (macro-tick serving path) is the per-slot level cursor —
+    # blocks whose request has exhausted its planned ladder levels for
+    # this macro-tick pass their state through bit-exactly (acc forced
+    # to False; the counter-based RNG is stateless so no draws are
+    # consumed on their behalf).  ``with_chain_t`` (replica-exchange
+    # serving path) swaps the per-block SMEM temperature for a (blk, 1)
+    # VMEM column so every chain — a parallel-tempering rung — anneals at
+    # its own temperature inside one block.
+    n_smem = 6 if with_live else 5
+    kid_ref, seed_ref, step0_ref, t_ref, base_ref = refs[:5]
+    live_ref = refs[5] if with_live else None
+    vrefs = refs[n_smem:]
+    if with_chain_t:
+        x_ref, tc_ref, xo_ref, fo_ref = vrefs
     else:
-        (kid_ref, seed_ref, step0_ref, t_ref, base_ref, x_ref,
-         xo_ref, fo_ref) = refs
-        live_ref = None
+        x_ref, xo_ref, fo_ref = vrefs
+        tc_ref = None
     dim = x_ref.shape[-1]
 
     pid = pl.program_id(0)
@@ -110,7 +117,9 @@ def _sweep_kernel(*refs, kid_static, n_steps: int, blk: int,
             om.init_acc_rt, om.combine_rt, om.term_rt, om.full_eval_rt)
     seed = seed_ref[pid]
     step0 = step0_ref[pid]
-    T = t_ref[pid]
+    # Per-chain (blk, 1) temperature column, or the block's SMEM scalar —
+    # broadcasting against the (blk, 1) accept shapes either way.
+    T = t_ref[pid] if tc_ref is None else tc_ref[...]
     base = base_ref[pid]
     live = None if live_ref is None else live_ref[pid] != 0
     cidx = base + lax.broadcasted_iota(jnp.int32, (blk, 1), 0).astype(jnp.uint32)
@@ -206,7 +215,7 @@ def _validate_kid(kid) -> None:
 def metropolis_sweep_pallas(x, T, seed, step0, *, kid, n_steps: int,
                             blk: int = 256, variant: str = "delta",
                             interpret: bool = False, chain_base=None,
-                            live=None):
+                            live=None, t_chain=None):
     """Run an N-step Metropolis sweep for all chains.
 
     Args:
@@ -233,6 +242,12 @@ def metropolis_sweep_pallas(x, T, seed, step0, *, kid, n_steps: int,
          stream advances (counter-based RNG draws are stateless).  The
          macro-tick engine uses this so co-batched requests with different
          remaining ladder depths fuse into one K-level dispatch.
+      t_chain: optional per-chain temperatures (float32, (chains,) or
+         (chains, 1)).  When given, each chain anneals at its own
+         temperature (parallel-tempering rungs) and the per-block ``T`` is
+         ignored; a block whose rows all carry the block temperature is
+         bit-identical to the SMEM-scalar path (same broadcasting into the
+         accept test).
 
     Returns (x_out, f_out): (chains, dim) and (chains,).
     """
@@ -240,7 +255,8 @@ def metropolis_sweep_pallas(x, T, seed, step0, *, kid, n_steps: int,
     _validate_kid(kid)
     pad = (-chains) % blk
     if pad:
-        if chain_base is not None or live is not None or any(
+        if chain_base is not None or live is not None \
+                or t_chain is not None or any(
                 jnp.ndim(v) and jnp.size(v) > 1 for v in (T, seed, step0, kid)):
             raise ValueError(
                 f"chains={chains} must be a multiple of blk={blk} when "
@@ -259,9 +275,10 @@ def metropolis_sweep_pallas(x, T, seed, step0, *, kid, n_steps: int,
     # traced kid -> runtime SMEM dispatch (one lowering for all objectives).
     kid_static = int(kid) if isinstance(kid, (int, np.integer)) else None
     with_live = live is not None
+    with_chain_t = t_chain is not None
     kernel = functools.partial(
         _sweep_kernel, kid_static=kid_static, n_steps=n_steps, blk=blk,
-        variant=variant, with_live=with_live)
+        variant=variant, with_live=with_live, with_chain_t=with_chain_t)
 
     kid_arr = _per_block(kid, n_blocks, jnp.int32, "kid")
     seed_arr = _per_block(seed, n_blocks, jnp.uint32, "seed")
@@ -279,15 +296,22 @@ def metropolis_sweep_pallas(x, T, seed, step0, *, kid, n_steps: int,
         inputs.append(_per_block(live, n_blocks, jnp.int32, "live"))
         n_smem = 6
     inputs.append(x)
+    in_specs = ([pl.BlockSpec(memory_space=pltpu.SMEM)] * n_smem
+                + [pl.BlockSpec((blk, dim), lambda i: (i, 0))])
+    if with_chain_t:
+        tc = jnp.asarray(t_chain, jnp.float32).reshape(-1, 1)
+        if tc.shape[0] != chains:
+            raise ValueError(
+                f"t_chain has {tc.shape[0]} entries for {chains} chains")
+        inputs.append(tc)
+        in_specs.append(pl.BlockSpec((blk, 1), lambda i: (i, 0)))
 
     name = (f"metropolis_sweep_{variant}" if kid_static is None
             else f"metropolis_sweep_{variant}_k{kid_static}")
     x_out, f_out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=(
-            [pl.BlockSpec(memory_space=pltpu.SMEM)] * n_smem
-            + [pl.BlockSpec((blk, dim), lambda i: (i, 0))]),
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((blk, dim), lambda i: (i, 0)),
             pl.BlockSpec((blk, 1), lambda i: (i, 0)),
@@ -297,6 +321,7 @@ def metropolis_sweep_pallas(x, T, seed, step0, *, kid, n_steps: int,
             jax.ShapeDtypeStruct((n_chains_p, 1), x.dtype),
         ],
         interpret=interpret,
-        name=name + ("_lv" if with_live else ""),
+        name=name + ("_lv" if with_live else "") +
+             ("_ct" if with_chain_t else ""),
     )(*inputs)
     return x_out[:chains], f_out[:chains, 0]

@@ -77,7 +77,7 @@ _metropolis_sweep_static = partial(jax.jit, static_argnames=(
 def metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, chain_base, *,
                            n_steps: int, blk: int,
                            variant: str = "delta", use_pallas: bool = False,
-                           interpret: bool = False, live=None):
+                           interpret: bool = False, live=None, T_chain=None):
     """Heterogeneous-slot Metropolis sweep: one serving slot per chain-block.
 
     ``x`` is ``(n_blocks * blk, dim)`` — the packed states of every active
@@ -95,13 +95,21 @@ def metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, chain_base, *,
     the fused K-level engine path when co-batched requests have different
     remaining ladder depths.
 
+    ``T_chain`` (optional, per-chain float32 ``(n_blocks*blk,)``) overrides
+    the per-block temperature with one value per chain — the
+    parallel-tempering layout where each chain holds a rung of its
+    request's ladder.  A chain carrying its block's ladder value is
+    bit-identical to the per-block path on both backends (the ref oracle
+    is already per-chain; the Pallas kernel broadcasts either source into
+    the same (blk, 1) accept test).
+
     Returns (x_out (n_blocks*blk, dim), f_out (n_blocks*blk,)).
     """
     from repro.kernels.metropolis_sweep import _validate_kid
     _validate_kid(kids)
     return _metropolis_sweep_slots(
         x, kids, T_blocks, seeds, step0s, chain_base, live=live,
-        n_steps=n_steps,
+        T_chain=T_chain, n_steps=n_steps,
         blk=blk, variant=variant, use_pallas=use_pallas, interpret=interpret)
 
 
@@ -111,7 +119,8 @@ def _metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, chain_base, *,
                             n_steps: int, blk: int,
                             variant: str = "delta",
                             use_pallas: bool = False,
-                            interpret: bool = False, live=None):
+                            interpret: bool = False, live=None,
+                            T_chain=None):
     chains = x.shape[0]
     if chains % blk:
         raise ValueError(
@@ -120,7 +129,7 @@ def _metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, chain_base, *,
         from repro.kernels.metropolis_sweep import metropolis_sweep_pallas as mk
         return mk(x, T_blocks, seeds, step0s, kid=kids, n_steps=n_steps,
                   blk=blk, variant=variant, interpret=interpret,
-                  chain_base=chain_base, live=live)
+                  chain_base=chain_base, live=live, t_chain=T_chain)
     n_blocks = chains // blk
 
     def expand(a):
@@ -132,8 +141,10 @@ def _metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, chain_base, *,
     lane = jnp.tile(jnp.arange(blk, dtype=jnp.uint32), n_blocks)
     cidx = expand(chain_base).astype(jnp.uint32) + lane
     live_c = None if live is None else expand(live)
+    T_eff = expand(T_blocks) if T_chain is None else jnp.asarray(
+        T_chain, x.dtype).reshape(-1)
     return ref_mod.metropolis_sweep_ref(
-        x, expand(T_blocks), expand(seeds), expand(step0s),
+        x, T_eff, expand(seeds), expand(step0s),
         kid=expand(kids), n_steps=n_steps, variant=variant, cidx=cidx,
         live=live_c)
 

@@ -159,25 +159,51 @@ class EngineConfig:
             raise ValueError(f"macro_k must be >= 1, got {self.macro_k}")
 
 
+def _chain_controls(T_blk, seed_blk, base_blk, lvl0, mcode, t_rung, blk: int):
+    """Expand per-block controls to the per-chain arrays the composite
+    exchange consumes: the schedule temperature, the effective sweep
+    temperature (PT chains anneal at their own rung, everyone else at the
+    block's ladder value), the request seed, the logical chain index and
+    the absolute ladder level."""
+    n_blocks = jnp.asarray(T_blk).shape[0]
+    sched = jnp.repeat(T_blk, blk)
+    T_chain = jnp.where(mcode == exch.MCODE_PT, t_rung, sched)
+    seed_c = jnp.repeat(seed_blk, blk)
+    cidx = (jnp.repeat(base_blk, blk).astype(jnp.uint32)
+            + jnp.tile(jnp.arange(blk, dtype=jnp.uint32), n_blocks))
+    lvl_abs = jnp.repeat(lvl0.astype(jnp.uint32), blk)
+    return sched, T_chain, seed_c, cidx, lvl_abs
+
+
 @partial(jax.jit, static_argnames=("n_steps", "blk", "variant",
                                    "use_pallas", "interpret", "num_segments"))
-def _group_tick(x, kid_blk, T_blk, seed_blk, step0_blk, base_blk, seg, adopt,
-                *, n_steps: int, blk: int, variant: str,
+def _group_tick(x, kid_blk, T_blk, seed_blk, step0_blk, base_blk, lvl0_blk,
+                dbeta_blk, seg, adopt, mcode, t_rung, partner, pairlo,
+                seg_lo, seg_hi, *, n_steps: int, blk: int, variant: str,
                 use_pallas: bool, interpret: bool, num_segments: int):
     """One temperature level for one dispatch group, on device.
 
     Sweep every block on its own objective (``kid_blk`` is a runtime
     input — mixed-objective groups share one lowering) at its own
-    temperature, then a segmented champion reduce: chains adopt *their
-    request's* champion iff their request runs sync exchange (``adopt``);
-    the champion is returned for every segment either way so the host can
-    fold best-so-far.
+    temperature — per *chain* when the block belongs to a parallel-
+    tempering tenant (``t_rung``) — then the composite segmented exchange
+    (core/exchange.serving_exchange): champion reduce, sync/sos adoption,
+    PT even/odd swap, PA resample, each masked per workload class so a
+    plain-SA-only batch is bitwise the classic path.  The champion is
+    returned for every segment either way so the host can fold
+    best-so-far.
     """
+    sched, T_chain, seed_c, cidx, lvl_abs = _chain_controls(
+        T_blk, seed_blk, base_blk, lvl0_blk, mcode, t_rung, blk)
     x, fx = ops.metropolis_sweep_slots(
         x, kid_blk, T_blk, seed_blk, step0_blk, base_blk, n_steps=n_steps,
-        blk=blk, variant=variant, use_pallas=use_pallas, interpret=interpret)
-    return exch.exchange_sync_segmented(x, fx, seg, num_segments,
-                                        adopt_mask=adopt)
+        blk=blk, variant=variant, use_pallas=use_pallas, interpret=interpret,
+        T_chain=T_chain)
+    live = jnp.ones(fx.shape, bool)
+    return exch.serving_exchange(
+        x, fx, seg, num_segments, adopt, mcode, t_rung, sched, partner,
+        pairlo, seg_lo, seg_hi, jnp.repeat(dbeta_blk, blk), seed_c, cidx,
+        lvl_abs, live)
 
 
 @partial(jax.jit, static_argnames=("k", "n_steps", "blk", "variant",
@@ -185,50 +211,106 @@ def _group_tick(x, kid_blk, T_blk, seed_blk, step0_blk, base_blk, seg, adopt,
                                    "num_segments"),
          donate_argnums=(0,))
 def _group_tick_fused(x, kid_blk, T_lvls, seed_blk, step0_blk, base_blk,
-                      levels_blk, seg, adopt, *, k: int, n_steps: int,
-                      blk: int, variant: str, use_pallas: bool,
+                      levels_blk, lvl0_blk, dbeta_lvls, seg, adopt, mcode,
+                      t_rung, partner2, pairlo2, seg_lo, seg_hi, *, k: int,
+                      n_steps: int, blk: int, variant: str, use_pallas: bool,
                       interpret: bool, num_segments: int):
     """K temperature levels for one dispatch group, in one device program.
 
     The macro-tick: an on-device ``fori_loop`` over ``k`` iterations of
-    [one-level sweep + segmented champion exchange] — exactly the K=1
+    [one-level sweep + composite segmented exchange] — exactly the K=1
     ``_group_tick`` body K times, so each level's floating-point stream is
     identical to K separate dispatches.  Per-level controls:
 
     * ``T_lvls`` is ``(k, n_blocks)`` — each block's host-precomputed
-      temperature ladder slice, one SMEM row per level;
-    * level ``i`` sweeps with RNG step cursor ``step0 + i*n_steps``;
+      temperature ladder slice, one SMEM row per level — and
+      ``dbeta_lvls`` its PA inverse-temperature increments (0 elsewhere);
+    * level ``i`` sweeps with RNG step cursor ``step0 + i*n_steps`` at
+      absolute ladder level ``lvl0_blk + i`` (the exchange RNG counter);
     * ``levels_blk`` is the per-slot level cursor: blocks whose request
       has fewer than ``k`` planned levels go *dead* (``live = i <
       levels_blk``) — the kernel masks their accepts so state passes
-      through bit-exactly, and the adopt mask keeps their chains out of
-      the exchange.
+      through bit-exactly, and the per-class masks keep their chains out
+      of every exchange stage;
+    * ``partner2`` / ``pairlo2`` are ``(2, chains)``: row ``i % 2`` holds
+      each PT chain's swap partner for that level's even/odd parity
+      (host-precomputed from its own job's absolute level).
 
     Per-level champions come back stacked — ``(k, num_segments)`` values
     and ``(k, num_segments, dim)`` states — for the host to fold level by
-    level (truncating at early finishes).  ``x`` is **donated**: the
-    engine's double buffer ping-pongs between launches, so chain state
-    never round-trips to host while a group's membership is stable.
+    level (truncating at early finishes), plus ``fx_keep``: each chain's
+    post-exchange objective value at its *last live* level (dead
+    iterations re-derive f(x) bitwise differently, so the live value is
+    carried, not recomputed) — the population-annealing ESS controller
+    reads it at the boundary.  ``x`` is **donated**: the engine's double
+    buffer ping-pongs between launches, so chain state never round-trips
+    to host while a group's membership is stable.
     """
     dim = x.shape[1]
 
     def body(i, carry):
-        x, fb_all, xb_all = carry
+        x, fx_keep, fb_all, xb_all = carry
         live = i < levels_blk                       # (n_blocks,) cursor
         T_i = lax.dynamic_index_in_dim(T_lvls, i, 0, keepdims=False)
+        db_i = lax.dynamic_index_in_dim(dbeta_lvls, i, 0, keepdims=False)
         step0_i = step0_blk + jnp.uint32(n_steps) * i.astype(jnp.uint32)
+        sched, T_chain, seed_c, cidx, lvl_abs = _chain_controls(
+            T_i, seed_blk, base_blk, lvl0_blk + i.astype(jnp.uint32),
+            mcode, t_rung, blk)
         x, fx = ops.metropolis_sweep_slots(
             x, kid_blk, T_i, seed_blk, step0_i, base_blk, n_steps=n_steps,
             blk=blk, variant=variant, use_pallas=use_pallas,
-            interpret=interpret, live=live)
+            interpret=interpret, live=live, T_chain=T_chain)
         live_c = jnp.repeat(live, blk)
-        x, fx, xb, fb = exch.exchange_sync_segmented(
-            x, fx, seg, num_segments, adopt_mask=adopt & live_c)
-        return x, fb_all.at[i].set(fb), xb_all.at[i].set(xb)
+        prt = lax.dynamic_index_in_dim(partner2, i % 2, 0, keepdims=False)
+        plo = lax.dynamic_index_in_dim(pairlo2, i % 2, 0, keepdims=False)
+        x, fx, xb, fb = exch.serving_exchange(
+            x, fx, seg, num_segments, adopt, mcode, t_rung, sched, prt,
+            plo, seg_lo, seg_hi, jnp.repeat(db_i, blk), seed_c, cidx,
+            lvl_abs, live_c)
+        fx_keep = jnp.where(live_c, fx, fx_keep)
+        return x, fx_keep, fb_all.at[i].set(fb), xb_all.at[i].set(xb)
 
     fb0 = jnp.full((k, num_segments), jnp.inf, x.dtype)
     xb0 = jnp.zeros((k, num_segments, dim), x.dtype)
-    return lax.fori_loop(0, k, body, (x, fb0, xb0))
+    fx0 = jnp.zeros((x.shape[0],), x.dtype)
+    return lax.fori_loop(0, k, body, (x, fx0, fb0, xb0))
+
+
+def _pt_partners(n: int, parity: int):
+    """Logical even/odd swap partners for an ``n``-rung PT ladder.
+
+    Parity 0 pairs rungs (0,1)(2,3)…, parity 1 pairs (1,2)(3,4)…; a rung
+    without a partner at this parity (rung 0 on odd passes, the last rung
+    when the count doesn't divide) is its own partner — the device pass
+    treats self-partners as "no swap proposed".  Returns
+    ``(partner int32, pairlo uint32)`` with ``pairlo`` the lower logical
+    rung of each pair — the shared RNG key that makes both partners draw
+    the same accept uniform.
+    """
+    lg = np.arange(n, dtype=np.int64)
+    if parity == 0:
+        p = lg ^ 1
+    else:
+        p = np.where(lg == 0, lg, ((lg - 1) ^ 1) + 1)
+    p = np.where(p < n, p, lg)
+    return p.astype(np.int32), np.minimum(lg, p).astype(np.uint32)
+
+
+def _job_mcode(req: SARequest) -> int:
+    """Per-chain workload-class code (core/exchange) for a request."""
+    if req.method == "pt":
+        return exch.MCODE_PT
+    if req.method == "pa":
+        return exch.MCODE_PA
+    return exch.MCODE_SOS if req.exchange == "sos" else exch.MCODE_PLAIN
+
+
+def _pa_dbeta(t: float, rho: float) -> float:
+    """PA inverse-temperature increment across one cooling step, in
+    float64 host math (cast to f32 at the SMEM boundary): the Boltzmann
+    reweighting exponent between level temperature ``t`` and the next."""
+    return 1.0 / (t * rho) - 1.0 / t
 
 
 class SAServeEngine:
@@ -588,25 +670,57 @@ class SAServeEngine:
         return False
 
     # -------------------------------------------------------- elastic fleet
-    def _record_shrink(self, job: ActiveJob, from_chains: int) -> None:
+    def _record_shrink(self, job: ActiveJob, from_chains: int,
+                       self_driven: bool = False) -> None:
         job.granted_chains = len(job.slots) * self.cfg.chains_per_slot
         job.shrunk_ticks.append(self.tick_count)
-        job.shrink_events.append((job.level, from_chains,
-                                  job.granted_chains))
+        event = (job.level, from_chains, job.granted_chains)
+        # Self-driven (PA ESS) shrinks are re-derived by a standalone
+        # replay from the identical fx stream; recording them apart keeps
+        # the --check oracle from re-applying them as an external schedule.
+        if self_driven:
+            job.pa_shrink_events.append(event)
+        else:
+            job.shrink_events.append(event)
         self.shrinks += 1
         tel = self.telemetry
         if tel.enabled:
-            tel.decision(self.tick_count, "shrink",
+            kind = "pa_shrink" if self_driven else "shrink"
+            tel.decision(self.tick_count, kind,
                          req_id=job.req.req_id, shard=job.home_shard,
                          level=job.level, from_chains=from_chains,
                          to_chains=job.granted_chains)
             if tel.trace is not None:
                 tel.trace.request_instant(
-                    job.req.req_id, "shrink", from_chains=from_chains,
+                    job.req.req_id, kind, from_chains=from_chains,
                     to_chains=job.granted_chains, tick=self.tick_count)
 
+    def _maybe_pa_shrink(self, shard: EngineShard, job: ActiveJob,
+                         fx_job: np.ndarray) -> None:
+        """Population-annealing self-driven width controller.
+
+        At a macro-tick boundary, estimate the effective sample size of
+        the job's population under the *next* level transition's
+        Boltzmann reweighting — ``job.T`` has already advanced, so the
+        increment is ``1/(T·rho) − 1/T`` — and halve the slot footprint
+        when ``ESS/width`` falls below the request's ``pa_ess_ratio``: a
+        concentrated population doesn't need its lanes, and the freed
+        slots go back to admission.  Purely a function of the job's own
+        (bit-exact) fx stream and float64 host math, so a standalone
+        replay re-derives every one of these shrinks at the same levels.
+        """
+        req = job.req
+        if req.method != "pa" or len(job.slots) <= 1:
+            return
+        db = _pa_dbeta(job.T, req.rho)
+        w = np.exp(-db * (fx_job.astype(np.float64) - float(fx_job.min())))
+        ess = float(w.sum()) ** 2 / float((w * w).sum())
+        if ess / fx_job.shape[0] < req.pa_ess_ratio:
+            self._shrink_job(shard, job.rid, max(1, len(job.slots) // 2),
+                             self_driven=True)
+
     def _shrink_job(self, shard: EngineShard, rid: int,
-                    keep_slots: int) -> None:
+                    keep_slots: int, self_driven: bool = False) -> None:
         """Proactive degrade in place: checkpoint, drop the tail blocks,
         restore ``keep_slots`` blocks on the same shard.  Surviving
         chains keep logical indices [0, keep_slots * cps) — their
@@ -622,7 +736,7 @@ class SAServeEngine:
         blocks = shard.pool.checkpoint(rid)[:keep_slots]
         shard.pool.release(rid)
         job.slots = shard.pool.restore(rid, blocks)
-        self._record_shrink(job, from_chains)
+        self._record_shrink(job, from_chains, self_driven=self_driven)
 
     def _shrink_migrate(self, src: EngineShard, rid: int, dst: EngineShard,
                         keep_slots: int) -> None:
@@ -747,11 +861,14 @@ class SAServeEngine:
         (rounded up to whole slots) — the operator/test entry point for
         proactive degrade at a chosen temperature level; the scheduler's
         ``plan_shrinks`` drives the same path.  Returns False if the
-        request is not active or already at/below that width."""
+        request is not active, already at/below that width, or a
+        parallel-tempering job (a PT job's width is its temperature-ladder
+        resolution — truncating it mid-flight would change the method,
+        not just the budget; the scheduler's planners skip PT too)."""
         slots_new = max(1, -(-n_chains // self.cfg.chains_per_slot))
         for shard, job in self._iter_jobs():
             if job.req.req_id == req_id:
-                if slots_new >= len(job.slots):
+                if slots_new >= len(job.slots) or job.req.method == "pt":
                     return False
                 self._shrink_job(shard, job.rid, slots_new)
                 return True
@@ -927,11 +1044,16 @@ class SAServeEngine:
         tel = self.telemetry
         x2, xb, fb = (np.asarray(outs[0]), np.asarray(outs[2]),
                       np.asarray(outs[3]))
+        fxh = (np.asarray(outs[1])
+               if any(j.req.pa_ess_ratio > 0 for j in jobs) else None)
         for b, (s, job) in enumerate(slot_list):
             # Copy: a bare slice would alias (and pin) the whole padded buffer.
             shard.pool.set_block(s, x2[b * cps:(b + 1) * cps].copy())
         finished = []
+        row0 = 0
         for job in jobs:
+            rows = slice(row0, row0 + job.granted_chains)
+            row0 += job.granted_chains
             f = float(fb[job.rid])
             if f < job.best_f:
                 job.best_f = f
@@ -951,6 +1073,8 @@ class SAServeEngine:
             reason = self._finish_reason(job)
             if reason is not None:
                 finished.append((shard, job, reason, self.tick_count))
+            elif fxh is not None:
+                self._maybe_pa_shrink(shard, job, fxh[rows])
         return finished
 
     def _collect_group_fused(self, shard: EngineShard, n_steps: int,
@@ -978,11 +1102,16 @@ class SAServeEngine:
         """
         tel = self.telemetry
         boundary = self.tick_count
-        fb_all = np.asarray(outs[1])    # (K, num_segments) champion values
-        xb_all = np.asarray(outs[2])    # (K, num_segments, dim) champions
+        fb_all = np.asarray(outs[2])    # (K, num_segments) champion values
+        xb_all = np.asarray(outs[3])    # (K, num_segments, dim) champions
+        fxh = (np.asarray(outs[1])      # last-live-level post-exchange fx
+               if any(j.req.pa_ess_ratio > 0 for j in jobs) else None)
         finished = []
         max_counted = 1
+        row0 = 0
         for job in jobs:
+            rows = slice(row0, row0 + job.granted_chains)
+            row0 += job.granted_chains
             if job.first_tick < 0:
                 job.first_tick = boundary
                 job.first_tick_wall = self._now()
@@ -1009,7 +1138,49 @@ class SAServeEngine:
             max_counted = max(max_counted, counted)
             if reason is not None:
                 finished.append((shard, job, reason, boundary + counted - 1))
+            elif fxh is not None:
+                self._maybe_pa_shrink(shard, job, fxh[rows])
         return finished, max_counted
+
+    def _pack_class_controls(self, jobs: List[ActiveJob], n_padded: int,
+                             n_parities: int):
+        """Per-chain workload-class arrays for one packed group.
+
+        A request's chains are contiguous in the packed buffer in logical
+        chain order (``slot_list`` enumerates each job's slots in grant
+        order), so PT partner rows and PA segment ranges are just offsets
+        from the job's first packed row.  Defaults are the identity for
+        every stage of the composite exchange: plain code, self-partner,
+        self-range — pad blocks and plain-SA tenants pass through bitwise
+        untouched.  ``n_parities`` rows of partners are built (1 for the
+        K=1 path, 2 for the fused path's even/odd alternation); row ``j``
+        holds each chain's partner at the parity of its own job's
+        ``level + j``.
+        """
+        cps = self.cfg.chains_per_slot
+        nc = n_padded * cps
+        rows = np.arange(nc, dtype=np.int32)
+        mcode = np.zeros((nc,), np.int8)
+        t_rung = np.ones((nc,), np.float32)
+        partner = np.tile(rows, (n_parities, 1))
+        pairlo = np.zeros((n_parities, nc), np.uint32)
+        seg_lo = rows.copy()
+        seg_hi = rows + 1
+        row0 = 0
+        for job in jobs:
+            n = job.granted_chains
+            mcode[row0:row0 + n] = _job_mcode(job.req)
+            if job.req.method == "pt":
+                t_rung[row0:row0 + n] = job.req.pt_rungs(n)
+                for j in range(n_parities):
+                    prt, plo = _pt_partners(n, (job.level + j) % 2)
+                    partner[j, row0:row0 + n] = row0 + prt
+                    pairlo[j, row0:row0 + n] = plo
+            elif job.req.method == "pa":
+                seg_lo[row0:row0 + n] = row0
+                seg_hi[row0:row0 + n] = row0 + n
+            row0 += n
+        return mcode, t_rung, partner, pairlo, seg_lo, seg_hi
 
     def _launch_group_fused(self, shard: EngineShard, dim: int, n_steps: int,
                             jobs: List[ActiveJob]):
@@ -1052,26 +1223,33 @@ class SAServeEngine:
 
         kid_blk = np.empty((n_padded,), np.int32)
         T_lvls = np.empty((K, n_padded), np.float32)
+        dbeta_lvls = np.zeros((K, n_padded), np.float32)
         seed_blk = np.empty((n_padded,), np.uint32)
         step0_blk = np.empty((n_padded,), np.uint32)
         base_blk = np.empty((n_padded,), np.uint32)
         levels_blk = np.empty((n_padded,), np.int32)
+        lvl0_blk = np.zeros((n_padded,), np.uint32)
         seg = np.empty((n_padded * cps,), np.int32)
         adopt = np.empty((n_padded * cps,), bool)
         for b, (s, job) in enumerate(slot_list):
             kid_blk[b] = np.int32(job.req.kid)
+            is_pa = job.req.method == "pa"
             t = job.T
             for i in range(K):
                 # float64 iteration, f32 per level — identical to K=1's
                 # pack-then-advance of the float ``job.T`` cursor.
                 T_lvls[i, b] = t
+                if is_pa:
+                    dbeta_lvls[i, b] = _pa_dbeta(t, job.req.rho)
                 t *= job.req.rho
             seed_blk[b] = np.uint32(job.req.seed)
             step0_blk[b] = np.uint32(job.steps_done)
             base_blk[b] = shard.pool.chain_base[s]
             levels_blk[b] = planned[job.rid]
+            lvl0_blk[b] = np.uint32(job.level)
             seg[b * cps:(b + 1) * cps] = job.rid
-            adopt[b * cps:(b + 1) * cps] = job.req.exchange == "sync"
+            adopt[b * cps:(b + 1) * cps] = (job.req.method == "sa"
+                                            and job.req.exchange == "sync")
         for b in range(n_blocks, n_padded):
             # Pad blocks are *dead* (zero planned levels): pure
             # pass-through, so whatever a reused buffer holds in its pad
@@ -1084,6 +1262,8 @@ class SAServeEngine:
             levels_blk[b] = 0
             seg[b * cps:(b + 1) * cps] = self.cfg.n_slots
             adopt[b * cps:(b + 1) * cps] = False
+        mcode, t_rung, partner2, pairlo2, seg_lo, seg_hi = \
+            self._pack_class_controls(jobs, n_padded, 2)
 
         dev = shard.device
 
@@ -1105,12 +1285,13 @@ class SAServeEngine:
                 x[b * cps:(b + 1) * cps] = x[:cps]
             x_dev = jax.device_put(x, dev)
 
-        # One batched transfer for all control arrays: eight separate
+        # One batched transfer for all control arrays: separate
         # device_put dispatches were the dominant per-launch host cost
         # once the state buffer started cache-hitting.
         ctrl = jax.device_put(
             (kid_blk, T_lvls, seed_blk, step0_blk, base_blk, levels_blk,
-             seg, adopt), dev)
+             lvl0_blk, dbeta_lvls, seg, adopt, mcode, t_rung, partner2,
+             pairlo2, seg_lo, seg_hi), dev)
         outs = _group_tick_fused(
             x_dev, *ctrl,
             k=K, n_steps=n_steps, blk=cps, variant=self.cfg.variant,
@@ -1145,20 +1326,26 @@ class SAServeEngine:
         x = np.empty((n_padded * cps, dim), np.float32)
         kid_blk = np.empty((n_padded,), np.int32)
         T_blk = np.empty((n_padded,), np.float32)
+        dbeta_blk = np.zeros((n_padded,), np.float32)
         seed_blk = np.empty((n_padded,), np.uint32)
         step0_blk = np.empty((n_padded,), np.uint32)
         base_blk = np.empty((n_padded,), np.uint32)
+        lvl0_blk = np.zeros((n_padded,), np.uint32)
         seg = np.empty((n_padded * cps,), np.int32)
         adopt = np.empty((n_padded * cps,), bool)
         for b, (s, job) in enumerate(slot_list):
             x[b * cps:(b + 1) * cps] = shard.pool.get_block(s)
             kid_blk[b] = np.int32(job.req.kid)
             T_blk[b] = job.T
+            if job.req.method == "pa":
+                dbeta_blk[b] = _pa_dbeta(job.T, job.req.rho)
             seed_blk[b] = np.uint32(job.req.seed)
             step0_blk[b] = np.uint32(job.steps_done)
             base_blk[b] = shard.pool.chain_base[s]
+            lvl0_blk[b] = np.uint32(job.level)
             seg[b * cps:(b + 1) * cps] = job.rid
-            adopt[b * cps:(b + 1) * cps] = job.req.exchange == "sync"
+            adopt[b * cps:(b + 1) * cps] = (job.req.method == "sa"
+                                            and job.req.exchange == "sync")
         # Dummy pad blocks: replicate block 0, claim the reserved segment
         # n_slots, never adopt. They cost lanes, not correctness.
         for b in range(n_blocks, n_padded):
@@ -1170,6 +1357,8 @@ class SAServeEngine:
             base_blk[b] = base_blk[0]
             seg[b * cps:(b + 1) * cps] = self.cfg.n_slots
             adopt[b * cps:(b + 1) * cps] = False
+        mcode, t_rung, partner, pairlo, seg_lo, seg_hi = \
+            self._pack_class_controls(jobs, n_padded, 1)
 
         # Committed transfers pin the group's program to the shard's mesh
         # device.  The call returns device arrays without blocking; the
@@ -1181,8 +1370,10 @@ class SAServeEngine:
 
         outs = _group_tick(
             put(x), put(kid_blk), put(T_blk), put(seed_blk), put(step0_blk),
-            put(base_blk), put(seg), put(adopt), n_steps=n_steps, blk=cps,
-            variant=self.cfg.variant, use_pallas=self._use_pallas,
+            put(base_blk), put(lvl0_blk), put(dbeta_blk), put(seg),
+            put(adopt), put(mcode), put(t_rung), put(partner[0]),
+            put(pairlo[0]), put(seg_lo), put(seg_hi), n_steps=n_steps,
+            blk=cps, variant=self.cfg.variant, use_pallas=self._use_pallas,
             interpret=self.cfg.interpret,
             num_segments=self.cfg.n_slots + 1)
         return shard, n_steps, jobs, slot_list, outs
@@ -1225,7 +1416,8 @@ class SAServeEngine:
             home_shard=job.home_shard,
             migrated_ticks=list(job.migrated_ticks),
             shrunk_ticks=list(job.shrunk_ticks),
-            shrink_events=list(job.shrink_events)))
+            shrink_events=list(job.shrink_events),
+            pa_shrink_events=list(job.pa_shrink_events)))
         shard.pool.release(job.rid)
         shard.rids.free(job.rid)
         tel = self.telemetry

@@ -14,10 +14,19 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.core.exchange import EXCHANGES
 from repro.kernels import objective_math as om
 
 #: Objectives servable by the engine: the Pallas kernel registry.
 SERVABLE = tuple(sorted(om.KID_BY_NAME))
+
+#: Annealing method (workload class) per request:
+#: ``sa`` — plain parallel SA (the paper's V1/V2, per ``exchange``);
+#: ``pt`` — parallel tempering: each chain holds one rung of the request's
+#:   temperature ladder, with an even/odd replica-swap pass every level;
+#: ``pa`` — population annealing: Boltzmann resampling of the chain
+#:   population at every temperature-level transition.
+METHODS = ("sa", "pt", "pa")
 
 #: Per-request overload policies (see scheduler.py): what the scheduler may
 #: do with/for this request when the pool is saturated.  ``None`` on a
@@ -49,7 +58,15 @@ class SARequest:
     N: int = 50                 # Metropolis steps per temperature level
     seed: int = 0               # RNG stream seed (placement-invariant)
     priority: int = 0           # higher = served sooner (aged for fairness)
-    exchange: str = "sync"      # 'sync' (paper V2) | 'async' (paper V1)
+    method: str = "sa"          # workload class: 'sa' | 'pt' | 'pa'
+    exchange: str = "sync"      # 'sync' (paper V2) | 'async' (paper V1) |
+                                # 'sos' (Onbasoglu–Özdamar stochastic);
+                                # ignored for method 'pt'/'pa' (replica
+                                # swap / resampling replaces adoption)
+    pa_ess_ratio: float = 0.0   # method 'pa' only: if > 0, halve the
+                                # population width whenever the effective
+                                # sample size falls below ratio*width
+                                # (self-driven shrink schedule)
     target_error: Optional[float] = None  # stop early once best_f - f_opt <= this
     max_evals: Optional[int] = None       # objective-evaluation budget cap
     # ---- SLO / admission-control fields (see scheduler.py) ----
@@ -71,8 +88,15 @@ class SARequest:
             raise ValueError("dim, n_chains and N must be positive")
         if not (0.0 < self.rho < 1.0) or self.T_min <= 0 or self.T0 <= self.T_min:
             raise ValueError("need T0 > T_min > 0 and 0 < rho < 1")
-        if self.exchange not in ("sync", "async"):
-            raise ValueError("exchange must be 'sync' or 'async'")
+        if self.exchange not in EXCHANGES:
+            raise ValueError(
+                f"exchange must be one of {tuple(sorted(EXCHANGES))}")
+        if self.method not in METHODS:
+            raise ValueError(f"method must be one of {METHODS}")
+        if not (0.0 <= self.pa_ess_ratio < 1.0):
+            raise ValueError("need 0 <= pa_ess_ratio < 1")
+        if self.pa_ess_ratio > 0.0 and self.method != "pa":
+            raise ValueError("pa_ess_ratio requires method 'pa'")
         if self.deadline is not None and self.deadline < 0:
             raise ValueError("deadline must be >= 0 ticks")
         if self.min_chains is not None and not (
@@ -108,6 +132,21 @@ class SARequest:
         r = np.random.default_rng(self.seed)
         return (lo + r.random((n_chains, self.dim), dtype=np.float32)
                 * (hi - lo)).astype(np.float32)
+
+    def pt_rungs(self, n_chains: int) -> np.ndarray:
+        """Parallel-tempering rung temperatures for a granted width.
+
+        A geometric ladder T_l = T0 * (T_min/T0)^(l/(n-1)) from the
+        hottest rung (chain 0, T0) to the coldest (T_min), computed in
+        float64 host math and cast once to f32 — serving and standalone
+        replay the identical array, whatever width was granted.
+        """
+        n = max(1, int(n_chains))
+        if n == 1:
+            return np.asarray([self.T_min], np.float32)
+        frac = np.arange(n, dtype=np.float64) / (n - 1)
+        return np.asarray(self.T0 * (self.T_min / self.T0) ** frac,
+                          np.float64).astype(np.float32)
 
 
 @dataclasses.dataclass
@@ -168,6 +207,12 @@ class RequestResult:
     # 'before' entry (or granted_chains when the job never shrank).
     shrunk_ticks: List[int] = dataclasses.field(default_factory=list)
     shrink_events: List[tuple] = dataclasses.field(default_factory=list)
+    # ---- population-annealing metadata ----
+    # Self-driven ESS shrinks (same (level, before, after) shape as
+    # shrink_events) are recorded separately: they are *reproduced* by a
+    # standalone replay from the identical fx stream, so the bit-exactness
+    # oracle must not re-apply them as an external shrink schedule.
+    pa_shrink_events: List[tuple] = dataclasses.field(default_factory=list)
 
     # ---- derived status ----
     @property
@@ -200,9 +245,16 @@ class RequestResult:
 
     @property
     def admitted_chains(self) -> int:
-        """Chains granted at admission (before any mid-flight shrink)."""
-        if self.shrink_events:
-            return int(self.shrink_events[0][1])
+        """Chains granted at admission (before any mid-flight shrink).
+
+        The widest 'before' across scheduler *and* PA self-shrinks: either
+        list alone understates the admission width when the first shrink
+        came from the other mechanism.
+        """
+        befores = [int(e[1]) for e in self.shrink_events]
+        befores += [int(e[1]) for e in self.pa_shrink_events]
+        if befores:
+            return max([self.granted_chains] + befores)
         return self.granted_chains
 
     # ---- derived latencies: tick clock (deterministic) ----
@@ -261,6 +313,7 @@ class RequestResult:
             "n_migrations": self.n_migrations,
             "shrunk_ticks": list(self.shrunk_ticks),
             "shrink_events": [list(e) for e in self.shrink_events],
+            "pa_shrink_events": [list(e) for e in self.pa_shrink_events],
             "n_shrinks": self.n_shrinks,
             "admitted_chains": self.admitted_chains,
             "arrival_time": self.arrival_time,

@@ -272,6 +272,17 @@ class AdmissionScheduler:
         return req.on_overload if req.on_overload is not None \
             else self.cfg.overload
 
+    def _degradable(self, job) -> bool:
+        """Mid-flight width-shrinkable: degrade-class, and not parallel
+        tempering — a PT job's width *is* its temperature-ladder
+        resolution, so truncating it in place would change the method
+        rather than the budget (PA jobs stay shrinkable; their resampling
+        composes with any width schedule).  Admission-time degrade is
+        unaffected: granting a PT request fewer chains up front just
+        builds a coarser ladder from level 0."""
+        return (self.overload_policy(job.req) == "degrade"
+                and job.req.method != "pt")
+
     def deadline_of(self, req: SARequest) -> Optional[float]:
         return req.deadline if req.deadline is not None \
             else self.cfg.default_deadline
@@ -427,7 +438,7 @@ class AdmissionScheduler:
                 continue
             floor = job.req.slots_floor(chains_per_slot)
             roomiest = min(free, key=lambda i: (-free[i], i))
-            if (self.overload_policy(job.req) == "degrade"
+            if (self._degradable(job)
                     and floor <= free[roomiest] and floor < width):
                 keep = min(free[roomiest], width - 1)
                 actions.append(("shrink", job.rid, src, roomiest, keep))
@@ -527,7 +538,7 @@ class AdmissionScheduler:
             for job in view.active:
                 floor = job.req.slots_floor(chains_per_slot)
                 eff = self.effective_priority(job.req, job.submit_tick, tick)
-                if (self.overload_policy(job.req) == "degrade"
+                if (self._degradable(job)
                         and len(job.slots) > floor and eff < head_eff):
                     cands.append((eff, floor - len(job.slots), job.rid,
                                   job, floor))

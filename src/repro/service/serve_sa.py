@@ -53,7 +53,11 @@ _EPILOG = """\
 flag groups:
   load shape      --requests (mix size), --max-slots-per-req (request
                   footprint), --seed (mix generator: objectives, dims,
-                  schedules, priorities are all derived from it).
+                  schedules, priorities are all derived from it),
+                  --method sa | pt | pa | mixed (workload class of the
+                  mix; 'mixed' rotates all three through the same slot
+                  pool — see the workload-class section of
+                  docs/serving.md).
   pool shape      --slots (pool size PER SHARD), --chains-per-slot (kernel
                   block size; multiple of 8 on TPU), --variant (delta =
                   O(1) incremental evaluation, full = paper-faithful
@@ -131,18 +135,27 @@ See docs/serving.md.
 
 
 def make_mix(n_requests: int, chains_per_slot: int, seed: int = 0,
-             max_slots_per_req: int = 2) -> list:
-    """Deterministic heterogeneous request list for load generation."""
+             max_slots_per_req: int = 2, method: str = "sa") -> list:
+    """Deterministic heterogeneous request list for load generation.
+
+    ``method`` picks the workload class for every request ('sa', 'pt',
+    'pa') or 'mixed' for a deterministic sa/pt/pa rotation — the
+    co-batching stressor: all three classes share slots, device programs
+    and the bit-exactness oracle.  PA requests get an ESS-driven width
+    schedule (pa_ess_ratio=0.5) so the self-shrink path is exercised.
+    """
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n_requests):
         obj, dim = MIX_PROBLEMS[i % len(MIX_PROBLEMS)]
         sched = MIX_SCHEDULES[i % len(MIX_SCHEDULES)]
         n_slots_i = 1 + int(rng.integers(0, max_slots_per_req))
+        m = ("sa", "pt", "pa")[i % 3] if method == "mixed" else method
         reqs.append(SARequest(
             req_id=i, objective=obj, dim=dim,
             n_chains=n_slots_i * chains_per_slot,
             seed=seed * 1000 + i, priority=int(rng.integers(0, 3)),
+            method=m, pa_ess_ratio=0.5 if m == "pa" else 0.0,
             **sched))
     return reqs
 
@@ -211,6 +224,15 @@ def main(argv=None):
                          "min_chains) when the queue head fits nowhere")
     ap.add_argument("--shrink-budget", type=int, default=1,
                     help="max proactive shrinks per tick")
+    ap.add_argument("--method", default="sa",
+                    choices=["sa", "pt", "pa", "mixed"],
+                    help="workload class for the synthetic mix: plain SA, "
+                         "parallel tempering (chains hold rungs of the "
+                         "request's temperature ladder with even/odd "
+                         "replica swaps each level), population annealing "
+                         "(per-level Boltzmann resampling, ESS-driven "
+                         "width), or a deterministic sa/pt/pa rotation "
+                         "co-batched in the same slot pool")
     ap.add_argument("--variant", default="delta", choices=["delta", "full"],
                     help="objective evaluation: O(1) delta or O(dim) full")
     ap.add_argument("--seed", type=int, default=0,
@@ -308,7 +330,8 @@ def main(argv=None):
             engine.drain(target)
         engine.schedule_op(args.drain_at, _drain)
     reqs = make_mix(args.requests, args.chains_per_slot, seed=args.seed,
-                    max_slots_per_req=min(args.max_slots_per_req, args.slots))
+                    max_slots_per_req=min(args.max_slots_per_req, args.slots),
+                    method=args.method)
     arrivals = make_arrivals(reqs, args.arrivals, args.rate,
                              args.arrival_seed, burst=args.burst)
 
@@ -380,6 +403,7 @@ def main(argv=None):
                 "low_watermark": args.low_watermark,
                 "proactive_degrade": args.proactive_degrade,
                 "shrink_budget": args.shrink_budget,
+                "method": args.method,
                 "variant": args.variant, "policy": args.policy,
                 "overload_policy": args.overload_policy,
                 "deadline": args.deadline,

@@ -104,6 +104,11 @@ class ActiveJob:
     # indices [0, to_chains), so only the width schedule matters).
     shrunk_ticks: List[int] = dataclasses.field(default_factory=list)
     shrink_events: List[tuple] = dataclasses.field(default_factory=list)
+    # Population-annealing ESS shrinks, same (level, from, to) shape but
+    # kept apart from ``shrink_events``: a standalone replay re-derives
+    # them from the identical fx stream, so the bit-exactness oracle must
+    # not feed them back in as an external shrink schedule.
+    pa_shrink_events: List[tuple] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass

@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import SAConfig, sa_minimize
 from repro.core import exchange as exch
@@ -25,6 +26,39 @@ def test_sync_exchange_broadcasts_champion():
     x2, f2 = exch.exchange_sync(key, x, fx, 1.0)
     assert bool(jnp.all(f2 == fx[0]))
     assert bool(jnp.all(x2 == x[0]))
+
+
+def test_sos_adopt_prob_three_regimes():
+    """The SOS acceptance formula (Salazar & Toral's stochastic-on-
+    stochastic rule) has three regimes, pinned exactly:
+
+    * tie with the champion -> adopt with probability exactly 1/2;
+    * worse by more than T  -> adopt with probability exactly 1;
+    * worse by 0 < d <= T   -> interpolated, 1 - exp(-d/T)/2 in
+      (1/2, 1 - 1/(2e)], strictly increasing in d.
+
+    The pre-fix formula collapsed the middle regime onto the endpoints,
+    so a chain marginally worse than the champion adopted far too often.
+    """
+    fb = jnp.asarray(3.0)
+    T = 2.0
+    tie = exch.sos_adopt_prob(jnp.asarray(3.0), fb, T)
+    assert float(tie) == 0.5
+    far = exch.sos_adopt_prob(jnp.asarray(3.0 + 2.001), fb, T)
+    assert float(far) == 1.0
+    at_T = exch.sos_adopt_prob(jnp.asarray(3.0 + 2.0), fb, T)
+    assert float(at_T) == pytest.approx(1.0 - 0.5 / np.e)  # boundary inclusive
+    # better-than-champion clamps d to 0 -> the tie probability
+    better = exch.sos_adopt_prob(jnp.asarray(-10.0), fb, T)
+    assert float(better) == 0.5
+    d = jnp.linspace(1e-4, 2.0, 64)
+    mid = exch.sos_adopt_prob(fb + d, fb, T)
+    assert float(mid.min()) > 0.5
+    assert float(mid.max()) <= 1.0 - 0.5 / np.e + 1e-7
+    assert np.all(np.diff(np.asarray(mid)) > 0), "not monotone in d"
+    np.testing.assert_allclose(np.asarray(mid),
+                               1.0 - 0.5 * np.exp(-np.asarray(d) / T),
+                               rtol=1e-6)
 
 
 def test_sos_exchange_preserves_diversity():

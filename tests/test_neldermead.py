@@ -43,6 +43,31 @@ def test_nm_converged_flag():
     assert res.n_iters < 5000
 
 
+def test_hybrid_result_coherent_when_nm_ends_worse():
+    """Regression: NM can terminate on a worse simplex than its SA seed
+    (iteration cap, degenerate geometry).  HybridResult must then report
+    BOTH x_best and f_best from the SA stage — never SA's f with NM's x.
+    """
+    from repro.core.annealing import SAResult
+    from repro.core.hybrid import HybridResult
+    from repro.core.neldermead import NMResult
+
+    x_sa = np.array([1.0, 2.0], np.float32)
+    x_nm = np.array([9.0, 9.0], np.float32)
+    sa = SAResult(x_best=x_sa, f_best=0.5, history_f=None, n_evals=10,
+                  config=SAConfig(T0=1.0, T_min=0.5, rho=0.5, N=1),
+                  objective_name="t")
+    nm = NMResult(x_best=x_nm, f_best=0.7, n_iters=3, converged=False)
+    hyb = HybridResult(sa=sa, nm=nm)
+    assert hyb.f_best == 0.5
+    np.testing.assert_array_equal(hyb.x_best, x_sa)
+    # NM at least as good (the normal case, ties go to NM's polish)
+    nm2 = NMResult(x_best=x_nm, f_best=0.5, n_iters=3, converged=True)
+    hyb2 = HybridResult(sa=sa, nm=nm2)
+    assert hyb2.f_best == 0.5
+    np.testing.assert_array_equal(hyb2.x_best, x_nm)
+
+
 def test_hybrid_improves_on_premature_sa():
     """Paper Table 10's claim at reduced scale."""
     obj = F.schwefel(16)

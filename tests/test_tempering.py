@@ -1,0 +1,339 @@
+"""Replica-exchange workload classes: parallel tempering + population
+annealing (tentpole gate for the PT/PA co-batching PR).
+
+Three layers of differential evidence, mirroring test_macro_tick.py:
+
+* operator units — the even/odd PT partner maps, the deterministic
+  direction of the Metropolis swap test, and PA's integer-quantized
+  Boltzmann resampling (champion weight is exact, off-class rows are
+  untouched bit-for-bit);
+* serving differentials — PT and PA tenants co-batched with plain SA
+  (sync and SOS exchange) in ONE fused device program must be bit-equal
+  across macro-tick K, across preemption/drain/resize, and against the
+  ``run_standalone`` oracle (placement invariance: all class RNG draws
+  key on logical chain / pair indices, never packed rows);
+* policy — PT jobs are never width-shrunk mid-flight (a PT job's width
+  IS its temperature-ladder resolution), while PA jobs self-shrink on
+  ESS collapse and the oracle re-derives those shrinks from the same fx
+  stream rather than replaying them as an external schedule.
+"""
+import dataclasses
+from types import SimpleNamespace
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import exchange as exch
+from repro.service import (EngineConfig, SARequest, SAServeEngine,
+                           run_standalone)
+from repro.service.engine import _pa_dbeta, _pt_partners
+from repro.service.scheduler import (AdmissionScheduler,
+                                     SchedulerConfig)
+
+CPS = 8
+
+
+def _req(req_id, objective="rastrigin", **kw):
+    kw.setdefault("dim", 4)
+    kw.setdefault("n_chains", CPS)
+    kw.setdefault("T0", 50.0)
+    kw.setdefault("T_min", 1.0)
+    kw.setdefault("rho", 0.8)      # 18-level ladder
+    kw.setdefault("N", 10)
+    return SARequest(req_id=req_id, objective=objective,
+                     seed=100 + req_id, **kw)
+
+
+def _cfg(k=1, n_devices=1, **kw):
+    kw.setdefault("n_slots", 4)
+    return EngineConfig(chains_per_slot=CPS, n_devices=n_devices,
+                        macro_k=k, use_pallas=False, **kw)
+
+
+#: All three workload classes plus both SA exchange flavours in one pool:
+#: a 2-slot PT tenant (16-rung ladder spanning two blocks), a PA tenant,
+#: an SOS tenant and a plain sync tenant — 5 blocks, so the fused path
+#: also sees a pad block.
+MIX = [
+    dict(objective="rastrigin", method="pt"),
+    dict(objective="ackley", dim=8, method="pa"),
+    dict(objective="schwefel", exchange="sos"),
+    dict(objective="griewank", n_chains=2 * CPS, method="pt"),
+    dict(objective="rastrigin", dim=8),
+]
+
+
+def _mix(**extra):
+    return [_req(i, **{**kw, **extra}) for i, kw in enumerate(MIX)]
+
+
+def _serve(reqs, k, n_devices=2, ops=None, **cfg_kw):
+    cfg = _cfg(k=k, n_devices=n_devices, **cfg_kw)
+    engine = SAServeEngine(cfg)
+    for r in reqs:
+        engine.submit(r)
+    if ops is not None:
+        ops(engine)
+    results = {r.req_id: r for r in engine.run(max_ticks=2000)}
+    return results, engine, cfg
+
+
+def _assert_bit_equal(a, b, *, ticks=True):
+    assert a.keys() == b.keys()
+    for rid in a:
+        ra, rb = a[rid], b[rid]
+        assert ra.champion_history == rb.champion_history, rid
+        assert ra.f_best == rb.f_best, rid
+        np.testing.assert_array_equal(ra.x_best, rb.x_best)
+        assert ra.finish_reason == rb.finish_reason, rid
+        assert ra.levels_run == rb.levels_run, rid
+        assert ra.n_evals == rb.n_evals, rid
+        if ticks:
+            assert ra.finish_tick == rb.finish_tick, rid
+            assert ra.first_tick == rb.first_tick, rid
+
+
+# ------------------------------------------------------- operator units
+def test_pt_partner_maps():
+    """Even/odd alternation: parity 0 pairs (0,1)(2,3)…; parity 1 leaves
+    rung 0 alone and pairs (1,2)(3,4)…; out-of-range partners are self."""
+    p0, lo0 = _pt_partners(8, 0)
+    assert p0.tolist() == [1, 0, 3, 2, 5, 4, 7, 6]
+    assert lo0.tolist() == [0, 0, 2, 2, 4, 4, 6, 6]
+    p1, lo1 = _pt_partners(8, 1)
+    assert p1.tolist() == [0, 2, 1, 4, 3, 6, 5, 7]
+    assert lo1.tolist() == [0, 1, 1, 3, 3, 5, 5, 7]
+    # odd ladder: the dangling top rung is its own partner at parity 0
+    p0o, _ = _pt_partners(5, 0)
+    assert p0o.tolist() == [1, 0, 3, 2, 4]
+    # the map is an involution (partner of my partner is me)
+    for p in (p0, p1, p0o):
+        assert p[p].tolist() == list(range(len(p)))
+
+
+def test_pt_swap_deterministic_directions_and_symmetry():
+    """log_a >= 0 (lower energy sitting at the hotter rung) accepts with
+    probability exactly 1; a huge unfavourable gap clips to exp(-80) and
+    rejects under the fixed counter-based draw.  Accepted pairs exchange
+    states symmetrically — both rows gather from the pre-swap arrays."""
+    n = 8
+    t_rung = jnp.asarray(np.geomspace(50.0, 1.0, n), jnp.float32)
+    partner, pairlo = _pt_partners(n, 0)
+    seed_c = jnp.full((n,), 7, jnp.uint32)
+    lvl = jnp.full((n,), 3, jnp.uint32)
+    is_pt = jnp.ones((n,), bool)
+    x = jnp.arange(n, dtype=jnp.float32)[:, None] * jnp.ones((1, 3))
+
+    fx_up = jnp.arange(n, dtype=jnp.float32)       # colder rung is worse
+    x2, f2 = exch.pt_swap_segmented(x, fx_up, t_rung, jnp.asarray(partner),
+                                    jnp.asarray(pairlo), seed_c, lvl, is_pt)
+    np.testing.assert_array_equal(np.asarray(f2), np.asarray(fx_up)[partner])
+    np.testing.assert_array_equal(np.asarray(x2), np.asarray(x)[partner])
+
+    fx_dn = jnp.asarray([1e6, 0.0] * (n // 2), jnp.float32)  # hopeless swap
+    x3, f3 = exch.pt_swap_segmented(x, fx_dn, t_rung, jnp.asarray(partner),
+                                    jnp.asarray(pairlo), seed_c, lvl, is_pt)
+    np.testing.assert_array_equal(np.asarray(f3), np.asarray(fx_dn))
+    np.testing.assert_array_equal(np.asarray(x3), np.asarray(x))
+
+    # masked off: bitwise identity even for the favourable configuration
+    x4, f4 = exch.pt_swap_segmented(x, fx_up, t_rung, jnp.asarray(partner),
+                                    jnp.asarray(pairlo), seed_c, lvl,
+                                    jnp.zeros((n,), bool))
+    np.testing.assert_array_equal(np.asarray(f4), np.asarray(fx_up))
+
+
+def test_pa_resample_concentrates_and_masks():
+    """A dbeta large enough that every non-champion weight quantizes to 0
+    makes resampling deterministic: all PA rows adopt the champion.  Rows
+    outside the PA mask pass through bit-exactly."""
+    n = 8
+    seg = jnp.asarray([0] * 4 + [1] * 4, jnp.int32)
+    fx = jnp.asarray([5.0, 1.0, 9.0, 7.0, 3.0, 2.0, 8.0, 4.0], jnp.float32)
+    fb_seg = jnp.asarray([1.0, 2.0, np.inf], jnp.float32)
+    x = jnp.arange(n, dtype=jnp.float32)[:, None] * jnp.ones((1, 2))
+    seg_lo = jnp.asarray([0] * 4 + [4] * 4, jnp.int32)
+    seg_hi = jnp.asarray([4] * 4 + [8] * 4, jnp.int32)
+    dbeta = jnp.full((n,), 50.0, jnp.float32)
+    seed_c = jnp.full((n,), 3, jnp.uint32)
+    cidx = jnp.arange(n, dtype=jnp.uint32)
+    lvl = jnp.full((n,), 2, jnp.uint32)
+    is_pa = seg == 0
+    x2, f2 = exch.pa_resample_segmented(x, fx, fb_seg, seg, seg_lo, seg_hi,
+                                        dbeta, seed_c, cidx, lvl, is_pa)
+    np.testing.assert_array_equal(np.asarray(f2)[:4], np.full(4, 1.0))
+    np.testing.assert_array_equal(np.asarray(x2)[:4],
+                                  np.broadcast_to(np.asarray(x)[1], (4, 2)))
+    np.testing.assert_array_equal(np.asarray(f2)[4:], np.asarray(fx)[4:])
+    np.testing.assert_array_equal(np.asarray(x2)[4:], np.asarray(x)[4:])
+
+
+def test_pa_dbeta_and_rungs():
+    """dbeta is the inverse-temperature increment of one cooling step
+    (beta' - beta at T' = rho*T), computed in float64; pt_rungs spans
+    [T0, T_min] geometrically with the endpoints exact."""
+    assert _pa_dbeta(2.0, 0.8) == pytest.approx(1 / 1.6 - 1 / 2.0)
+    r = _req(0, method="pt").pt_rungs(16)
+    assert r.shape == (16,) and r.dtype == np.float32
+    assert r[0] == np.float32(50.0) and r[-1] == np.float32(1.0)
+    assert np.all(np.diff(r) < 0)
+    assert _req(0).pt_rungs(1).tolist() == [np.float32(1.0)]
+
+
+def test_per_chain_temperature_sweep_paths_agree():
+    """The per-chain temperature column (PT's rung layout) must be
+    bitwise inert when it merely repeats the per-block schedule, and the
+    Pallas kernel (interpret mode) must match the jnp oracle when the
+    column carries a real ladder."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    blk, n_blocks = 8, 3
+    x = rng.standard_normal((n_blocks * blk, 5)).astype(np.float32)
+    kids = np.asarray([0, 1, 2], np.int32)
+    T_blocks = np.asarray([5.0, 2.0, 1.0], np.float32)
+    seeds = np.asarray([11, 22, 33], np.uint32)
+    step0s = np.zeros(3, np.uint32)
+    base = np.asarray([0, 0, 8], np.uint32)
+    kw = dict(n_steps=4, blk=blk)
+    a = ops.metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, base,
+                                   use_pallas=False, **kw)
+    b = ops.metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, base,
+                                   use_pallas=False,
+                                   T_chain=np.repeat(T_blocks, blk), **kw)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    ladder = np.geomspace(5.0, 0.5, n_blocks * blk).astype(np.float32)
+    c = ops.metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, base,
+                                   use_pallas=False, T_chain=ladder, **kw)
+    d = ops.metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, base,
+                                   use_pallas=True, interpret=True,
+                                   T_chain=ladder, **kw)
+    np.testing.assert_array_equal(np.asarray(c[0]), np.asarray(d[0]))
+    np.testing.assert_array_equal(np.asarray(c[1]), np.asarray(d[1]))
+    assert not np.array_equal(np.asarray(c[1]), np.asarray(a[1]))
+
+
+# ------------------------------------------------------ request plumbing
+def test_request_validation():
+    with pytest.raises(ValueError, match="exchange"):
+        _req(0, exchange="bogus")
+    with pytest.raises(ValueError, match="method"):
+        _req(0, method="tempering")
+    with pytest.raises(ValueError, match="pa_ess_ratio"):
+        _req(0, pa_ess_ratio=0.5)          # needs method='pa'
+    with pytest.raises(ValueError):
+        _req(0, method="pa", pa_ess_ratio=1.0)
+    assert sorted(exch.EXCHANGES) == ["async", "sos", "sync"]
+
+
+def test_pt_jobs_are_not_degradable_mid_flight():
+    """The scheduler's shrink planners must skip PT tenants even under a
+    degrade overload policy; PA and plain SA stay shrinkable."""
+    sched = AdmissionScheduler(SchedulerConfig(overload="degrade"))
+    job = lambda m: SimpleNamespace(req=_req(0, method=m))  # noqa: E731
+    assert not sched._degradable(job("pt"))
+    assert sched._degradable(job("pa"))
+    assert sched._degradable(job("sa"))
+
+
+# --------------------------------------------------- serving differentials
+@pytest.mark.parametrize("k", (1, 4))
+def test_cobatched_classes_bit_exact_vs_standalone(k):
+    """The headline gate: PT + PA + SOS + sync tenants in one fused
+    program, every champion bit-equal to its standalone single-tenant
+    run, at K=1 and K=4."""
+    served, _, cfg = _serve(_mix(), k=k)
+    for req in _mix():
+        solo = run_standalone(req, cfg)
+        assert served[req.req_id].f_best == solo.f_best, req.req_id
+        assert served[req.req_id].champion_history == \
+            solo.champion_history, req.req_id
+        np.testing.assert_array_equal(served[req.req_id].x_best, solo.x_best)
+
+
+def test_fused_k_matches_k1():
+    base, _, _ = _serve(_mix(), k=1)
+    fused, _, _ = _serve(_mix(), k=4)
+    _assert_bit_equal(base, fused)
+
+
+@pytest.mark.parametrize("k", (1, 4))
+def test_classes_survive_preempt_resize_drain(k):
+    """Operator actions at K-aligned ticks: the preempted tenant is a PT
+    job (checkpoint must carry rung states), the fleet resizes and a
+    shard drains mid-stream — still bit-equal to K=1 and the oracle."""
+    def ops(engine):
+        engine.schedule_op(8, lambda: engine.preempt(0))
+        engine.schedule_op(8, lambda: engine.resize(3))
+        engine.schedule_op(16, lambda: engine.drain(1))
+
+    base, _, _ = _serve(_mix(), k=1, ops=ops)
+    fused, _, cfg = _serve(_mix(), k=k, ops=ops)
+    _assert_bit_equal(base, fused)
+    for req in _mix():
+        res = fused[req.req_id]
+        sched = [(lvl, to) for lvl, _frm, to in res.shrink_events]
+        solo = run_standalone(req, cfg, shrink_schedule=sched)
+        assert res.champion_history == solo.champion_history, req.req_id
+
+
+def test_sos_serving_bit_exact_vs_standalone():
+    """Satellite gate: exchange='sos' requests served in a shared pool
+    reproduce the standalone SOS trajectory exactly (the adoption draw
+    keys on logical chain indices, not packed rows)."""
+    reqs = [_req(0, exchange="sos"),
+            _req(1, objective="ackley", exchange="sos", n_chains=2 * CPS),
+            _req(2, objective="schwefel")]
+    served, _, cfg = _serve(reqs, k=1)
+    for req in reqs:
+        solo = run_standalone(req, cfg)
+        assert served[req.req_id].f_best == solo.f_best, req.req_id
+        assert served[req.req_id].champion_history == solo.champion_history
+
+
+def test_pa_ess_self_shrink_rederived_by_oracle():
+    """A PA tenant whose ESS collapses halves its own width; the events
+    land in pa_shrink_events (not shrink_events) and the standalone
+    oracle re-derives them from the identical fx stream — no external
+    shrink schedule may be fed back in."""
+    req = _req(0, method="pa", n_chains=2 * CPS, pa_ess_ratio=0.9)
+    served, _, cfg = _serve([req], k=1, n_devices=1)
+    res = served[0]
+    assert res.pa_shrink_events, "ESS shrink never fired"
+    assert not res.shrink_events
+    lvl, frm, to = res.pa_shrink_events[0]
+    assert (frm, to) == (2 * CPS, CPS)
+    solo = run_standalone(req, cfg)           # deliberately no schedule
+    assert res.f_best == solo.f_best
+    assert res.champion_history == solo.champion_history
+    assert solo.pa_shrink_events == res.pa_shrink_events
+
+
+def test_pa_ess_off_means_no_self_shrink():
+    req = _req(0, method="pa", n_chains=2 * CPS)
+    served, _, _ = _serve([req], k=1, n_devices=1)
+    assert not served[0].pa_shrink_events
+
+
+def test_degraded_pt_admission_builds_coarser_ladder():
+    """Admission-time degrade is allowed for PT: a request granted fewer
+    chains anneals a coarser ladder from level 0, bit-equal to a
+    standalone run at the granted width."""
+    reqs = [_req(0, method="pt", n_chains=4 * CPS, min_chains=CPS,
+                 on_overload="degrade", deadline=0.0, priority=0),
+            _req(1, objective="ackley", priority=5),     # admitted first,
+            _req(2, objective="schwefel", priority=5)]   # squeeze the pool
+    cfg = _cfg(k=1, n_devices=1, n_slots=4,
+               scheduler=SchedulerConfig(overload="degrade",
+                                         default_deadline=0.0))
+    engine = SAServeEngine(cfg)
+    for r in reqs:
+        engine.submit(r)
+    served = {r.req_id: r for r in engine.run(max_ticks=2000)}
+    res = served[0]
+    assert res.completed and res.granted_chains < 4 * CPS
+    solo = run_standalone(
+        dataclasses.replace(reqs[0], n_chains=res.granted_chains), cfg)
+    assert res.f_best == solo.f_best
+    assert res.champion_history == solo.champion_history
