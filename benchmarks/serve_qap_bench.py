@@ -1,0 +1,137 @@
+"""QAP solution-quality bench: gap-to-best-known through the serving engine.
+
+For each built-in QAP instance (objectives/qap.py), a seeded cohort of
+permutation-family requests is served through the continuous-batching
+engine — all cohorts co-batched in one fleet, macro-K fused — and the
+per-seed champions are reduced to the quality row the gate
+(scripts/check_qap_bench.py) consumes:
+
+  best_found   min cost over the cohort (must never beat best_known:
+               the instances ship witness permutations, so a "better"
+               value means broken kernel arithmetic or stale data),
+  gap_pct      (best_found - best_known) / best_known,
+  mean_gap_pct mean per-seed gap (cohort robustness, not just the max),
+  hit_rate     fraction of seeds whose champion reached best_known.
+
+Costs are small-integer sums evaluated exactly in float32 (see
+kernels/qap_sweep.py), so every number here is deterministic for fixed
+seeds — a committable perf-trajectory artifact, not a wall-clock bench.
+
+  PYTHONPATH=src python benchmarks/serve_qap_bench.py \
+      --seeds 8 --chains 32 --chains-per-slot 16
+"""
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+try:
+    from .common import Table, write_bench
+except ImportError:  # run as a plain script
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent))
+    from common import Table, write_bench
+
+from repro.objectives import qap
+from repro.service.engine import EngineConfig, SAServeEngine
+from repro.service.request import SARequest
+from repro.service.serve_sa import _jsonable
+
+DEFAULT_OUT = (Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+               / "BENCH_serve_qap.json")
+
+#: Cooling schedule sized to QAP swap-move deltas (tens per exchange):
+#: ~45 levels of 40 sweeps — small enough for CPU CI, deep enough that
+#: the cohort reliably lands within a few percent of best_known.
+SCHEDULE = dict(T0=50.0, T_min=0.5, rho=0.90, N=40)
+
+
+def bench(args) -> dict:
+    cfg = EngineConfig(n_slots=args.slots,
+                       chains_per_slot=args.chains_per_slot,
+                       macro_k=args.macro_k, use_pallas=False)
+    engine = SAServeEngine(cfg)
+    names = sorted(qap.INSTANCES)
+    reqs = []
+    for i, name in enumerate(names):
+        inst = qap.get(name)
+        for s in range(args.seeds):
+            reqs.append(SARequest(
+                req_id=len(reqs), objective=name, dim=inst.n,
+                n_chains=args.chains, seed=args.seed0 + 100 * i + s,
+                family="permutation", **SCHEDULE))
+    for r in reqs:
+        engine.submit(r)
+    results = {r.req_id: r for r in engine.run(max_ticks=args.max_ticks)}
+    assert len(results) == len(reqs), "bench stream did not drain"
+
+    rows = []
+    for name in names:
+        inst = qap.get(name)
+        found = [results[r.req_id].f_best for r in reqs
+                 if r.objective == name]
+        best = min(found)
+        gaps = [(f - inst.best_known) / inst.best_known for f in found]
+        rows.append({
+            "label": name, "n": inst.n, "proven": inst.proven,
+            "source": inst.source,
+            "best_known": inst.best_known,
+            "best_found": best,
+            "gap_pct": 100.0 * (best - inst.best_known) / inst.best_known,
+            "mean_gap_pct": 100.0 * sum(gaps) / len(gaps),
+            "hit_rate": sum(f == inst.best_known for f in found)
+            / len(found),
+            "seeds": args.seeds, "chains": args.chains,
+        })
+    return {
+        "config": {
+            "seeds": args.seeds, "seed0": args.seed0,
+            "chains": args.chains, "slots": args.slots,
+            "chains_per_slot": args.chains_per_slot,
+            "macro_k": args.macro_k, "max_ticks": args.max_ticks,
+            "schedule": SCHEDULE,
+        },
+        "rows": rows,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seeds", type=int, default=8,
+                    help="cohort size per instance (independent RNG seeds)")
+    ap.add_argument("--seed0", type=int, default=0,
+                    help="base seed; cohort i uses seed0 + 100*i + s")
+    ap.add_argument("--chains", type=int, default=32,
+                    help="chains per request")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="engine slot-pool size")
+    ap.add_argument("--chains-per-slot", type=int, default=16)
+    ap.add_argument("--macro-k", type=int, default=4,
+                    help="temperature levels fused per dispatch")
+    ap.add_argument("--max-ticks", type=int, default=5000)
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default "
+                         "artifacts/bench/BENCH_serve_qap.json)")
+    args = ap.parse_args(argv)
+
+    doc = bench(args)
+    cols = ["label", "n", "best_known", "best_found", "gap_pct",
+            "mean_gap_pct", "hit_rate", "seeds", "chains", "proven"]
+    table = Table(
+        f"QAP quality through the serving engine ({args.seeds} seeds x "
+        f"{args.chains} chains per instance, T0={SCHEDULE['T0']:g} "
+        f"rho={SCHEDULE['rho']:g} N={SCHEDULE['N']}, macro-K "
+        f"{args.macro_k})",
+        cols,
+        fmt={"gap_pct": ".2f", "mean_gap_pct": ".2f", "hit_rate": ".0%"})
+    for row in doc["rows"]:
+        table.add(**{k: row[k] for k in cols})
+    table.show()
+    out = write_bench(Path(args.out) if args.out else DEFAULT_OUT,
+                      _jsonable(doc), seed0=args.seed0)
+    print(f"\nwrote {out}")
+    return doc
+
+
+if __name__ == "__main__":
+    main()

@@ -95,14 +95,16 @@ DEFAULT_WALL_OUT = _BENCH_DIR / "BENCH_serve_wall.json"
 def bench_rate(rate: float, n_requests: int, n_slots: int,
                chains_per_slot: int, variant: str, seed: int,
                arrival_seed: int, max_ticks: int,
-               n_devices: int = 1, macro_k: int = 1) -> dict:
+               n_devices: int = 1, macro_k: int = 1,
+               method: str = "sa", family: str = "continuous") -> dict:
     cfg = EngineConfig(n_slots=n_slots, chains_per_slot=chains_per_slot,
                        n_devices=n_devices, variant=variant,
                        macro_k=macro_k,
                        scheduler=SchedulerConfig(policy="priority"))
     engine = SAServeEngine(cfg)
     reqs = make_mix(n_requests, chains_per_slot, seed=seed,
-                    max_slots_per_req=min(2, n_slots))
+                    max_slots_per_req=min(2, n_slots),
+                    method=method, family=family)
     arrivals = ArrivalProcess.poisson(reqs, rate=rate, seed=arrival_seed)
     engine.run_stream(arrivals, max_ticks=max_ticks)
     stats = engine.stats()
@@ -129,7 +131,8 @@ def saturating_rate(reqs, n_slots: int, chains_per_slot: int) -> float:
 def bench_overload(args) -> dict:
     """Same seeded overload stream through every overload policy."""
     reqs = make_mix(args.requests, args.chains_per_slot, seed=args.seed,
-                    max_slots_per_req=min(2, args.slots))
+                    max_slots_per_req=min(2, args.slots),
+                    method=args.method, family=args.family)
     # Capacity scales with the sharded pool: n_slots per shard x devices.
     rate = args.overload_factor * saturating_rate(
         reqs, args.slots * args.devices, args.chains_per_slot)
@@ -170,6 +173,7 @@ def bench_overload(args) -> dict:
             "chains_per_slot": args.chains_per_slot,
             "devices": args.devices,
             "variant": args.variant, "seed": args.seed,
+            "method": args.method, "family": args.family,
             "arrival_seed": args.arrival_seed,
             "overload_factor": args.overload_factor,
             "rate_req_per_tick": rate, "deadline": args.deadline,
@@ -217,7 +221,8 @@ def bench_drain(args) -> dict:
     if args.devices < 2:
         raise SystemExit("--drain needs --devices >= 2")
     reqs = make_mix(args.requests, args.chains_per_slot, seed=args.seed,
-                    max_slots_per_req=min(2, args.slots))
+                    max_slots_per_req=min(2, args.slots),
+                    method=args.method, family=args.family)
     rate = args.drain_load_factor * saturating_rate(
         reqs, args.slots * args.devices, args.chains_per_slot)
 
@@ -277,6 +282,7 @@ def bench_drain(args) -> dict:
             "requests": args.requests, "slots": args.slots,
             "chains_per_slot": args.chains_per_slot,
             "devices": args.devices, "variant": args.variant,
+            "method": args.method, "family": args.family,
             "migration_budget": args.migration_budget,
             "seed": args.seed, "arrival_seed": args.arrival_seed,
             "drain_tick": args.drain_tick,
@@ -354,7 +360,8 @@ def run_scale_devices(args):
         row = bench_rate(args.rate, args.requests, args.slots,
                          args.chains_per_slot, args.variant, args.seed,
                          args.arrival_seed, args.max_ticks, n_devices=n,
-                         macro_k=args.macro_k)
+                         macro_k=args.macro_k, method=args.method,
+                         family=args.family)
         rows.append(row)
         table.add(**{k: row[k] for k in table.columns})
     table.show()
@@ -372,6 +379,7 @@ def run_scale_devices(args):
             "requests": args.requests, "slots": args.slots,
             "chains_per_slot": args.chains_per_slot,
             "variant": args.variant, "seed": args.seed,
+            "method": args.method, "family": args.family,
             "arrival_seed": args.arrival_seed, "rate": args.rate,
             "scale_devices": counts, "max_ticks": args.max_ticks,
         },
@@ -408,7 +416,8 @@ def bench_wall_point(n_devices: int, args) -> dict:
             scheduler=SchedulerConfig(policy="priority"))
         engine = SAServeEngine(cfg, telemetry=telemetry)
         reqs = make_mix(args.requests, args.chains_per_slot, seed=args.seed,
-                        max_slots_per_req=min(2, args.slots))
+                        max_slots_per_req=min(2, args.slots),
+                        method=args.method, family=args.family)
         engine.run_stream(
             ArrivalProcess.poisson(reqs, rate=args.rate,
                                    seed=args.arrival_seed),
@@ -505,6 +514,7 @@ def run_wall(args):
             "requests": args.requests, "slots": args.slots,
             "chains_per_slot": args.chains_per_slot,
             "variant": args.variant, "seed": args.seed,
+            "method": args.method, "family": args.family,
             "arrival_seed": args.arrival_seed, "rate": args.rate,
             "wall_devices": counts, "max_ticks": args.max_ticks,
             "macro_k": args.macro_k,
@@ -549,6 +559,18 @@ def main(argv=None):
     ap.add_argument("--rate", type=float, default=1.0,
                     help="offered load for --scale-devices, requests/tick")
     ap.add_argument("--variant", default="delta", choices=["delta", "full"])
+    ap.add_argument("--method", default="sa",
+                    choices=["sa", "pt", "pa", "mixed"],
+                    help="workload class of the synthetic mix (plain SA, "
+                         "parallel tempering, population annealing, or a "
+                         "deterministic sa/pt/pa rotation) — every bench "
+                         "mode streams the class through the same engine")
+    ap.add_argument("--family", default="continuous",
+                    choices=["continuous", "qap", "mixed"],
+                    help="problem family of the mix: continuous registry "
+                         "objectives (float32 states), QAP permutations "
+                         "(int32 states; --method must stay sa), or both "
+                         "alternating in one pool")
     ap.add_argument("--seed", type=int, default=0,
                     help="request-mix seed")
     ap.add_argument("--arrival-seed", type=int, default=0,
@@ -597,6 +619,9 @@ def main(argv=None):
                     help="JSON artifact path (default: per-mode file "
                          "under artifacts/bench/)")
     args = ap.parse_args(argv)
+    if args.family == "qap" and args.method != "sa":
+        ap.error("--family qap serves plain SA only; drop --method "
+                 + args.method)
 
     if args.overload:
         return run_overload(args)
@@ -626,7 +651,8 @@ def main(argv=None):
         row = bench_rate(rate, args.requests, args.slots,
                          args.chains_per_slot, args.variant, args.seed,
                          args.arrival_seed, args.max_ticks,
-                         n_devices=args.devices, macro_k=args.macro_k)
+                         n_devices=args.devices, macro_k=args.macro_k,
+                         method=args.method, family=args.family)
         rows.append(row)
         table.add(**{k: row[k] for k in table.columns})
     table.show()

@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Gate the QAP quality bench (BENCH_serve_qap.json).
+
+The combinatorial path's quality acceptance: on the built-in QAP
+instances (objectives/qap.py — seeded, witness-verified analogues of the
+small QAPLIB instances like nug12/tai12a, which cannot be vendored
+verbatim), the serving engine's seeded cohorts must land within
+``--max-gap`` percent of each instance's best_known cost.  CI runs this
+twice: against the committed artifact (validates the committed claim)
+and against a freshly generated reduced smoke.
+
+Checks, per instance row:
+
+1. the row exists (one per objectives/qap.py instance named in
+   ``--instances``, default: every row in the artifact);
+2. **integrity**: best_found >= best_known.  The instances ship witness
+   permutations reproducing best_known (syn10's is exhaustively proven),
+   so a cohort that "beats" it means broken kernel arithmetic or a stale
+   best_known — either way the artifact is wrong, not impressive;
+3. **quality**: gap_pct <= --max-gap (default 2.0: within 2% of
+   best_known);
+4. hit_rate is sane (in [0, 1]); with --require-hit, at least one seed
+   must have reached best_known exactly.
+
+Exit 0 when every check passes, 1 otherwise (each failure is printed).
+
+  python scripts/check_qap_bench.py artifacts/bench/BENCH_serve_qap.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifact", help="BENCH_serve_qap.json to gate")
+    ap.add_argument("--max-gap", type=float, default=2.0,
+                    help="max allowed gap_pct to best_known, percent")
+    ap.add_argument("--instances", default=None,
+                    help="comma-separated instance labels that must be "
+                         "present (default: gate whatever rows exist)")
+    ap.add_argument("--require-hit", action="store_true",
+                    help="additionally require hit_rate > 0 (some seed "
+                         "reached best_known exactly)")
+    args = ap.parse_args(argv)
+
+    with open(args.artifact) as fh:
+        doc = json.load(fh)
+    rows = {r["label"]: r for r in doc.get("rows", [])}
+
+    failures = []
+    needed = (args.instances.split(",") if args.instances
+              else sorted(rows))
+    if not needed:
+        failures.append("artifact has no instance rows")
+    for label in needed:
+        if label not in rows:
+            failures.append(f"missing instance row {label!r}")
+            continue
+        row = rows[label]
+        if row["best_found"] < row["best_known"]:
+            failures.append(
+                f"{label}: best_found {row['best_found']:g} beats "
+                f"best_known {row['best_known']:g} — kernel arithmetic "
+                "or instance data is wrong")
+            continue
+        if not (0.0 <= row["hit_rate"] <= 1.0):
+            failures.append(f"{label}: hit_rate {row['hit_rate']} "
+                            "outside [0, 1]")
+        if args.require_hit and row["hit_rate"] <= 0.0:
+            failures.append(
+                f"{label}: no seed reached best_known "
+                f"(--require-hit; best_found {row['best_found']:g})")
+        if row["gap_pct"] > args.max_gap:
+            failures.append(
+                f"{label}: gap {row['gap_pct']:.2f}% > --max-gap "
+                f"{args.max_gap:g}% (best_found {row['best_found']:g} "
+                f"vs best_known {row['best_known']:g})")
+        else:
+            print(f"OK: {label} best_found {row['best_found']:g} within "
+                  f"{row['gap_pct']:.2f}% of best_known "
+                  f"{row['best_known']:g} "
+                  f"(hit {row['hit_rate']:.0%} of {row['seeds']} seeds)")
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        sys.exit(1)
+    print(f"check_qap_bench: all gates passed for {args.artifact}")
+
+
+if __name__ == "__main__":
+    main()

@@ -149,6 +149,72 @@ def _metropolis_sweep_slots(x, kids, T_blocks, seeds, step0s, chain_base, *,
         live=live_c)
 
 
+def qap_sweep_slots(x, F_blocks, D_blocks, T_blocks, seeds, step0s,
+                    chain_base, *, n_steps: int, blk: int,
+                    use_pallas: bool = False, interpret: bool = False,
+                    live=None):
+    """Heterogeneous-slot QAP pairwise-exchange sweep (permutation family).
+
+    The ``metropolis_sweep_slots`` counterpart for int32 permutation
+    states: ``x`` is ``(n_blocks * blk, n)`` packed slot states and
+    ``F_blocks``/``D_blocks`` are the per-slot instance operands packed
+    ``(n_blocks * n, n)`` — block ``b`` reads rows ``[b*n, (b+1)*n)`` — so
+    mixed QAP instances co-batch in one launch and the compiled program
+    never depends on which instances occupy the batch.  Per-block controls
+    (``T_blocks``, ``seeds``, ``step0s``, ``chain_base``, optional
+    ``live``) have the exact semantics of the continuous path; on TPU they
+    land in SMEM, elsewhere they expand to per-chain columns for the jnp
+    oracle.  Both paths run the shared step math on the same counter-based
+    streams and the instance data is integer-valued (exact in float32), so
+    they agree *bitwise* and slot placement never changes a trajectory.
+
+    Returns (p_out (n_blocks*blk, n) int32, f_out (n_blocks*blk,) f32).
+    """
+    return _qap_sweep_slots(
+        x, F_blocks, D_blocks, T_blocks, seeds, step0s, chain_base,
+        live=live, n_steps=n_steps, blk=blk, use_pallas=use_pallas,
+        interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("n_steps", "blk", "use_pallas",
+                                   "interpret"))
+def _qap_sweep_slots(x, F_blocks, D_blocks, T_blocks, seeds, step0s,
+                     chain_base, *, n_steps: int, blk: int,
+                     use_pallas: bool = False, interpret: bool = False,
+                     live=None):
+    chains, n = x.shape
+    if chains % blk:
+        raise ValueError(
+            f"packed chains={chains} must be a multiple of blk={blk}")
+    if use_pallas:
+        from repro.kernels.qap_sweep import qap_sweep_pallas
+        return qap_sweep_pallas(
+            x, F_blocks, D_blocks, T_blocks, seeds, step0s,
+            n_steps=n_steps, blk=blk, interpret=interpret,
+            chain_base=chain_base, live=live)
+    n_blocks = chains // blk
+
+    def expand(a):
+        a = jnp.asarray(a).reshape(-1)
+        if a.shape[0] == 1:  # scalar input: same broadcast as the Pallas path
+            a = jnp.broadcast_to(a, (n_blocks,))
+        return jnp.repeat(a, blk)
+
+    def expand_mat(M):
+        M = jnp.asarray(M, jnp.float32)
+        if M.shape == (n, n):
+            return M  # one instance for every chain: broadcast in the math
+        return jnp.repeat(M.reshape(n_blocks, n, n), blk, axis=0)
+
+    lane = jnp.tile(jnp.arange(blk, dtype=jnp.uint32), n_blocks)
+    cidx = expand(chain_base).astype(jnp.uint32) + lane
+    live_c = None if live is None else expand(live)
+    return ref_mod.qap_sweep_ref(
+        x, expand_mat(F_blocks), expand_mat(D_blocks), expand(T_blocks),
+        expand(seeds), expand(step0s), n_steps=n_steps, cidx=cidx,
+        live=live_c)
+
+
 def kid_for(objective) -> Optional[int]:
     """Registry kernel id for an Objective, or None."""
     return getattr(objective, "kernel_id", None)

@@ -146,3 +146,42 @@ def _sweep_ref_body(x, T, seed, step0, kid, lo, hi, init_acc, combine, term,
         x, fx = lax.fori_loop(0, n_steps, body, (x, fx))
 
     return x, fx[:, 0]
+
+
+def qap_sweep_ref(p, F, D, T, seed, step0, *, n_steps: int, cidx=None,
+                  live=None):
+    """Pure-jnp oracle for the QAP pairwise-exchange sweep kernel.
+
+    Runs the *shared* step recurrence (``qap_sweep.qap_swap_sweep``) over
+    the whole batch at once, so it is bit-exact against the Pallas
+    lowering by construction — the permutation-family analogue of
+    ``metropolis_sweep_ref``.  ``F``/``D`` are ``(n, n)`` (one instance for
+    every chain) or per-chain ``(chains, n, n)``; ``T``/``seed``/``step0``
+    are scalars or ``(chains,)``; ``cidx`` optionally overrides the global
+    chain indices and ``live`` is the per-chain macro-tick level cursor.
+
+    Returns (p_out (chains, n) int32, f_out (chains,) float32).
+    """
+    return _qap_sweep_ref(p, F, D, T, seed, step0, n_steps=n_steps,
+                          cidx=cidx, live=live)
+
+
+@partial(jax.jit, static_argnames=("n_steps",))
+def _qap_sweep_ref(p, F, D, T, seed, step0, *, n_steps: int, cidx=None,
+                   live=None):
+    from repro.kernels.qap_sweep import qap_full_cost, qap_swap_sweep
+    chains = p.shape[0]
+    if cidx is None:
+        cidx = jnp.arange(chains, dtype=jnp.uint32)[:, None]
+    else:
+        cidx = _col(cidx, chains, jnp.uint32)
+    seed = _col(seed, chains, jnp.uint32)
+    step0 = _col(step0, chains, jnp.uint32)
+    T = _col(T, chains, jnp.float32)
+    live = None if live is None else _col(live, chains, jnp.bool_)
+    F = jnp.asarray(F, jnp.float32)
+    D = jnp.asarray(D, jnp.float32)
+    fx = qap_full_cost(p, F, D)
+    p, fx = qap_swap_sweep(p, fx, F, D, T, seed, cidx, step0,
+                           n_steps=n_steps, live=live)
+    return p, fx[:, 0]

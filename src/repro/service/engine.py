@@ -98,6 +98,7 @@ from jax import lax
 from repro.core import exchange as exch
 from repro.kernels import objective_math as om
 from repro.kernels import ops
+from repro.objectives import families as fam_mod
 from repro.service.request import RequestResult, SARequest
 from repro.service.scheduler import (AdmissionScheduler, QueueEntry,
                                      SchedulerConfig, ShardView)
@@ -113,19 +114,17 @@ warnings.filterwarnings(
     "ignore", message="Some donated buffers were not usable",
     category=UserWarning)
 
-#: Known optima of the servable (registry) objectives, for accuracy targets.
-#: Schwefel is the paper's normalized form, so its optimum is dim-free.
-#: A request may only set ``target_error`` on an objective listed here —
+#: Known optima of the servable *continuous* (registry) objectives, keyed
+#: by kernel id — derived from the family layer's name-keyed table so the
+#: values live in exactly one place (objectives/families.py).  Schwefel is
+#: the paper's normalized form, so its optimum is dim-free.  A continuous
+#: request may only set ``target_error`` on an objective listed here —
 #: :meth:`SAServeEngine.submit` validates it eagerly (a typed ValueError at
 #: the frontend) instead of letting a KeyError wedge a slot mid-tick.
-F_OPT = {
-    om.KID_SCHWEFEL: -418.982887,
-    om.KID_RASTRIGIN: 0.0,
-    om.KID_ACKLEY: 0.0,
-    om.KID_GRIEWANK: 0.0,
-    om.KID_EXPONENTIAL: -1.0,
-    om.KID_SALOMON: 0.0,
-}
+#: Permutation (QAP) requests never consult this dict: every registered
+#: instance carries a verifiable ``best_known`` (``req.f_opt``).
+F_OPT = {om.KID_BY_NAME[name]: v
+         for name, v in fam_mod.F_OPT_BY_NAME.items()}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -277,6 +276,87 @@ def _group_tick_fused(x, kid_blk, T_lvls, seed_blk, step0_blk, base_blk,
     return lax.fori_loop(0, k, body, (x, fx0, fb0, xb0))
 
 
+@partial(jax.jit, static_argnames=("n_steps", "blk", "use_pallas",
+                                   "interpret", "num_segments"))
+def _group_tick_qap(x, F_blk, D_blk, T_blk, seed_blk, step0_blk, base_blk,
+                    lvl0_blk, seg, adopt, mcode, t_rung, partner, pairlo,
+                    seg_lo, seg_hi, *, n_steps: int, blk: int,
+                    use_pallas: bool, interpret: bool, num_segments: int):
+    """One temperature level for one *permutation-family* dispatch group.
+
+    The QAP counterpart of :func:`_group_tick`: the same control layout
+    and the same composite segmented exchange (dtype-agnostic over the
+    chain states, so int32 permutations ride it unchanged), but the sweep
+    is the pairwise-exchange QAP kernel and the per-block runtime operands
+    are the flow/distance matrices (packed ``(n_blocks*n, n)``) instead of
+    an objective id.  Chain states ``x`` are int32; objective values stay
+    float32 (exact for the integer-valued instances).  No ``variant``/
+    ``dbeta``: the QAP sweep is always delta-evaluated (bitwise equal to a
+    full evaluation) and permutation requests are method-'sa' only, so the
+    PA reweighting increment is identically zero.  A separate jit (typed
+    on int32 x) naturally pins one compiled program per family.
+    """
+    sched, T_chain, seed_c, cidx, lvl_abs = _chain_controls(
+        T_blk, seed_blk, base_blk, lvl0_blk, mcode, t_rung, blk)
+    x, fx = ops.qap_sweep_slots(
+        x, F_blk, D_blk, T_blk, seed_blk, step0_blk, base_blk,
+        n_steps=n_steps, blk=blk, use_pallas=use_pallas, interpret=interpret)
+    live = jnp.ones(fx.shape, bool)
+    return exch.serving_exchange(
+        x, fx, seg, num_segments, adopt, mcode, t_rung, sched, partner,
+        pairlo, seg_lo, seg_hi, jnp.zeros_like(fx), seed_c, cidx,
+        lvl_abs, live)
+
+
+@partial(jax.jit, static_argnames=("k", "n_steps", "blk", "use_pallas",
+                                   "interpret", "num_segments"),
+         donate_argnums=(0,))
+def _group_tick_qap_fused(x, F_blk, D_blk, T_lvls, seed_blk, step0_blk,
+                          base_blk, levels_blk, lvl0_blk, seg, adopt, mcode,
+                          t_rung, partner2, pairlo2, seg_lo, seg_hi, *,
+                          k: int, n_steps: int, blk: int, use_pallas: bool,
+                          interpret: bool, num_segments: int):
+    """K temperature levels for one permutation-family group, fused.
+
+    Mirrors :func:`_group_tick_fused` level by level — same live-cursor
+    masking, per-level champion stacks and donated ping-pong state buffer
+    — with the QAP sweep in place of the Metropolis one.  The champion
+    carry is typed explicitly (float32 values, int32 states): the
+    continuous path types both off ``x.dtype``, which is exactly what an
+    int32 state buffer must not do.  ``fx_keep`` is carried for interface
+    parity (the PA controller never reads it here — permutation requests
+    are method-'sa' only).
+    """
+    dim = x.shape[1]
+
+    def body(i, carry):
+        x, fx_keep, fb_all, xb_all = carry
+        live = i < levels_blk                       # (n_blocks,) cursor
+        T_i = lax.dynamic_index_in_dim(T_lvls, i, 0, keepdims=False)
+        step0_i = step0_blk + jnp.uint32(n_steps) * i.astype(jnp.uint32)
+        sched, T_chain, seed_c, cidx, lvl_abs = _chain_controls(
+            T_i, seed_blk, base_blk, lvl0_blk + i.astype(jnp.uint32),
+            mcode, t_rung, blk)
+        x, fx = ops.qap_sweep_slots(
+            x, F_blk, D_blk, T_i, seed_blk, step0_i, base_blk,
+            n_steps=n_steps, blk=blk, use_pallas=use_pallas,
+            interpret=interpret, live=live)
+        live_c = jnp.repeat(live, blk)
+        prt = lax.dynamic_index_in_dim(partner2, i % 2, 0, keepdims=False)
+        plo = lax.dynamic_index_in_dim(pairlo2, i % 2, 0, keepdims=False)
+        x, fx, xb, fb = exch.serving_exchange(
+            x, fx, seg, num_segments, adopt, mcode, t_rung, sched, prt,
+            plo, seg_lo, seg_hi, jnp.zeros_like(fx), seed_c, cidx,
+            lvl_abs, live_c)
+        fx_keep = jnp.where(live_c, fx, fx_keep)
+        return x, fx_keep, fb_all.at[i].set(fb), xb_all.at[i].set(xb)
+
+    fb0 = jnp.full((k, num_segments), jnp.inf, jnp.float32)
+    xb0 = jnp.zeros((k, num_segments, dim), x.dtype)
+    fx0 = jnp.zeros((x.shape[0],), jnp.float32)
+    return lax.fori_loop(0, k, body, (x, fx0, fb0, xb0))
+
+
 def _pt_partners(n: int, parity: int):
     """Logical even/odd swap partners for an ``n``-rung PT ladder.
 
@@ -390,10 +470,13 @@ class SAServeEngine:
                 f"request {req.req_id} needs {need} slots > the per-shard "
                 f"pool of {self.cfg.n_slots}; requests never span shards — "
                 "lower n_chains or grow n_slots")
-        if req.target_error is not None and req.kid not in F_OPT:
+        if (req.target_error is not None
+                and req.family == fam_mod.FAMILY_CONTINUOUS
+                and req.kid not in F_OPT):
             # Validate here, not mid-tick: an unguarded F_OPT lookup in the
             # finish check would raise KeyError after admission and wedge
-            # the request's slots for good.
+            # the request's slots for good.  Permutation requests skip the
+            # check: every registered QAP instance carries a best_known.
             raise ValueError(
                 f"request {req.req_id} sets target_error but objective "
                 f"{req.objective!r} has no registered optimum in "
@@ -426,7 +509,8 @@ class SAServeEngine:
         jobs = tuple(shard.rids.jobs.values())
         return ShardView(
             index=shard.index, free_slots=shard.pool.n_free, active=jobs,
-            shapes=frozenset((j.req.dim, j.req.N) for j in jobs))
+            shapes=frozenset((j.req.family, j.req.dim, j.req.N)
+                             for j in jobs))
 
     def _shard(self, index: int) -> EngineShard:
         """Shard by stable index.  Indices are identities, not positions:
@@ -960,19 +1044,23 @@ class SAServeEngine:
         K = self.cfg.macro_k
         launches = []
         for shard in self.shards:
-            # Dispatch groups are keyed by shape alone — (dim, N) —
-            # because the objective id is a runtime kernel input;
-            # mixed-objective groups share one compiled program.  Groups
-            # never span shards: each runs on the shard's own device.
-            groups: Dict[Tuple[int, int], List[ActiveJob]] = defaultdict(list)
+            # Dispatch groups are keyed by shape alone — (family, dim, N)
+            # — because the objective id (or QAP instance operand) is a
+            # runtime kernel input; mixed-objective groups share one
+            # compiled program, and one program per *family* serves every
+            # instance of that family.  Groups never span shards: each
+            # runs on the shard's own device.
+            groups: Dict[Tuple[str, int, int], List[ActiveJob]] = \
+                defaultdict(list)
             for job in shard.rids.jobs.values():
-                groups[(job.req.dim, job.req.N)].append(job)
+                groups[(job.req.family, job.req.dim, job.req.N)].append(job)
             with pt("dispatch", shard.index):
-                for (dim, n_steps), jobs in sorted(groups.items()):
+                for (family, dim, n_steps), jobs in sorted(groups.items()):
                     launches.append(
-                        self._launch_group(shard, dim, n_steps, jobs)
+                        self._launch_group(shard, family, dim, n_steps, jobs)
                         if K == 1 else
-                        self._launch_group_fused(shard, dim, n_steps, jobs))
+                        self._launch_group_fused(shard, family, dim,
+                                                 n_steps, jobs))
                     self.group_launches += 1
         if self.telemetry.enabled:
             self.telemetry.m_launches.inc(len(launches))
@@ -1182,10 +1270,17 @@ class SAServeEngine:
             row0 += n
         return mcode, t_rung, partner, pairlo, seg_lo, seg_hi
 
-    def _launch_group_fused(self, shard: EngineShard, dim: int, n_steps: int,
-                            jobs: List[ActiveJob]):
+    def _launch_group_fused(self, shard: EngineShard, family: str, dim: int,
+                            n_steps: int, jobs: List[ActiveJob]):
         """Pack the group's controls, reuse (or rebuild) its device state
         buffer, and launch one fused K-level program (async).
+
+        ``family`` picks the device program and the packing details: the
+        continuous Metropolis program takes per-block objective ids and PA
+        increments; the permutation (QAP) program takes per-block
+        flow/distance operands and int32 chain state.  Everything else —
+        level planning, control layout, the double buffer, the collect
+        contract — is family-agnostic.
 
         Per-job level planning: ``min(K, remaining ladder, remaining eval
         budget)`` — computed on host so budget/ladder finishes land on
@@ -1205,6 +1300,7 @@ class SAServeEngine:
         """
         cps = self.cfg.chains_per_slot
         K = self.cfg.macro_k
+        is_qap = family == fam_mod.FAMILY_PERMUTATION
         slot_list: List[Tuple[int, ActiveJob]] = [
             (s, job) for job in jobs for s in job.slots]
         n_blocks = len(slot_list)
@@ -1222,6 +1318,12 @@ class SAServeEngine:
             planned[job.rid] = p
 
         kid_blk = np.empty((n_padded,), np.int32)
+        if is_qap:
+            # Per-block instance operands, packed (n_padded * dim, dim):
+            # block b reads rows [b*dim, (b+1)*dim).  Runtime inputs, so
+            # mixed instances co-batch without recompiling.
+            F_blk = np.empty((n_padded * dim, dim), np.float32)
+            D_blk = np.empty((n_padded * dim, dim), np.float32)
         T_lvls = np.empty((K, n_padded), np.float32)
         dbeta_lvls = np.zeros((K, n_padded), np.float32)
         seed_blk = np.empty((n_padded,), np.uint32)
@@ -1233,6 +1335,10 @@ class SAServeEngine:
         adopt = np.empty((n_padded * cps,), bool)
         for b, (s, job) in enumerate(slot_list):
             kid_blk[b] = np.int32(job.req.kid)
+            if is_qap:
+                inst = job.req.instance
+                F_blk[b * dim:(b + 1) * dim] = inst.F
+                D_blk[b * dim:(b + 1) * dim] = inst.D
             is_pa = job.req.method == "pa"
             t = job.T
             for i in range(K):
@@ -1255,6 +1361,9 @@ class SAServeEngine:
             # pass-through, so whatever a reused buffer holds in its pad
             # rows is legal — they cost lanes, not correctness.
             kid_blk[b] = kid_blk[0]
+            if is_qap:
+                F_blk[b * dim:(b + 1) * dim] = F_blk[:dim]
+                D_blk[b * dim:(b + 1) * dim] = D_blk[:dim]
             T_lvls[:, b] = T_lvls[:, 0]
             seed_blk[b] = seed_blk[0]
             step0_blk[b] = step0_blk[0]
@@ -1267,7 +1376,7 @@ class SAServeEngine:
 
         dev = shard.device
 
-        cache = shard.group_cache.get((dim, n_steps))
+        cache = shard.group_cache.get((family, dim, n_steps))
         x_dev = None
         if cache is not None and cache["n_padded"] == n_padded:
             buf = cache["buf"]
@@ -1278,7 +1387,8 @@ class SAServeEngine:
             else:
                 x_dev = buf              # cache hit: skip repack + transfer
         if x_dev is None:
-            x = np.empty((n_padded * cps, dim), np.float32)
+            x = np.empty((n_padded * cps, dim),
+                         np.int32 if is_qap else np.float32)
             for b, (s, _job) in enumerate(slot_list):
                 x[b * cps:(b + 1) * cps] = shard.pool.get_block(s)
             for b in range(n_blocks, n_padded):
@@ -1288,15 +1398,26 @@ class SAServeEngine:
         # One batched transfer for all control arrays: separate
         # device_put dispatches were the dominant per-launch host cost
         # once the state buffer started cache-hitting.
-        ctrl = jax.device_put(
-            (kid_blk, T_lvls, seed_blk, step0_blk, base_blk, levels_blk,
-             lvl0_blk, dbeta_lvls, seg, adopt, mcode, t_rung, partner2,
-             pairlo2, seg_lo, seg_hi), dev)
-        outs = _group_tick_fused(
-            x_dev, *ctrl,
-            k=K, n_steps=n_steps, blk=cps, variant=self.cfg.variant,
-            use_pallas=self._use_pallas, interpret=self.cfg.interpret,
-            num_segments=self.cfg.n_slots + 1)
+        if is_qap:
+            ctrl = jax.device_put(
+                (F_blk, D_blk, T_lvls, seed_blk, step0_blk, base_blk,
+                 levels_blk, lvl0_blk, seg, adopt, mcode, t_rung, partner2,
+                 pairlo2, seg_lo, seg_hi), dev)
+            outs = _group_tick_qap_fused(
+                x_dev, *ctrl,
+                k=K, n_steps=n_steps, blk=cps,
+                use_pallas=self._use_pallas, interpret=self.cfg.interpret,
+                num_segments=self.cfg.n_slots + 1)
+        else:
+            ctrl = jax.device_put(
+                (kid_blk, T_lvls, seed_blk, step0_blk, base_blk, levels_blk,
+                 lvl0_blk, dbeta_lvls, seg, adopt, mcode, t_rung, partner2,
+                 pairlo2, seg_lo, seg_hi), dev)
+            outs = _group_tick_fused(
+                x_dev, *ctrl,
+                k=K, n_steps=n_steps, blk=cps, variant=self.cfg.variant,
+                use_pallas=self._use_pallas, interpret=self.cfg.interpret,
+                num_segments=self.cfg.n_slots + 1)
         out_x = outs[0]
         # The group's state now lives in the output buffer.  Point every
         # slot there (lazily — materialized only by checkpoint/migrate/
@@ -1305,26 +1426,34 @@ class SAServeEngine:
         # ref into it was just replaced.
         for b, (s, _job) in enumerate(slot_list):
             shard.pool.set_device_block(s, out_x, b * cps, (b + 1) * cps)
-        shard.group_cache[(dim, n_steps)] = {"buf": out_x,
-                                             "n_padded": n_padded}
+        shard.group_cache[(family, dim, n_steps)] = {"buf": out_x,
+                                                     "n_padded": n_padded}
         return shard, n_steps, jobs, slot_list, outs, planned
 
-    def _launch_group(self, shard: EngineShard, dim: int, n_steps: int,
-                      jobs: List[ActiveJob]):
+    def _launch_group(self, shard: EngineShard, family: str, dim: int,
+                      n_steps: int, jobs: List[ActiveJob]):
         """Pack the group's slots and launch its device program (async);
-        returns the collect-pass arguments."""
+        returns the collect-pass arguments.  ``family`` picks the program
+        (Metropolis vs QAP pairwise-exchange) and the state dtype; see
+        :meth:`_launch_group_fused`."""
         cps = self.cfg.chains_per_slot
+        is_qap = family == fam_mod.FAMILY_PERMUTATION
         slot_list: List[Tuple[int, ActiveJob]] = [
             (s, job) for job in jobs for s in job.slots]
         n_blocks = len(slot_list)
         # Pad to a power of two of blocks so the number of compiled
-        # signatures per (dim, N) is O(log n_slots), not O(n_slots).
+        # signatures per (family, dim, N) is O(log n_slots), not
+        # O(n_slots).
         n_padded = 1
         while n_padded < n_blocks:
             n_padded *= 2
 
-        x = np.empty((n_padded * cps, dim), np.float32)
+        x = np.empty((n_padded * cps, dim),
+                     np.int32 if is_qap else np.float32)
         kid_blk = np.empty((n_padded,), np.int32)
+        if is_qap:
+            F_blk = np.empty((n_padded * dim, dim), np.float32)
+            D_blk = np.empty((n_padded * dim, dim), np.float32)
         T_blk = np.empty((n_padded,), np.float32)
         dbeta_blk = np.zeros((n_padded,), np.float32)
         seed_blk = np.empty((n_padded,), np.uint32)
@@ -1336,6 +1465,10 @@ class SAServeEngine:
         for b, (s, job) in enumerate(slot_list):
             x[b * cps:(b + 1) * cps] = shard.pool.get_block(s)
             kid_blk[b] = np.int32(job.req.kid)
+            if is_qap:
+                inst = job.req.instance
+                F_blk[b * dim:(b + 1) * dim] = inst.F
+                D_blk[b * dim:(b + 1) * dim] = inst.D
             T_blk[b] = job.T
             if job.req.method == "pa":
                 dbeta_blk[b] = _pa_dbeta(job.T, job.req.rho)
@@ -1351,6 +1484,9 @@ class SAServeEngine:
         for b in range(n_blocks, n_padded):
             x[b * cps:(b + 1) * cps] = x[:cps]
             kid_blk[b] = kid_blk[0]
+            if is_qap:
+                F_blk[b * dim:(b + 1) * dim] = F_blk[:dim]
+                D_blk[b * dim:(b + 1) * dim] = D_blk[:dim]
             T_blk[b] = T_blk[0]
             seed_blk[b] = seed_blk[0]
             step0_blk[b] = step0_blk[0]
@@ -1368,14 +1504,25 @@ class SAServeEngine:
         def put(a):
             return jax.device_put(a, dev)
 
-        outs = _group_tick(
-            put(x), put(kid_blk), put(T_blk), put(seed_blk), put(step0_blk),
-            put(base_blk), put(lvl0_blk), put(dbeta_blk), put(seg),
-            put(adopt), put(mcode), put(t_rung), put(partner[0]),
-            put(pairlo[0]), put(seg_lo), put(seg_hi), n_steps=n_steps,
-            blk=cps, variant=self.cfg.variant, use_pallas=self._use_pallas,
-            interpret=self.cfg.interpret,
-            num_segments=self.cfg.n_slots + 1)
+        if is_qap:
+            outs = _group_tick_qap(
+                put(x), put(F_blk), put(D_blk), put(T_blk), put(seed_blk),
+                put(step0_blk), put(base_blk), put(lvl0_blk), put(seg),
+                put(adopt), put(mcode), put(t_rung), put(partner[0]),
+                put(pairlo[0]), put(seg_lo), put(seg_hi), n_steps=n_steps,
+                blk=cps, use_pallas=self._use_pallas,
+                interpret=self.cfg.interpret,
+                num_segments=self.cfg.n_slots + 1)
+        else:
+            outs = _group_tick(
+                put(x), put(kid_blk), put(T_blk), put(seed_blk),
+                put(step0_blk), put(base_blk), put(lvl0_blk),
+                put(dbeta_blk), put(seg), put(adopt), put(mcode),
+                put(t_rung), put(partner[0]), put(pairlo[0]), put(seg_lo),
+                put(seg_hi), n_steps=n_steps, blk=cps,
+                variant=self.cfg.variant, use_pallas=self._use_pallas,
+                interpret=self.cfg.interpret,
+                num_segments=self.cfg.n_slots + 1)
         return shard, n_steps, jobs, slot_list, outs
 
     def _finish_reason(self, job: ActiveJob) -> Optional[str]:
@@ -1383,7 +1530,10 @@ class SAServeEngine:
         if req.target_error is not None:
             # submit() guarantees the optimum exists; .get keeps the tick
             # loop un-wedgeable even if F_OPT is mutated under a live job.
-            f_opt = F_OPT.get(req.kid)
+            # Permutation requests read the instance's best_known instead.
+            f_opt = (F_OPT.get(req.kid)
+                     if req.family == fam_mod.FAMILY_CONTINUOUS
+                     else req.f_opt)
             if f_opt is not None and job.best_f <= f_opt + req.target_error:
                 return "target"
         if req.max_evals is not None and job.evals >= req.max_evals:

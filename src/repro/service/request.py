@@ -1,10 +1,15 @@
 """Request/result schema for the multi-tenant SA serving engine.
 
-An :class:`SARequest` is one tenant's optimization job: which registry
-objective to minimize, at what dimensionality, with how many parallel
-chains, under which cooling schedule, and until which stopping condition.
-Heterogeneous requests are co-scheduled on one device program by the
-continuous-batching engine (engine.py); nothing here touches the device.
+An :class:`SARequest` is one tenant's optimization job: which problem
+family (``continuous`` registry objectives or ``permutation`` QAP
+instances), which objective within it, at what dimensionality, with how
+many parallel chains, under which cooling schedule, and until which
+stopping condition.  Heterogeneous requests — across families — are
+co-scheduled on one fleet by the continuous-batching engine (engine.py);
+nothing here touches the device.  Everything the representation
+determines (state dtype, initial-state sampler, known optimum,
+family-specific field validation) is delegated to the request's
+:class:`~repro.objectives.families.ProblemFamily`.
 """
 from __future__ import annotations
 
@@ -16,8 +21,11 @@ import numpy as np
 
 from repro.core.exchange import EXCHANGES
 from repro.kernels import objective_math as om
+from repro.objectives import families as fam_mod
+from repro.objectives import qap
 
-#: Objectives servable by the engine: the Pallas kernel registry.
+#: Objectives servable by the engine under the default (continuous)
+#: family: the Pallas kernel registry.
 SERVABLE = tuple(sorted(om.KID_BY_NAME))
 
 #: Annealing method (workload class) per request:
@@ -79,11 +87,13 @@ class SARequest:
     on_overload: Optional[str] = None  # per-request-class overload policy:
                                        # 'none'|'reject'|'degrade'|'preempt';
                                        # None = scheduler-wide default
+    family: str = "continuous"  # problem family: 'continuous' (registry
+                                # objectives, float32 box states) |
+                                # 'permutation' (QAP instances, int32
+                                # permutation states)
 
     def __post_init__(self):
-        if self.objective not in om.KID_BY_NAME:
-            raise ValueError(
-                f"objective {self.objective!r} not servable; one of {SERVABLE}")
+        fam = fam_mod.get_family(self.family)   # typed error on unknown name
         if self.dim < 1 or self.n_chains < 1 or self.N < 1:
             raise ValueError("dim, n_chains and N must be positive")
         if not (0.0 < self.rho < 1.0) or self.T_min <= 0 or self.T0 <= self.T_min:
@@ -106,10 +116,42 @@ class SARequest:
                 and self.on_overload not in OVERLOAD_POLICIES:
             raise ValueError(
                 f"on_overload must be one of {OVERLOAD_POLICIES} or None")
+        # Family-specific validation last, so its typed errors see
+        # structurally-sound generic fields: servable objective, matching
+        # dim, and family-incompatible controls (e.g. pa_ess_ratio or a
+        # replica method on a permutation request) all fail eagerly here —
+        # at construction, never mid-tick.
+        fam.validate(self)
+
+    @property
+    def prob_family(self) -> "fam_mod.ProblemFamily":
+        """The request's problem-family singleton."""
+        return fam_mod.get_family(self.family)
+
+    @property
+    def state_dtype(self) -> np.dtype:
+        """Chain-state dtype of this request's slot blocks."""
+        return self.prob_family.state_dtype
 
     @property
     def kid(self) -> int:
+        """Runtime objective id within the family: the kernel registry id
+        for continuous requests, the QAP instance id for permutation
+        ones (both small stable ints; dispatch never mixes families in
+        one program, so the id spaces may overlap)."""
+        if self.family == fam_mod.FAMILY_PERMUTATION:
+            return qap.INSTANCE_ID[self.objective]
         return om.KID_BY_NAME[self.objective]
+
+    @property
+    def f_opt(self) -> Optional[float]:
+        """Known optimum of the objective (None if unregistered)."""
+        return self.prob_family.f_opt(self)
+
+    @property
+    def instance(self) -> qap.QAPInstance:
+        """The QAP instance (permutation-family requests only)."""
+        return qap.get(self.objective)
 
     @property
     def n_levels(self) -> int:
@@ -127,11 +169,10 @@ class SARequest:
         return max(1, -(-self.min_chains // chains_per_slot))
 
     def sample_x0(self, n_chains: int) -> np.ndarray:
-        """Deterministic initial states, independent of slot placement."""
-        lo, hi = om.BOX[self.kid]
-        r = np.random.default_rng(self.seed)
-        return (lo + r.random((n_chains, self.dim), dtype=np.float32)
-                * (hi - lo)).astype(np.float32)
+        """Deterministic initial states, independent of slot placement
+        (family-owned: box-uniform float32 for continuous, uniform random
+        permutations int32 for QAP)."""
+        return self.prob_family.sample_x0(self, n_chains)
 
     def pt_rungs(self, n_chains: int) -> np.ndarray:
         """Parallel-tempering rung temperatures for a granted width.

@@ -46,9 +46,9 @@ scheduler additionally owns the **placement layer**:
 
 * :meth:`AdmissionScheduler.place` orders the shards for each tick's
   admission scans — least-loaded first, with a locality tie-break toward
-  a shard already running the queue head's ``(dim, N)`` dispatch shape —
-  so every admitted request's *home shard* is the emptiest compatible
-  one, deterministically;
+  a shard already running the queue head's ``(family, dim, N)`` dispatch
+  shape — so every admitted request's *home shard* is the emptiest
+  compatible one, deterministically;
 * :meth:`AdmissionScheduler.plan_migrations` rebalances à la Russkov
   et al. (arXiv:2006.00561): when the queue head fits on no single shard
   but the pool as a whole has room, it plans bounded cross-shard moves
@@ -90,10 +90,11 @@ Invariants
   reproducible latency distributions.
 * Swapped (preempted) jobs are *admitted work*: they resume at exactly
   their granted width and are never rejected or degraded — only delayed.
-* Scheduling is objective-blind.  Since the kernel dispatches the objective
+* Scheduling is objective-blind.  Since the kernels dispatch the objective
   id at runtime, co-batching never constrains *which* requests may share a
-  device program — only shape ``(dim, N)`` does, and that grouping happens
-  downstream in the engine.
+  device program — only shape ``(family, dim, N)`` does (the family picks
+  the sweep kernel and state dtype), and that grouping happens downstream
+  in the engine.
 * The scheduler holds only queue entries ``(request, submit_tick, swapped
   checkpoint)``; open-loop arrival timestamps live in the engine's
   lifecycle records (engine.py), so queue policy and load generation stay
@@ -211,7 +212,8 @@ class ShardView:
     index: int                          # engine shard id
     free_slots: int
     active: Tuple[ActiveJob, ...]       # jobs resident on the shard
-    shapes: FrozenSet[Tuple[int, int]]  # (dim, N) dispatch shapes resident
+    shapes: FrozenSet[Tuple[str, int, int]]  # (family, dim, N) dispatch
+                                             # shapes resident
 
     @property
     def used_slots(self) -> int:
@@ -322,8 +324,8 @@ class AdmissionScheduler:
     def _shard_key(free: int, has_shape: bool, index: int):
         """Deterministic shard preference: least-loaded first (most free
         slots), then locality (a shard already running the request's
-        ``(dim, N)`` dispatch shape dispatches it without opening a new
-        ``(shard, dim, N)`` device program), then lowest index."""
+        ``(family, dim, N)`` dispatch shape dispatches it without opening
+        a new per-shard device program), then lowest index."""
         return (-free, 0 if has_shape else 1, index)
 
     def place(self, shards: Sequence[ShardView], tick: int
@@ -332,11 +334,13 @@ class AdmissionScheduler:
 
         The ordering primitive behind :meth:`admit_sharded` (which
         re-evaluates it per entry against live free counts): least-loaded
-        first, locality tie-break toward the head's ``(dim, N)`` shape,
-        then index — fully deterministic, like the admission order itself.
+        first, locality tie-break toward the head's ``(family, dim, N)``
+        shape, then index — fully deterministic, like the admission order
+        itself.
         """
         head = self._head(tick)
-        head_shape = (head.req.dim, head.req.N) if head is not None else None
+        head_shape = (head.req.family, head.req.dim, head.req.N) \
+            if head is not None else None
         return sorted(shards, key=lambda s: self._shard_key(
             s.free_slots, head_shape in s.shapes, s.index))
 
@@ -572,7 +576,8 @@ class AdmissionScheduler:
         """
         view = ShardView(
             index=0, free_slots=free_slots, active=tuple(active),
-            shapes=frozenset((j.req.dim, j.req.N) for j in active))
+            shapes=frozenset((j.req.family, j.req.dim, j.req.N)
+                             for j in active))
         plan = self.admit_sharded([view], chains_per_slot, tick,
                                   preemption_budget=preemption_budget)
         return AdmissionPlan(
@@ -628,7 +633,7 @@ class AdmissionScheduler:
             if blocked_head:
                 continue
             eff = self.effective_priority(req, entry.submit_tick, tick)
-            shape = (req.dim, req.N)
+            shape = (req.family, req.dim, req.N)
 
             def usable(si):
                 outranks = eff >= evict_floor[si]

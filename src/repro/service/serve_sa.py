@@ -48,6 +48,14 @@ MIX_SCHEDULES = [
     dict(T0=50.0, T_min=0.2, rho=0.90, N=25),
     dict(T0=200.0, T_min=1.0, rho=0.80, N=60),
 ]
+#: Permutation-family (QAP) load: built-in instances with their sizes, and
+#: cooling schedules scaled to typical swap-move delta magnitudes (tens,
+#: not thousands — QAP costs move by O(F*D) per exchange).
+MIX_QAP_PROBLEMS = [("grid12", 12), ("syn10", 10)]
+MIX_QAP_SCHEDULES = [
+    dict(T0=50.0, T_min=0.5, rho=0.90, N=25),
+    dict(T0=30.0, T_min=0.3, rho=0.88, N=20),
+]
 
 _EPILOG = """\
 flag groups:
@@ -57,6 +65,11 @@ flag groups:
                   --method sa | pt | pa | mixed (workload class of the
                   mix; 'mixed' rotates all three through the same slot
                   pool — see the workload-class section of
+                  docs/serving.md),
+                  --family continuous | qap | mixed (problem
+                  representation of the mix: float32 coordinate states,
+                  int32 QAP permutations, or both alternating in one
+                  pool — see the problem-family section of
                   docs/serving.md).
   pool shape      --slots (pool size PER SHARD), --chains-per-slot (kernel
                   block size; multiple of 8 on TPU), --variant (delta =
@@ -135,7 +148,8 @@ See docs/serving.md.
 
 
 def make_mix(n_requests: int, chains_per_slot: int, seed: int = 0,
-             max_slots_per_req: int = 2, method: str = "sa") -> list:
+             max_slots_per_req: int = 2, method: str = "sa",
+             family: str = "continuous") -> list:
     """Deterministic heterogeneous request list for load generation.
 
     ``method`` picks the workload class for every request ('sa', 'pt',
@@ -143,19 +157,36 @@ def make_mix(n_requests: int, chains_per_slot: int, seed: int = 0,
     co-batching stressor: all three classes share slots, device programs
     and the bit-exactness oracle.  PA requests get an ESS-driven width
     schedule (pa_ess_ratio=0.5) so the self-shrink path is exercised.
+
+    ``family`` picks the problem representation: 'continuous' (the six
+    registry objectives, float32 coordinate states), 'qap' (built-in QAP
+    instances, int32 permutation states; permutations are SA-only, so
+    ``method`` must be 'sa'), or 'mixed' — alternating continuous/QAP
+    requests co-resident in one slot pool, the cross-representation
+    stressor.  QAP entries in a mixed load always run plain SA; the
+    continuous entries still follow ``method``.
     """
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n_requests):
-        obj, dim = MIX_PROBLEMS[i % len(MIX_PROBLEMS)]
-        sched = MIX_SCHEDULES[i % len(MIX_SCHEDULES)]
+        is_qap = family == "qap" or (family == "mixed" and i % 2 == 1)
         n_slots_i = 1 + int(rng.integers(0, max_slots_per_req))
-        m = ("sa", "pt", "pa")[i % 3] if method == "mixed" else method
+        if is_qap:
+            obj, dim = MIX_QAP_PROBLEMS[(i // 2) % len(MIX_QAP_PROBLEMS)] \
+                if family == "mixed" else \
+                MIX_QAP_PROBLEMS[i % len(MIX_QAP_PROBLEMS)]
+            sched = MIX_QAP_SCHEDULES[i % len(MIX_QAP_SCHEDULES)]
+            m, ess, fam = "sa", 0.0, "permutation"
+        else:
+            obj, dim = MIX_PROBLEMS[i % len(MIX_PROBLEMS)]
+            sched = MIX_SCHEDULES[i % len(MIX_SCHEDULES)]
+            m = ("sa", "pt", "pa")[i % 3] if method == "mixed" else method
+            ess, fam = 0.5 if m == "pa" else 0.0, "continuous"
         reqs.append(SARequest(
             req_id=i, objective=obj, dim=dim,
             n_chains=n_slots_i * chains_per_slot,
             seed=seed * 1000 + i, priority=int(rng.integers(0, 3)),
-            method=m, pa_ess_ratio=0.5 if m == "pa" else 0.0,
+            method=m, pa_ess_ratio=ess, family=fam,
             **sched))
     return reqs
 
@@ -233,8 +264,19 @@ def main(argv=None):
                          "(per-level Boltzmann resampling, ESS-driven "
                          "width), or a deterministic sa/pt/pa rotation "
                          "co-batched in the same slot pool")
+    ap.add_argument("--family", default="continuous",
+                    choices=["continuous", "qap", "mixed"],
+                    help="problem family of the synthetic mix: continuous "
+                         "(float32 coordinate states, the six registry "
+                         "objectives), qap (int32 permutation states over "
+                         "the built-in QAP instances; SA-only, so --method "
+                         "must stay sa), or mixed — alternating continuous "
+                         "and QAP requests co-batched in one slot pool "
+                         "(QAP entries always run plain SA)")
     ap.add_argument("--variant", default="delta", choices=["delta", "full"],
-                    help="objective evaluation: O(1) delta or O(dim) full")
+                    help="objective evaluation: O(1) delta or O(dim) full "
+                         "(continuous family only; QAP always uses the "
+                         "delta-evaluated swap sweep)")
     ap.add_argument("--seed", type=int, default=0,
                     help="request-mix generator seed")
     ap.add_argument("--policy", default="priority",
@@ -281,6 +323,13 @@ def main(argv=None):
                     help="compare every champion vs a standalone run")
     ap.add_argument("--no-check", dest="check", action="store_false")
     args = ap.parse_args(argv)
+    if args.family == "qap" and args.method != "sa":
+        # Permutations have no temperature-rung replica layout: the
+        # request validator rejects pt/pa on the permutation family, so
+        # fail fast here with the flag-level explanation.
+        ap.error("--family qap serves plain SA only (permutation requests "
+                 "have no pt/pa replica layout); drop --method " +
+                 args.method)
     if args.overload_policy in ("reject", "degrade") and args.deadline is None:
         # Without a deadline the expiry check can never fire, silently
         # degenerating to --overload-policy none.
@@ -331,7 +380,7 @@ def main(argv=None):
         engine.schedule_op(args.drain_at, _drain)
     reqs = make_mix(args.requests, args.chains_per_slot, seed=args.seed,
                     max_slots_per_req=min(args.max_slots_per_req, args.slots),
-                    method=args.method)
+                    method=args.method, family=args.family)
     arrivals = make_arrivals(reqs, args.arrivals, args.rate,
                              args.arrival_seed, burst=args.burst)
 
@@ -403,7 +452,7 @@ def main(argv=None):
                 "low_watermark": args.low_watermark,
                 "proactive_degrade": args.proactive_degrade,
                 "shrink_budget": args.shrink_budget,
-                "method": args.method,
+                "method": args.method, "family": args.family,
                 "variant": args.variant, "policy": args.policy,
                 "overload_policy": args.overload_policy,
                 "deadline": args.deadline,

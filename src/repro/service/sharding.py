@@ -7,7 +7,7 @@ device's worth of chain blocks.  This module shards the pool over a 1-D
 one device with a private :class:`~repro.service.slots.SlotPool` and
 :class:`~repro.service.slots.RidTable`, and the engine runs each shard's
 dispatch groups as *independent device programs* — one per
-``(shard, dim, N)`` — so shards anneal concurrently (JAX async dispatch
+``(shard, family, dim, N)`` — so shards anneal concurrently (JAX async dispatch
 overlaps the launches) and compile counts stay bounded per device exactly
 as they were for the single pool.
 
@@ -93,7 +93,7 @@ class EngineShard:
                                 # off — populated by the engine's
                                 # per-shard span folding
     group_cache: dict = dataclasses.field(default_factory=dict)
-                                # (dim, N) -> {"buf": device array,
+                                # (family, dim, N) -> {"buf": device array,
                                 # "n_padded": int}: the fused macro-tick
                                 # path's double buffer.  When a group's
                                 # membership is unchanged since its last

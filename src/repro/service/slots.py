@@ -17,6 +17,15 @@ device output — instead of a numpy block.  ``get_block`` materializes the
 ref to host on demand (checkpoint, migration, shrink, repack), so every
 consumer of the pool keeps its host-numpy contract while the steady-state
 dispatch path skips the host round-trip entirely.
+
+The pool is **dtype-polymorphic**: a slot's block carries whatever dtype
+the owning request's family sampled (float32 coordinates for continuous
+requests, int32 permutations for QAP), and every lifecycle operation —
+assign, checkpoint, restore, shrink repack, device-ref materialization —
+is a copy or a view that preserves dtype and bits exactly.  Mixed-family
+residency in one pool is therefore free; the engine's per-group packing
+(which allocates the packed device array) is the only place a dtype is
+ever chosen.
 """
 from __future__ import annotations
 
