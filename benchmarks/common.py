@@ -21,6 +21,13 @@ def block(x):
 
 
 def _git_sha() -> Optional[str]:
+    """HEAD sha, ``-dirty``-suffixed when *tracked source* is modified.
+
+    ``artifacts/`` and untracked files are excluded from the dirty
+    check: artifacts are benchmark *outputs*, so regenerating them must
+    not mark their own stamps dirty (the provenance CI gate rejects
+    dirty-sha artifacts — only code changes should trip it).
+    """
     try:
         out = subprocess.run(
             ["git", "rev-parse", "HEAD"], cwd=_REPO, capture_output=True,
@@ -28,8 +35,9 @@ def _git_sha() -> Optional[str]:
         sha = out.stdout.strip()
         if out.returncode == 0 and sha:
             dirty = subprocess.run(
-                ["git", "status", "--porcelain"], cwd=_REPO,
-                capture_output=True, text=True, timeout=10)
+                ["git", "status", "--porcelain", "-uno", "--",
+                 ".", ":(exclude)artifacts"],
+                cwd=_REPO, capture_output=True, text=True, timeout=10)
             return sha + ("-dirty" if dirty.stdout.strip() else "")
     except Exception:
         pass

@@ -26,7 +26,8 @@ Cohorts:
 
 The run is deterministic (counter-based RNG, fixed seeds, closed-loop
 admission), so the committed artifact is reproducible bit-for-bit on the
-same backend.  ``scripts/check_pt_bench.py`` gates the result: PT (and,
+same backend.  ``scripts/check_bench.py`` (the ``pt_*`` gates in
+``bench_gates.toml``) gates the result: PT (and,
 for the committed artifact, PA) must reach the target in fewer mean
 levels than plain SA.
 
@@ -134,7 +135,7 @@ def main(argv=None):
                   "ladder length)",
         "note": "levels are integers determined by bit-exact trajectories: "
                 "reproducible on the same backend/jax version; "
-                "scripts/check_pt_bench.py gates pt (and pa) vs the plain "
+                "scripts/check_bench.py (pt_* gates) gates pt (and pa) vs the plain "
                 "'sa' baseline",
         "rows": rows,
     }

@@ -4,7 +4,7 @@ For each built-in QAP instance (objectives/qap.py), a seeded cohort of
 permutation-family requests is served through the continuous-batching
 engine — all cohorts co-batched in one fleet, macro-K fused — and the
 per-seed champions are reduced to the quality row the gate
-(scripts/check_qap_bench.py) consumes:
+(scripts/check_bench.py, `qap_*` gates in bench_gates.toml) consumes:
 
   best_found   min cost over the cohort (must never beat best_known:
                the instances ship witness permutations, so a "better"

@@ -1,0 +1,217 @@
+#!/usr/bin/env python
+"""Consolidated declarative bench gate: one entry point for every
+``BENCH_*.json`` quality/regression check.
+
+Replaces the per-bench ``check_pt_bench.py`` / ``check_qap_bench.py`` /
+``check_wall_regression.py`` scripts: each gate is a stanza in
+``scripts/bench_gates.toml`` (artifact path, required rows, parameter
+table, and a list of named assert expressions), so a new bench registers
+as config instead of another bespoke script, and CI calls one gate step.
+
+Gate stanza schema (see bench_gates.toml for the live set)::
+
+  [gates.NAME]
+  artifact = "artifacts/bench/BENCH_x.json"   # repo-relative
+  label_key = "label"        # optional: build rows[label] from doc rows
+  sort_key = "devices"       # optional: rowlist sorted by this (numeric)
+  require_rows = ["sa"]      # optional: labels that must exist
+  baseline = "path.json"     # optional: committed artifact to compare
+                             # against (exposes bdoc/brows/blist)
+  [gates.NAME.params]        # free-form numbers the asserts reference
+  max_gap = 2.0
+  [[gates.NAME.asserts]]     # evaluated in order; all must be truthy
+  name = "gap within bound"
+  expr = "all(r['gap_pct'] <= params['max_gap'] for r in rowlist)"
+
+Assert expressions are Python, evaluated with no builtins except a safe
+arithmetic/iteration subset, against: ``doc`` (the artifact), ``rowlist``
+(its rows, sorted when ``sort_key`` is set), ``rows`` / ``row(label)``
+(label-keyed, when ``label_key`` is set), ``params``, and — when
+``baseline`` is set — ``bdoc`` / ``blist`` / ``brows``.
+
+Provenance mode (``--provenance DIR``) validates that every committed
+``BENCH_*.json`` carries the full reproducibility stamp: a non-dirty git
+sha, jax version, device census (backend + device_count), and at least
+one recorded seed — so stale or hand-edited benches can't merge.
+
+Usage::
+
+  python scripts/check_bench.py                      # run every gate
+  python scripts/check_bench.py qap_committed wall   # run named gates
+  python scripts/check_bench.py --provenance artifacts/bench
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+try:
+    import tomllib                      # Python >= 3.11
+except ImportError:                     # pragma: no cover
+    import tomli as tomllib             # Python 3.10 fallback
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT_CONFIG = Path(__file__).resolve().parent / "bench_gates.toml"
+
+#: The only names assert expressions may call — enough for arithmetic,
+#: comparison and iteration over rows; no imports, no attribute escape
+#: hatches like getattr/eval.
+SAFE_BUILTINS = {
+    "abs": abs, "all": all, "any": any, "bool": bool, "enumerate":
+    enumerate, "float": float, "int": int, "len": len, "max": max,
+    "min": min, "round": round, "sorted": sorted, "str": str, "sum":
+    sum, "zip": zip,
+}
+
+
+def _load(path: Path) -> dict:
+    with open(path, encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+def _row_env(doc: dict, gate: dict) -> dict:
+    rowlist = list(doc.get("rows", []))
+    if "sort_key" in gate:
+        rowlist.sort(key=lambda r: r[gate["sort_key"]])
+    env = {"rowlist": rowlist}
+    if "label_key" in gate:
+        env["rows"] = {r[gate["label_key"]]: r for r in rowlist}
+    return env
+
+
+def run_gate(name: str, gate: dict, repo: Path = REPO) -> list:
+    """Run one gate stanza; returns a list of failure strings."""
+    art = repo / gate["artifact"]
+    if not art.exists():
+        return [f"{name}: artifact {gate['artifact']} not found"]
+    doc = _load(art)
+    env = {"doc": doc, "params": dict(gate.get("params", {}))}
+    env.update(_row_env(doc, gate))
+    rows = env.get("rows", {})
+    env["row"] = rows.get       # row('sa') -> the row dict, or None
+
+    failures = []
+    for label in gate.get("require_rows", []):
+        if label not in rows:
+            failures.append(f"{name}: missing required row {label!r} in "
+                            f"{gate['artifact']}")
+    if failures:
+        return failures         # row asserts would only KeyError-cascade
+
+    if "baseline" in gate:
+        bpath = repo / gate["baseline"]
+        if not bpath.exists():
+            return [f"{name}: baseline {gate['baseline']} not found"]
+        bdoc = _load(bpath)
+        benv = _row_env(bdoc, gate)
+        env["bdoc"] = bdoc
+        env["blist"] = benv["rowlist"]
+        env["brows"] = benv.get("rows", {})
+
+    for check in gate.get("asserts", []):
+        cname, expr = check["name"], check["expr"]
+        try:
+            # env goes in globals, not locals: generator expressions in
+            # the asserts resolve free names against globals only.
+            ok = eval(expr, {"__builtins__": SAFE_BUILTINS, **env})
+        except Exception as exc:        # a broken expr is a failed gate
+            failures.append(f"{name}/{cname}: raised {exc!r} "
+                            f"(expr: {expr})")
+            continue
+        if ok:
+            print(f"OK   {name}: {cname}")
+        else:
+            failures.append(f"{name}/{cname}: {expr}")
+    return failures
+
+
+#: Provenance keys every committed artifact must carry with non-null
+#: values (git_sha additionally must not be -dirty; at least one key
+#: containing 'seed' must be recorded on top of these).
+_REQUIRED_PROVENANCE = ("git_sha", "jax_version", "backend",
+                        "device_count")
+
+
+def check_provenance(bench_dir: Path) -> list:
+    """Validate the reproducibility stamp on every BENCH_*.json."""
+    files = sorted(bench_dir.glob("BENCH_*.json"))
+    if not files:
+        return [f"no BENCH_*.json artifacts under {bench_dir}"]
+    failures = []
+    for path in files:
+        rel = path.name
+        try:
+            prov = _load(path).get("provenance")
+        except (OSError, json.JSONDecodeError) as exc:
+            failures.append(f"{rel}: unreadable ({exc})")
+            continue
+        if not isinstance(prov, dict):
+            failures.append(f"{rel}: no provenance stamp")
+            continue
+        for key in _REQUIRED_PROVENANCE:
+            if prov.get(key) in (None, ""):
+                failures.append(f"{rel}: provenance.{key} missing/null")
+        sha = prov.get("git_sha")
+        if isinstance(sha, str) and sha.endswith("-dirty"):
+            failures.append(
+                f"{rel}: dirty git sha {sha!r} — regenerate from a "
+                "clean tree so the artifact is reproducible")
+        if not any(v is not None and "seed" in k for k, v in prov.items()):
+            failures.append(f"{rel}: no seed recorded in provenance")
+        if not any(f.startswith(rel) for f in failures):
+            print(f"OK   {rel}: sha {str(sha)[:12]} "
+                  f"jax {prov['jax_version']} "
+                  f"{prov['backend']} x{prov['device_count']}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("gates", nargs="*",
+                    help="gate names from the config (default: all)")
+    ap.add_argument("--config", default=str(DEFAULT_CONFIG),
+                    help="bench_gates.toml path")
+    ap.add_argument("--provenance", default=None, metavar="DIR",
+                    help="instead of gating metrics, validate the "
+                         "provenance stamp on every BENCH_*.json in DIR")
+    ap.add_argument("--list", action="store_true",
+                    help="list configured gates and exit")
+    args = ap.parse_args(argv)
+
+    if args.provenance:
+        failures = check_provenance(Path(args.provenance))
+        for f in failures:
+            print(f"FAIL {f}")
+        print(f"check_bench --provenance: "
+              f"{'FAILED' if failures else 'all stamps valid'}")
+        return 1 if failures else 0
+
+    with open(args.config, "rb") as fh:
+        config = tomllib.load(fh)
+    gates = config.get("gates", {})
+    if args.list:
+        for name, gate in gates.items():
+            print(f"{name}: {gate['artifact']}"
+                  + (f" vs {gate['baseline']}" if "baseline" in gate
+                     else ""))
+        return 0
+    unknown = [g for g in args.gates if g not in gates]
+    if unknown:
+        print(f"unknown gate(s) {unknown}; configured: {sorted(gates)}")
+        return 2
+    selected = args.gates or list(gates)
+
+    failures = []
+    for name in selected:
+        failures.extend(run_gate(name, gates[name]))
+    for f in failures:
+        print(f"FAIL {f}")
+    print(f"check_bench: {len(selected)} gate(s), "
+          f"{'FAILED' if failures else 'all passed'}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,7 +23,11 @@ Layers
                    cross-shard migration planning, drain evacuation,
                    watermark rebalancing, proactive-degrade shrinks).
 ``arrivals.py``  : open-loop arrival processes (seeded Poisson / bursty /
-                   trace / batch) + latency percentile summaries.
+                   diurnal / trace / batch) + latency percentile summaries.
+``autoscaler.py``: closed-loop fleet controller — samples backlog /
+                   occupancy / completion headroom on a tick cadence,
+                   grows ahead of predicted deadline misses, drains after
+                   sustained idleness (hysteresis + cooldown).
 ``engine.py``    : the continuous-batching tick loop; per-slot objective id
                    (runtime — no recompile per objective), temperature,
                    seed and step cursor threaded to the Pallas kernel,
@@ -56,6 +60,7 @@ Or from the shell::
     PYTHONPATH=src python -m repro.service.serve_sa --requests 32 --slots 8
 """
 from repro.service.arrivals import ArrivalProcess, latency_summary
+from repro.service.autoscaler import Autoscaler, AutoscalerConfig
 from repro.service.engine import (EngineConfig, SAServeEngine, F_OPT,
                                   run_standalone)
 from repro.service.request import (OVERLOAD_POLICIES, RequestResult,
@@ -77,6 +82,7 @@ __all__ = [
     "SlotPool", "ActiveJob", "SwappedJob",
     "EngineShard", "slot_pool_devices",
     "ArrivalProcess", "latency_summary",
+    "Autoscaler", "AutoscalerConfig",
     "Telemetry", "MetricsRegistry", "PhaseTimer", "EventLog",
     "TICK_PHASES", "compile_events", "TraceBuilder", "validate_trace",
 ]

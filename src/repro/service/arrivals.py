@@ -77,6 +77,45 @@ class ArrivalProcess:
                    [float(starts[i // burst]) for i in range(len(requests))])
 
     @classmethod
+    def diurnal(cls, requests: Sequence[SARequest], rate: float,
+                period: float = 200.0, amplitude: float = 0.8,
+                seed: int = 0) -> "ArrivalProcess":
+        """Seeded diurnal load: an inhomogeneous Poisson process whose
+        intensity swings sinusoidally around ``rate`` —
+        ``lambda(t) = rate * (1 + amplitude * sin(2*pi*t/period))`` —
+        the day/night envelope autoscaler benchmarks provision against
+        (peak demand is ``(1+amplitude)x`` the mean, the trough
+        ``(1-amplitude)x``).
+
+        Sampled by time-warping a unit-rate Poisson process through the
+        inverse cumulative intensity: with
+        ``Lambda(t) = rate*t + rate*amplitude*period/(2*pi)
+        * (1 - cos(2*pi*t/period))`` (non-decreasing for amplitude <= 1),
+        unit-exponential cumulative sums ``s_i`` map to arrivals
+        ``t_i = Lambda^{-1}(s_i)`` — inverted numerically on a fine grid,
+        deterministic under ``seed``.
+        """
+        if rate <= 0:
+            raise ValueError(f"rate must be positive, got {rate}")
+        if period <= 0:
+            raise ValueError(f"period must be positive, got {period}")
+        if not 0.0 <= amplitude <= 1.0:
+            raise ValueError(
+                f"amplitude must be in [0, 1], got {amplitude}")
+        rng = np.random.default_rng(seed)
+        s = np.cumsum(rng.exponential(1.0, size=len(requests)))
+        # Grid out to where Lambda certainly exceeds the last event (the
+        # trough can run as slow as rate*(1-amplitude), but Lambda over a
+        # whole period always averages `rate`, so s_max/rate + one period
+        # bounds the horizon), 64 points per period for interp accuracy.
+        horizon = (float(s[-1]) / rate if len(s) else 1.0) + period
+        grid = np.linspace(0.0, horizon,
+                           max(2, int(64 * horizon / period)))
+        big_l = rate * grid + (rate * amplitude * period / (2 * np.pi)
+                               * (1.0 - np.cos(2 * np.pi * grid / period)))
+        return cls(requests, np.interp(s, big_l, grid))
+
+    @classmethod
     def trace(cls, requests: Sequence[SARequest],
               times: Iterable[float]) -> "ArrivalProcess":
         """Replay explicit arrival timestamps (ticks)."""
@@ -155,6 +194,7 @@ def latency_summary(results: Sequence[RequestResult],
         # work is real preemption churn and must stay visible.
         "preemptions": sum(r.n_preemptions for r in results),
         "migrations": sum(r.n_migrations for r in results),
+        "truncations": sum(r.n_truncations for r in results),
         "queue_delay_p50": percentile(qd, 50),
         "queue_delay_p99": percentile(qd, 99),
         "ttft_p50": percentile(tt, 50),

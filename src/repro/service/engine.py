@@ -423,6 +423,7 @@ class SAServeEngine:
         self.rejections = 0           # SLO admission-control drops
         self.migrations = 0           # cross-shard rebalancing moves
         self.shrinks = 0              # proactive-degrade width reductions
+        self.truncations = 0          # finish-deadline ladder truncations
         self.slot_ticks = 0           # Σ over ticks of fleet slot count —
                                       # the occupancy denominator (the
                                       # fleet is elastic, so ticks x slots
@@ -432,6 +433,10 @@ class SAServeEngine:
                                                  # never reused (resize/add)
         self._ops: List[Tuple[int, int, object]] = []  # (tick, seq, fn)
         self._op_seq = 0
+        # Closed-loop controller (service/autoscaler.py): when attached,
+        # it samples fleet signals at the top of each tick and may call
+        # resize()/schedule_op() itself.  None = no control plane.
+        self.controller = None
         self._use_pallas = ops.resolve_use_pallas(cfg.use_pallas)
         if self._use_pallas and cfg.chains_per_slot % 8:
             raise ValueError(
@@ -656,7 +661,8 @@ class SAServeEngine:
                         arrival_time=arrival,
                         submit_wall=submit_wall,
                         admit_wall=self._now(),
-                        home_shard=shard.index)
+                        home_shard=shard.index,
+                        levels_limit=req.n_levels)
         shard.rids.alloc(job)
         job.slots = shard.pool.assign(job.rid, req, n_slots=granted_slots)
         job.granted_chains = granted_slots * self.cfg.chains_per_slot
@@ -838,6 +844,62 @@ class SAServeEngine:
         self.migrations += 1
         self._record_shrink(job, from_chains)
 
+    # -------------------------------------------- completion-deadline SLO
+    def _truncate_job(self, job: ActiveJob, to_levels: int) -> None:
+        """Ladder truncation in place: cut the job's remaining temperature
+        levels so it finishes by its ``finish_deadline``.  Nothing about
+        the chain state, RNG streams or any level's arithmetic changes —
+        only where the ladder *ends* — so the trajectory up to the new end
+        is prefix-exact with the untruncated run, and a standalone replay
+        of the recorded ``truncate_events`` reproduces the terminal
+        champion bit-exactly (``run_standalone(truncate_schedule=...)``).
+        """
+        limit = self._levels_limit(job)
+        to_levels = int(to_levels)
+        floor = max(int(job.req.min_levels), min(job.level, limit))
+        to_levels = max(to_levels, floor)     # never below the SLO floor
+        if to_levels >= limit:
+            return                            # nothing to cut
+        job.truncated_ticks.append(self.tick_count)
+        job.truncate_events.append((job.level, limit, to_levels))
+        job.levels_limit = to_levels
+        self.truncations += 1
+        tel = self.telemetry
+        if tel.enabled:
+            tel.decision(self.tick_count, "truncate",
+                         req_id=job.req.req_id, shard=job.home_shard,
+                         level=job.level, from_levels=limit,
+                         to_levels=to_levels)
+            if tel.trace is not None:
+                tel.trace.request_instant(
+                    job.req.req_id, "truncate", from_levels=limit,
+                    to_levels=to_levels, tick=self.tick_count)
+
+    def truncate_active(self, req_id: int, n_levels: int) -> bool:
+        """Shorten the running request ``req_id``'s ladder to ``n_levels``
+        total temperature levels — the operator/replay entry point for
+        finish-deadline degrade; the scheduler's ``plan_truncations``
+        drives the same path.  Clamped to the request's ``min_levels``
+        floor.  Returns False if the request is not active or the cut
+        would not shorten anything (already at/below that length)."""
+        for _shard, job in self._iter_jobs():
+            if job.req.req_id == req_id:
+                before = self._levels_limit(job)
+                self._truncate_job(job, n_levels)
+                return self._levels_limit(job) < before
+        return False
+
+    def _plan_truncations(self) -> None:
+        """Apply this boundary's finish-deadline truncations (scheduler
+        plans, engine executes — like every other planner)."""
+        views = [self._view(s) for s in self.shards]
+        with self._pt("schedule"):
+            plan = self.scheduler.plan_truncations(views, self.tick_count)
+        with self._pt("admit"):
+            for rid, si, to_levels in plan:
+                self._truncate_job(self._shard(si).rids.jobs[rid],
+                                   to_levels)
+
     def _evacuate_draining(self, budget: int) -> int:
         """Execute this tick's drain plan; returns actions performed."""
         with self._pt("schedule"):
@@ -958,6 +1020,15 @@ class SAServeEngine:
                 return True
         return False
 
+    def attach_controller(self, controller) -> None:
+        """Attach a closed-loop controller (service/autoscaler.py): an
+        object with ``maybe_sample(engine)`` — called at the top of every
+        tick, before admission — and a ``next_sample_tick`` attribute so
+        ``run_stream``'s idle fast-forward never leaps over a scheduled
+        sampling tick (controller decisions are tick-aligned like
+        scripted ops)."""
+        self.controller = controller
+
     def schedule_op(self, tick: int, fn) -> None:
         """Run ``fn()`` at the start of the first tick >= ``tick`` —
         the hook ``serve_sa --drain-at/--resize`` uses to script fleet
@@ -1032,10 +1103,18 @@ class SAServeEngine:
         """
         pt = self._pt
         self._run_due_ops()       # scripted drain/resize land tick-aligned
+        if self.controller is not None:
+            # Closed-loop control: the controller samples fleet signals
+            # and may resize()/schedule_op() before this tick's admission
+            # sees the fleet, so capacity changes land boundary-aligned
+            # exactly like scripted ops.
+            with self._pt("schedule"):
+                self.controller.maybe_sample(self)
         for shard in self.shards:
             shard.resident_ticks += 1
             self.slot_ticks += shard.pool.n_slots
         self._admit()
+        self._plan_truncations()  # finish-deadline cuts, boundary-aligned
         if self.n_active == 0:
             self._retire_drained()
             self._end_tick_telemetry()
@@ -1310,7 +1389,7 @@ class SAServeEngine:
 
         planned: Dict[int, int] = {}
         for job in jobs:
-            p = min(K, max(1, job.req.n_levels - job.level))
+            p = min(K, max(1, self._levels_limit(job) - job.level))
             if job.req.max_evals is not None:
                 per_level = max(1, n_steps * job.granted_chains)
                 remaining = job.req.max_evals - job.evals
@@ -1538,9 +1617,19 @@ class SAServeEngine:
                 return "target"
         if req.max_evals is not None and job.evals >= req.max_evals:
             return "budget"
-        if job.level >= req.n_levels:
-            return "ladder"
+        if job.level >= self._levels_limit(job):
+            # 'truncated' only when the finish-deadline degrade actually
+            # cut the ladder — a full-length finish stays 'ladder' even
+            # for requests that carried a finish_deadline.
+            return "truncated" if job.truncate_events else "ladder"
         return None
+
+    @staticmethod
+    def _levels_limit(job: ActiveJob) -> int:
+        """The job's effective ladder length: ``levels_limit`` once placed
+        (only ever cut, never below ``req.min_levels``), falling back to
+        the request's full ladder for jobs that predate placement."""
+        return job.levels_limit or job.req.n_levels
 
     def _retire(self, shard: EngineShard, job: ActiveJob, reason: str,
                 finish_tick: Optional[int] = None) -> None:
@@ -1567,7 +1656,9 @@ class SAServeEngine:
             migrated_ticks=list(job.migrated_ticks),
             shrunk_ticks=list(job.shrunk_ticks),
             shrink_events=list(job.shrink_events),
-            pa_shrink_events=list(job.pa_shrink_events)))
+            pa_shrink_events=list(job.pa_shrink_events),
+            truncated_ticks=list(job.truncated_ticks),
+            truncate_events=list(job.truncate_events)))
         shard.pool.release(job.rid)
         shard.rids.free(job.rid)
         tel = self.telemetry
@@ -1629,6 +1720,16 @@ class SAServeEngine:
                         # A scripted drain/resize must land on its exact
                         # tick, not be leapt over.
                         jump = min(jump, int(self._next_op_tick))
+                    if self.controller is not None:
+                        # Same for the controller's next sampling tick:
+                        # idle gaps are exactly when scale-down decisions
+                        # fire, so fast-forwarding past a sample would
+                        # skip it (hysteresis windows would never elapse
+                        # on a sparse trace).  A sample due now or earlier
+                        # caps the jump at/below tick_count, falling
+                        # through to tick() where the controller fires.
+                        jump = min(jump,
+                                   int(self.controller.next_sample_tick))
                     if jump > self.tick_count:
                         # Idle time still counts against occupancy: the
                         # fleet held its slots across the jumped ticks.
@@ -1661,6 +1762,7 @@ class SAServeEngine:
             "preemptions": self.preemptions,
             "migrations": self.migrations,
             "shrinks": self.shrinks,
+            "truncations": self.truncations,
             "sweeps": self.sweeps_done,
             # The fleet is elastic, so the occupancy denominator is the
             # accumulated slot-tick product, not ticks x a fixed slot
@@ -1692,7 +1794,8 @@ class SAServeEngine:
 
 
 def run_standalone(req: SARequest, cfg: EngineConfig,
-                   shrink_schedule=None) -> RequestResult:
+                   shrink_schedule=None,
+                   truncate_schedule=None) -> RequestResult:
     """Serve ``req`` alone on a dedicated single-device pool — the
     per-tenant baseline.
 
@@ -1711,19 +1814,30 @@ def run_standalone(req: SARequest, cfg: EngineConfig,
     placement, co-tenants) perturbs nothing; only the logical width
     trajectory matters.
 
-    The replay applies pending shrinks at macro-tick boundaries, so at
-    ``cfg.macro_k > 1`` the schedule's levels must be K-aligned — which
-    engine-recorded ``shrink_events`` always are, because the engine only
-    shrinks at boundaries and mid-flight jobs run exactly K levels per
-    macro-tick.
+    ``truncate_schedule`` replays finish-deadline ladder truncation the
+    same way on the *level* axis: ``(level, n_levels)`` pairs, applied in
+    order once the job has completed ``level`` temperature levels
+    (``RequestResult.truncate_events`` records exactly this, as
+    ``(level, from, to)``).  Truncation moves only where the ladder ends
+    — no level's arithmetic changes — so the truncated run's champion is
+    bit-exact with this replay (and prefix-exact with the untruncated
+    run at every surviving level).
+
+    The replay applies pending shrinks and truncations at macro-tick
+    boundaries, so at ``cfg.macro_k > 1`` the schedules' levels must be
+    K-aligned — which engine-recorded ``shrink_events`` and
+    ``truncate_events`` always are, because the engine only cuts at
+    boundaries and mid-flight jobs run exactly K levels per macro-tick.
     """
     alone = SAServeEngine(dataclasses.replace(
         cfg, n_slots=req.slots_needed(cfg.chains_per_slot), n_devices=1))
     alone.submit(req)
-    if not shrink_schedule:
+    if not shrink_schedule and not truncate_schedule:
         return alone.run()[0]
     pending = sorted((int(lvl), int(chains))
-                     for lvl, chains in shrink_schedule)
+                     for lvl, chains in (shrink_schedule or ()))
+    cuts = sorted((int(lvl), int(levels))
+                  for lvl, levels in (truncate_schedule or ()))
     guard = 0
     while not alone.done:
         guard += 1
@@ -1732,5 +1846,8 @@ def run_standalone(req: SARequest, cfg: EngineConfig,
         while pending and job is not None and job.level >= pending[0][0]:
             alone.degrade_active(req.req_id, pending[0][1])
             pending.pop(0)
+        while cuts and job is not None and job.level >= cuts[0][0]:
+            alone.truncate_active(req.req_id, cuts[0][1])
+            cuts.pop(0)
         alone.tick()
     return alone.results[0]

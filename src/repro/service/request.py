@@ -43,8 +43,11 @@ OVERLOAD_POLICIES = ("none", "reject", "degrade", "preempt")
 
 #: Terminal finish_reason values.  'rejected' is the only non-completed
 #: terminal status: the request was dropped by SLO admission control and
-#: carries no solution.
-TERMINAL_REASONS = ("ladder", "target", "budget", "rejected")
+#: carries no solution.  'truncated' is a completed terminal: the ladder
+#: was shortened mid-flight (finish-deadline SLO degrade) and ended at
+#: the truncated length — the champion up to that level is still
+#: bit-exact vs a standalone run of the same truncate schedule.
+TERMINAL_REASONS = ("ladder", "target", "budget", "rejected", "truncated")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +90,22 @@ class SARequest:
     on_overload: Optional[str] = None  # per-request-class overload policy:
                                        # 'none'|'reject'|'degrade'|'preempt';
                                        # None = scheduler-wide default
+    # ---- completion-deadline SLO (control plane; see autoscaler.py) ----
+    finish_deadline: Optional[float] = None  # finish-tick SLO: max end-to-end
+                                             # latency (arrival -> end of the
+                                             # completing level) in ticks.
+                                             # Distinct from `deadline` (a
+                                             # queueing-delay bound): this one
+                                             # is met by *ladder truncation* —
+                                             # the scheduler may shorten the
+                                             # remaining temperature levels of
+                                             # a running job, never below
+                                             # min_levels.  None = no
+                                             # completion SLO (never truncated)
+    min_levels: int = 1         # truncation floor: the ladder is never cut
+                                # below this many temperature levels, so a
+                                # late job still does a minimum of annealing
+                                # work instead of returning its init state
     family: str = "continuous"  # problem family: 'continuous' (registry
                                 # objectives, float32 box states) |
                                 # 'permutation' (QAP instances, int32
@@ -116,6 +135,12 @@ class SARequest:
                 and self.on_overload not in OVERLOAD_POLICIES:
             raise ValueError(
                 f"on_overload must be one of {OVERLOAD_POLICIES} or None")
+        if self.finish_deadline is not None and self.finish_deadline <= 0:
+            raise ValueError("finish_deadline must be > 0 ticks")
+        if not (1 <= self.min_levels <= self.n_levels):
+            raise ValueError(
+                f"need 1 <= min_levels <= n_levels ({self.n_levels}); "
+                f"got min_levels={self.min_levels}")
         # Family-specific validation last, so its typed errors see
         # structurally-sound generic fields: servable objective, matching
         # dim, and family-incompatible controls (e.g. pa_ess_ratio or a
@@ -254,6 +279,15 @@ class RequestResult:
     # standalone replay from the identical fx stream, so the bit-exactness
     # oracle must not re-apply them as an external shrink schedule.
     pa_shrink_events: List[tuple] = dataclasses.field(default_factory=list)
+    # ---- completion-deadline SLO metadata (ladder truncation) ----
+    # One entry per mid-flight ladder truncation: (level at the decision,
+    # total levels before, total levels after) — the *level-axis* analogue
+    # of shrink_events.  ``run_standalone(truncate_schedule=[(level, to),
+    # ...])`` replays it bit-exactly: truncation only moves the ladder's
+    # end, never any level's arithmetic, so the packed champion history is
+    # a prefix-exact match of the untruncated run.
+    truncated_ticks: List[int] = dataclasses.field(default_factory=list)
+    truncate_events: List[tuple] = dataclasses.field(default_factory=list)
 
     # ---- derived status ----
     @property
@@ -283,6 +317,16 @@ class RequestResult:
     def n_shrinks(self) -> int:
         """Mid-flight width reductions (proactive degrade)."""
         return len(self.shrunk_ticks)
+
+    @property
+    def n_truncations(self) -> int:
+        """Mid-flight ladder truncations (finish-deadline degrade)."""
+        return len(self.truncated_ticks)
+
+    @property
+    def truncated(self) -> bool:
+        """The ladder was shortened to meet a finish-deadline SLO."""
+        return bool(self.truncate_events)
 
     @property
     def admitted_chains(self) -> int:
@@ -356,6 +400,9 @@ class RequestResult:
             "shrink_events": [list(e) for e in self.shrink_events],
             "pa_shrink_events": [list(e) for e in self.pa_shrink_events],
             "n_shrinks": self.n_shrinks,
+            "truncated_ticks": list(self.truncated_ticks),
+            "truncate_events": [list(e) for e in self.truncate_events],
+            "n_truncations": self.n_truncations,
             "admitted_chains": self.admitted_chains,
             "arrival_time": self.arrival_time,
             "submit_tick": self.submit_tick, "start_tick": self.start_tick,

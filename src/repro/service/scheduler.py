@@ -104,6 +104,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.service.request import OVERLOAD_POLICIES, SARequest
@@ -233,6 +234,11 @@ Migration = Tuple[int, int, int]
 #: slots to keep — strictly fewer than held, never below the floor).
 Shrink = Tuple[int, int, int]
 
+#: One planned finish-deadline ladder truncation: (rid, shard index,
+#: total levels to keep — strictly fewer than the job's current limit,
+#: never below the request's ``min_levels`` floor).
+Truncation = Tuple[int, int, int]
+
 #: One planned drain-evacuation action, in execution order — always a
 #: 5-tuple ``(kind, rid, src, dst, width)``:
 #: ('migrate', rid, src, dst, width) moves the job whole;
@@ -260,6 +266,12 @@ class AdmissionScheduler:
     @property
     def pending(self) -> List[SARequest]:
         return [e.req for e in self._queue]
+
+    @property
+    def entries(self) -> Tuple[QueueEntry, ...]:
+        """Read-only snapshot of the queue (controller backlog signal:
+        swapped entries expose their remaining-levels checkpoint)."""
+        return tuple(self._queue)
 
     def submit(self, req: SARequest, tick: int) -> None:
         self._queue.append(QueueEntry(req, tick))
@@ -558,6 +570,49 @@ class AdmissionScheduler:
             if avail >= need and plan:
                 return plan
         return []
+
+    @_planned("truncate")
+    def plan_truncations(self, shards: Sequence[ShardView],
+                         tick: int) -> List[Truncation]:
+        """Finish-deadline degrade on the *level* axis: cut a running
+        job's remaining temperature levels when, at one level per tick
+        from now, it would finish past its ``finish_deadline``.
+
+        The latest finish tick that still meets the SLO is
+        ``D = arrival_time + finish_deadline - 1`` (completion latency is
+        ``finish_tick + 1 - arrival_time``).  A job at ``level`` of
+        ``limit`` total levels finishes at ``tick + (limit - level) - 1``;
+        when that overshoots, the ladder is cut to
+        ``level + floor(D - tick) + 1`` total levels, clamped to the
+        request's ``min_levels`` floor — an over-late job keeps at least
+        its floor and misses the SLO rather than returning garbage.
+
+        Runs at macro-tick boundaries (the engine calls it right after
+        admission), so recorded truncation levels are K-aligned for
+        ``run_standalone`` replay, exactly like shrink schedules.  Unlike
+        width shrinks, truncation is method-agnostic: it moves the
+        ladder's end without touching any level's arithmetic, so PT and
+        PA jobs are as cuttable as plain SA.
+
+        Returns ``(rid, shard index, total levels to keep)`` in
+        execution order.
+        """
+        plan: List[Truncation] = []
+        for view in shards:
+            for job in view.active:
+                fd = job.req.finish_deadline
+                if fd is None:
+                    continue
+                limit = job.levels_limit or job.req.n_levels
+                latest = job.arrival_time + fd - 1     # last OK finish tick
+                if tick + (limit - job.level) - 1 <= latest:
+                    continue                            # on time as-is
+                allowed = math.floor(latest - tick) + 1  # levels from now
+                new_total = max(int(job.req.min_levels),
+                                job.level + max(0, allowed))
+                if new_total < limit:
+                    plan.append((job.rid, view.index, new_total))
+        return plan
 
     # ------------------------------------------------------------- admission
     def admit(self, free_slots: int, chains_per_slot: int, tick: int,

@@ -103,8 +103,25 @@ flag groups:
                   default) | poisson (open-loop at --rate requests/tick,
                   seeded by --arrival-seed — deterministic timeline) |
                   bursty (groups of --burst requests arrive together at
-                  the same mean rate — the overload stressor).
+                  the same mean rate — the overload stressor) | diurnal
+                  (sinusoidal intensity around --rate with --period /
+                  --amplitude: the autoscaler's day/night envelope).
                   --max-ticks bounds the run either way.
+  control plane   --autoscale attaches the closed-loop controller
+                  (service/autoscaler.py): it samples backlog, occupancy
+                  and completion-deadline headroom every
+                  --scale-sample-every ticks and resizes the fleet
+                  within [--min-shards, --max-shards] — scale-up before
+                  predicted SLO misses (x--scale-headroom safety),
+                  scale-down one shard after --scale-window consecutive
+                  sub---scale-low-util samples, at most one change per
+                  --scale-cooldown ticks.  --finish-deadline-factor F
+                  attaches completion SLOs to the mix (finish within
+                  F x ladder-length ticks of arrival); the scheduler
+                  meets them by ladder truncation, never cutting below
+                  --min-levels-frac x ladder.  Truncated runs replay
+                  bit-exactly under --check (the truncation schedule is
+                  re-applied standalone, like shrink schedules).
   elastic fleet   --drain-at T (drain one shard at tick T: no new
                   placements, jobs checkpoint-evacuate onto survivors,
                   shard retires once empty; --drain-shard picks which,
@@ -149,7 +166,9 @@ See docs/serving.md.
 
 def make_mix(n_requests: int, chains_per_slot: int, seed: int = 0,
              max_slots_per_req: int = 2, method: str = "sa",
-             family: str = "continuous") -> list:
+             family: str = "continuous",
+             finish_deadline_factor: float = None,
+             min_levels_frac: float = 0.5) -> list:
     """Deterministic heterogeneous request list for load generation.
 
     ``method`` picks the workload class for every request ('sa', 'pt',
@@ -165,6 +184,13 @@ def make_mix(n_requests: int, chains_per_slot: int, seed: int = 0,
     requests co-resident in one slot pool, the cross-representation
     stressor.  QAP entries in a mixed load always run plain SA; the
     continuous entries still follow ``method``.
+
+    ``finish_deadline_factor`` (when set) attaches a completion SLO to
+    every request: ``finish_deadline = factor x n_levels`` ticks of
+    end-to-end budget, with ``min_levels = max(1, min_levels_frac x
+    n_levels)`` as the ladder-truncation floor — factor > 1 leaves slack
+    for queueing; the scheduler truncates the ladder (never below the
+    floor) when the slack runs out.
     """
     rng = np.random.default_rng(seed)
     reqs = []
@@ -182,21 +208,31 @@ def make_mix(n_requests: int, chains_per_slot: int, seed: int = 0,
             sched = MIX_SCHEDULES[i % len(MIX_SCHEDULES)]
             m = ("sa", "pt", "pa")[i % 3] if method == "mixed" else method
             ess, fam = 0.5 if m == "pa" else 0.0, "continuous"
-        reqs.append(SARequest(
+        req = SARequest(
             req_id=i, objective=obj, dim=dim,
             n_chains=n_slots_i * chains_per_slot,
             seed=seed * 1000 + i, priority=int(rng.integers(0, 3)),
             method=m, pa_ess_ratio=ess, family=fam,
-            **sched))
+            **sched)
+        if finish_deadline_factor is not None:
+            req = dataclasses.replace(
+                req,
+                finish_deadline=finish_deadline_factor * req.n_levels,
+                min_levels=max(1, int(min_levels_frac * req.n_levels)))
+        reqs.append(req)
     return reqs
 
 
 def make_arrivals(reqs, kind: str, rate: float, seed: int,
-                  burst: int = 4) -> ArrivalProcess:
+                  burst: int = 4, period: float = 200.0,
+                  amplitude: float = 0.8) -> ArrivalProcess:
     if kind == "poisson":
         return ArrivalProcess.poisson(reqs, rate=rate, seed=seed)
     if kind == "bursty":
         return ArrivalProcess.bursty(reqs, rate=rate, burst=burst, seed=seed)
+    if kind == "diurnal":
+        return ArrivalProcess.diurnal(reqs, rate=rate, period=period,
+                                      amplitude=amplitude, seed=seed)
     return ArrivalProcess.batch(reqs)
 
 
@@ -255,6 +291,40 @@ def main(argv=None):
                          "min_chains) when the queue head fits nowhere")
     ap.add_argument("--shrink-budget", type=int, default=1,
                     help="max proactive shrinks per tick")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="attach the closed-loop autoscaler: sample "
+                         "backlog/occupancy/deadline headroom every "
+                         "--scale-sample-every ticks, resize the fleet "
+                         "between --min-shards and --max-shards (scale up "
+                         "before predicted completion-SLO misses, drain "
+                         "the emptiest shard after --scale-window low-"
+                         "utilization samples).  Decisions are tick-"
+                         "aligned and deterministic; --check still holds")
+    ap.add_argument("--min-shards", type=int, default=1,
+                    help="autoscaler fleet floor")
+    ap.add_argument("--max-shards", type=int, default=4,
+                    help="autoscaler fleet ceiling")
+    ap.add_argument("--scale-sample-every", type=int, default=8,
+                    help="ticks between autoscaler control samples")
+    ap.add_argument("--scale-headroom", type=float, default=1.25,
+                    help="demand safety multiplier on scale-up")
+    ap.add_argument("--scale-low-util", type=float, default=0.35,
+                    help="utilization low watermark for scale-down")
+    ap.add_argument("--scale-window", type=int, default=3,
+                    help="consecutive low-utilization samples before a "
+                         "scale-down (hysteresis)")
+    ap.add_argument("--scale-cooldown", type=int, default=32,
+                    help="min ticks between fleet-size changes")
+    ap.add_argument("--finish-deadline-factor", type=float, default=None,
+                    metavar="F",
+                    help="attach a completion SLO to every mix request: "
+                         "finish_deadline = F x its ladder length "
+                         "(min_levels = --min-levels-frac x ladder; the "
+                         "scheduler truncates the ladder, never below the "
+                         "floor, to meet it)")
+    ap.add_argument("--min-levels-frac", type=float, default=0.5,
+                    help="ladder-truncation floor as a fraction of each "
+                         "request's ladder length")
     ap.add_argument("--method", default="sa",
                     choices=["sa", "pt", "pa", "mixed"],
                     help="workload class for the synthetic mix: plain SA, "
@@ -294,13 +364,20 @@ def main(argv=None):
     ap.add_argument("--preemption-budget", type=int, default=1,
                     help="max preemptions (swap-outs) per tick")
     ap.add_argument("--arrivals", default="batch",
-                    choices=["batch", "poisson", "bursty"],
-                    help="closed-loop batch, open-loop Poisson stream, or "
-                         "bursty overload stream")
+                    choices=["batch", "poisson", "bursty", "diurnal"],
+                    help="closed-loop batch, open-loop Poisson stream, "
+                         "bursty overload stream, or a diurnal stream "
+                         "(sinusoidal intensity around --rate: the "
+                         "autoscaler's day/night envelope)")
     ap.add_argument("--rate", type=float, default=0.5,
                     help="offered load for open-loop arrivals, requests/tick")
     ap.add_argument("--burst", type=int, default=4,
                     help="burst size for --arrivals bursty")
+    ap.add_argument("--period", type=float, default=200.0,
+                    help="diurnal cycle length in ticks")
+    ap.add_argument("--amplitude", type=float, default=0.8,
+                    help="diurnal intensity swing in [0, 1] (peak = "
+                         "(1+a) x rate, trough = (1-a) x rate)")
     ap.add_argument("--arrival-seed", type=int, default=0,
                     help="seed for the arrival timeline")
     ap.add_argument("--max-ticks", type=int, default=None,
@@ -338,6 +415,11 @@ def main(argv=None):
     if args.drain_at is not None and args.devices < 2:
         ap.error("--drain-at needs --devices >= 2 (the survivors absorb "
                  "the drained shard's work)")
+    if args.autoscale and not (args.min_shards <= args.devices
+                               <= args.max_shards):
+        ap.error(f"--autoscale needs --min-shards <= --devices <= "
+                 f"--max-shards; got {args.min_shards} <= {args.devices} "
+                 f"<= {args.max_shards}")
     resizes = []
     for spec in args.resize or []:
         try:
@@ -369,6 +451,15 @@ def main(argv=None):
             trace=TraceBuilder() if args.trace else None,
             events=EventLog() if args.events else None)
     engine = SAServeEngine(cfg, telemetry=telemetry)
+    controller = None
+    if args.autoscale:
+        from repro.service.autoscaler import Autoscaler, AutoscalerConfig
+        controller = Autoscaler(AutoscalerConfig(
+            min_shards=args.min_shards, max_shards=args.max_shards,
+            sample_every=args.scale_sample_every,
+            headroom=args.scale_headroom, low_util=args.scale_low_util,
+            window=args.scale_window, cooldown=args.scale_cooldown))
+        engine.attach_controller(controller)
     # Scripted fleet changes land on the deterministic tick axis.
     for t, n in sorted(resizes):
         engine.schedule_op(t, lambda n=n: engine.resize(n))
@@ -380,9 +471,12 @@ def main(argv=None):
         engine.schedule_op(args.drain_at, _drain)
     reqs = make_mix(args.requests, args.chains_per_slot, seed=args.seed,
                     max_slots_per_req=min(args.max_slots_per_req, args.slots),
-                    method=args.method, family=args.family)
+                    method=args.method, family=args.family,
+                    finish_deadline_factor=args.finish_deadline_factor,
+                    min_levels_frac=args.min_levels_frac)
     arrivals = make_arrivals(reqs, args.arrivals, args.rate,
-                             args.arrival_seed, burst=args.burst)
+                             args.arrival_seed, burst=args.burst,
+                             period=args.period, amplitude=args.amplitude)
 
     results = engine.run_stream(arrivals, max_ticks=args.max_ticks)
     stats = engine.stats()
@@ -423,11 +517,15 @@ def main(argv=None):
             # *admitted* chain count (same logical chain indices and RNG);
             # a job shrunk mid-flight (drain / proactive degrade) is
             # bit-exact vs a standalone run that replays the same width
-            # schedule on the level axis.
+            # schedule on the level axis, and a ladder-truncated job vs
+            # one that replays the same truncation schedule (cuts move
+            # only the ladder's end, so champions are prefix-exact).
             solo_req = req if res.admitted_chains >= req.n_chains else \
                 dataclasses.replace(req, n_chains=res.admitted_chains)
             sched = [(lvl, to) for lvl, _frm, to in res.shrink_events]
-            solo = run_standalone(solo_req, cfg, shrink_schedule=sched)
+            cuts = [(lvl, to) for lvl, _frm, to in res.truncate_events]
+            solo = run_standalone(solo_req, cfg, shrink_schedule=sched,
+                                  truncate_schedule=cuts)
             if res.f_best == solo.f_best:
                 n_exact += 1
             else:
@@ -459,13 +557,24 @@ def main(argv=None):
                 "preemption_budget": args.preemption_budget,
                 "seed": args.seed, "arrivals": args.arrivals,
                 "rate": args.rate, "burst": args.burst,
+                "period": args.period, "amplitude": args.amplitude,
                 "arrival_seed": args.arrival_seed,
+                "autoscale": args.autoscale,
+                "min_shards": args.min_shards,
+                "max_shards": args.max_shards,
+                "finish_deadline_factor": args.finish_deadline_factor,
+                "min_levels_frac": args.min_levels_frac,
             },
             "stats": stats,
             "latency": lat,
             "results": [r.to_dict()
                         for r in sorted(results, key=lambda r: r.req_id)],
         }
+        if controller is not None:
+            doc["autoscaler"] = {
+                "samples": controller.samples,
+                "decisions": [list(d) for d in controller.decisions],
+            }
         if telemetry is not None:
             doc["metrics"] = telemetry.registry.snapshot()
         if args.check:
@@ -495,6 +604,16 @@ def main(argv=None):
             print(f"[serve_sa] elastic fleet: {stats['shards_retired']} "
                   f"retired ({retired or 'none'}), {stats['draining']} "
                   f"still draining, {stats['shrinks']} proactive shrinks")
+        if controller is not None:
+            moves = " ".join(f"t{t}:{kind[0]}{a}->{b}"
+                             for t, kind, a, b in controller.decisions)
+            print(f"[serve_sa] autoscaler: {controller.samples} samples, "
+                  f"{len(controller.decisions)} fleet changes "
+                  f"[{moves or 'none'}]")
+        if stats["truncations"]:
+            print(f"[serve_sa] completion SLO: {stats['truncations']} "
+                  f"ladder truncations across "
+                  f"{sum(1 for r in results if r.truncated)} requests")
         if lat["incomplete"]:
             print(f"[serve_sa] {lat['incomplete']} requests still in flight "
                   f"or queued at the --max-ticks horizon (not rejected)")
@@ -524,6 +643,10 @@ def main(argv=None):
                 line += (f" shrunk x{res.n_shrinks} "
                          f"({res.admitted_chains}->{res.granted_chains} "
                          "chains)")
+            if res.truncated:
+                line += (f" truncated x{res.n_truncations} "
+                         f"({res.truncate_events[0][1]}->"
+                         f"{res.truncate_events[-1][2]} levels)")
             elif res.degraded:
                 line += (f" degraded {res.granted_chains}/"
                          f"{res.requested_chains} chains")

@@ -118,6 +118,18 @@ class ActiveJob:
     # them from the identical fx stream, so the bit-exactness oracle must
     # not feed them back in as an external shrink schedule.
     pa_shrink_events: List[tuple] = dataclasses.field(default_factory=list)
+    # Completion-deadline lifecycle (ladder truncation): the job's
+    # *effective* ladder length — starts at ``req.n_levels`` and only ever
+    # decreases (never below ``req.min_levels``) when the scheduler
+    # shortens the remaining levels to meet ``req.finish_deadline``.  The
+    # level-axis twin of the shrink machinery: ``truncate_events`` records
+    # ``(level, from_levels, to_levels)`` per cut, which is exactly what a
+    # standalone replay needs (truncation moves the ladder's end, never
+    # any level's arithmetic, so champions are prefix-exact).  0 means
+    # "not yet placed"; the engine sets it to req.n_levels at admission.
+    levels_limit: int = 0
+    truncated_ticks: List[int] = dataclasses.field(default_factory=list)
+    truncate_events: List[tuple] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,250 @@
+"""Closed-loop autoscaler + completion-deadline SLOs.
+
+Deterministic tests: ladder truncation fires under tight finish
+deadlines and replays bit-exactly through ``run_standalone`` (at K=1 and
+fused K=4), the ``min_levels`` floor holds, the controller grows the
+fleet under a burst and drains it in the trough without losing work, and
+``run_stream``'s idle fast-forward never jumps past a controller
+sampling tick (the sparse-trace regression).
+
+Property suite (skipped when hypothesis is absent): no resize thrash
+under cooldown, no lost/duplicated requests across autoscaler drains,
+truncation never below ``min_levels``, truncated trajectories bit-exact
+vs ``run_standalone`` at every ladder level.
+"""
+import dataclasses
+
+import pytest
+
+from repro.service import (ArrivalProcess, Autoscaler, AutoscalerConfig,
+                           EngineConfig, SARequest, SAServeEngine,
+                           run_standalone)
+
+CPS = 8
+
+
+def _req(req_id, **kw):
+    kw.setdefault("objective", "rastrigin")
+    kw.setdefault("dim", 4)
+    kw.setdefault("n_chains", CPS)
+    kw.setdefault("T0", 50.0)
+    kw.setdefault("T_min", 1.0)
+    kw.setdefault("rho", 0.8)
+    kw.setdefault("N", 10)
+    return SARequest(req_id=req_id, seed=100 + req_id, **kw)
+
+
+def _cfg(n_slots=4, **kw):
+    return EngineConfig(n_slots=n_slots, chains_per_slot=CPS,
+                        use_pallas=False, **kw)
+
+
+def _ctl(**kw):
+    kw.setdefault("min_shards", 1)
+    kw.setdefault("max_shards", 3)
+    kw.setdefault("sample_every", 4)
+    kw.setdefault("low_util", 0.5)
+    kw.setdefault("window", 2)
+    kw.setdefault("cooldown", 8)
+    return Autoscaler(AutoscalerConfig(**kw))
+
+
+# ----------------------------------------------------------- SLO schema
+def test_finish_deadline_and_min_levels_validated():
+    _req(0, finish_deadline=50.0, min_levels=3)          # valid
+    with pytest.raises(ValueError):
+        _req(1, finish_deadline=0.0)
+    with pytest.raises(ValueError):
+        _req(2, min_levels=0)
+    with pytest.raises(ValueError):
+        _req(3, min_levels=100)          # > n_levels (ladder is ~36)
+
+
+# ---------------------------------------------------- ladder truncation
+@pytest.mark.parametrize("macro_k", [1, 4])
+def test_truncation_fires_and_replays_bit_exact(macro_k):
+    # Deadline far below the ladder length: the planner must cut the
+    # ladder, and the truncated trajectory must replay bit-for-bit.
+    eng = SAServeEngine(_cfg(macro_k=macro_k))
+    req = _req(0, finish_deadline=12.0, min_levels=2)
+    eng.submit(req)
+    results = eng.run()
+    (res,) = results
+    assert res.completed and res.finish_reason == "truncated"
+    assert res.truncated
+    assert res.n_truncations >= 1
+    final_levels = res.truncate_events[-1][2]
+    assert final_levels < req.n_levels
+    assert res.levels_run == final_levels
+    assert eng.stats()["truncations"] == res.n_truncations
+    cuts = [(lvl, to) for lvl, _frm, to in res.truncate_events]
+    alone = run_standalone(req, eng.cfg, truncate_schedule=cuts)
+    assert alone.f_best == res.f_best
+    assert (alone.x_best == res.x_best).all()
+    assert alone.levels_run == res.levels_run
+
+
+def test_truncation_respects_min_levels_floor():
+    eng = SAServeEngine(_cfg())
+    req = _req(0, finish_deadline=1.0, min_levels=7)     # hopeless deadline
+    eng.submit(req)
+    (res,) = eng.run()
+    assert res.completed
+    assert res.levels_run >= 7
+    for _lvl, frm, to in res.truncate_events:
+        assert 7 <= to < frm
+
+
+def test_no_deadline_means_no_truncation():
+    eng = SAServeEngine(_cfg())
+    eng.submit(_req(0))
+    (res,) = eng.run()
+    assert not res.truncated and res.truncate_events == []
+    assert res.finish_reason == "ladder"
+
+
+# ------------------------------------------------------ controller loop
+def _diurnal(reqs, rate=0.4, period=60.0, seed=3):
+    return ArrivalProcess.diurnal(reqs, rate=rate, period=period,
+                                  amplitude=0.9, seed=seed)
+
+
+def test_autoscaler_grows_under_burst_and_drains_after():
+    # The trace must span more than one diurnal cycle so the trough
+    # falls *inside* the run (arrivals still pending): the first peak's
+    # jobs drain, the controller sees idle samples, and shrinks before
+    # the second peak grows the fleet again.
+    reqs = [_req(i) for i in range(40)]
+    ctl = _ctl()
+    eng = SAServeEngine(_cfg(n_slots=2))
+    eng.attach_controller(ctl)
+    results = eng.run_stream(_diurnal(reqs, rate=0.2, period=120.0),
+                             max_ticks=5000)
+    assert len(results) == len(reqs)
+    assert {r.req_id for r in results} == {q.req_id for q in reqs}
+    kinds = [k for _, k, _, _ in ctl.decisions]
+    assert "grow" in kinds               # peak forced a scale-up
+    assert "shrink" in kinds             # trough drained it back
+    assert ctl.samples > 0
+    for tick, _k, frm, to in ctl.decisions:
+        assert 1 <= to <= ctl.cfg.max_shards and to != frm
+
+
+def test_autoscaler_decisions_deterministic():
+    def history():
+        reqs = [_req(i) for i in range(16)]
+        ctl = _ctl()
+        eng = SAServeEngine(_cfg(n_slots=2))
+        eng.attach_controller(ctl)
+        res = eng.run_stream(_diurnal(reqs), max_ticks=5000)
+        return ctl.decisions, sorted((r.req_id, r.f_best) for r in res)
+
+    d1, r1 = history()
+    d2, r2 = history()
+    assert d1 == d2                      # identical scaling history
+    assert r1 == r2                      # identical champions
+
+
+def test_autoscaler_respects_fleet_bounds():
+    reqs = [_req(i) for i in range(20)]
+    ctl = _ctl(max_shards=2)
+    eng = SAServeEngine(_cfg(n_slots=2))
+    eng.attach_controller(ctl)
+    eng.run_stream(ArrivalProcess.trace(reqs, [1.0] * len(reqs)),
+                   max_ticks=5000)
+    assert all(to <= 2 for _, _, _, to in ctl.decisions)
+    assert len(eng.live_shards) >= 1
+
+
+# ----------------------------------- idle fast-forward regression (#4)
+def test_run_stream_idle_jump_capped_at_sampling_tick():
+    # Sparse trace: a long idle gap between two arrivals.  Without the
+    # cap, run_stream fast-forwards over the gap in one jump and the
+    # controller never sees the idle fleet — the scale-down decision
+    # that must land *inside* the gap is lost.
+    reqs = [_req(i) for i in range(4)]
+    times = [1.0, 2.0, 3.0, 400.0]
+    ctl = _ctl(sample_every=16)
+    eng = SAServeEngine(_cfg(n_slots=2))
+    eng.attach_controller(ctl)
+    results = eng.run_stream(ArrivalProcess.trace(reqs, times),
+                             max_ticks=5000)
+    assert len(results) == 4
+    first_busy = max(r.finish_tick for r in results[:3])
+    shrinks = [t for t, k, _, _ in ctl.decisions if k == "shrink"]
+    assert any(first_busy < t < 400 for t in shrinks), (
+        "no scale-down decision inside the idle gap", ctl.decisions)
+    # Samples kept their cadence across the gap: every sample tick is a
+    # multiple of the cadence grid, none skipped between busy and 400.
+    assert ctl.samples >= (400 - first_busy) // 16
+
+
+# ----------------------------------------------------- property suite
+# Guarded import (not module-level importorskip: the deterministic tests
+# above must run even without hypothesis installed).
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover
+    _HAS_HYPOTHESIS = False
+
+if _HAS_HYPOTHESIS:
+    _slow = settings(max_examples=8, deadline=None,
+                     suppress_health_check=[HealthCheck.too_slow])
+
+    @pytest.mark.slow
+    @_slow
+    @given(cooldown=st.integers(4, 40), rate=st.floats(0.2, 0.8),
+           seed=st.integers(0, 5))
+    def test_property_no_resize_thrash_under_cooldown(cooldown, rate,
+                                                      seed):
+        reqs = [_req(i) for i in range(12)]
+        ctl = _ctl(cooldown=cooldown)
+        eng = SAServeEngine(_cfg(n_slots=2))
+        eng.attach_controller(ctl)
+        eng.run_stream(_diurnal(reqs, rate=rate, seed=seed),
+                       max_ticks=5000)
+        ticks = [t for t, _, _, _ in ctl.decisions]
+        assert all(b - a >= cooldown
+                   for a, b in zip(ticks, ticks[1:])), (
+            "fleet-size changes closer than the cooldown", ctl.decisions)
+
+    @pytest.mark.slow
+    @_slow
+    @given(rate=st.floats(0.2, 1.0), seed=st.integers(0, 5),
+           n=st.integers(6, 18))
+    def test_property_no_lost_or_duplicated_requests(rate, seed, n):
+        reqs = [_req(i) for i in range(n)]
+        ctl = _ctl()
+        eng = SAServeEngine(_cfg(n_slots=2))
+        eng.attach_controller(ctl)
+        results = eng.run_stream(_diurnal(reqs, rate=rate, seed=seed),
+                                 max_ticks=8000)
+        ids = [r.req_id for r in results]
+        assert sorted(ids) == sorted(q.req_id for q in reqs)
+        assert len(ids) == len(set(ids))
+
+    @pytest.mark.slow
+    @_slow
+    @given(deadline=st.floats(1.0, 30.0), min_levels=st.integers(1, 10),
+           seed=st.integers(0, 5))
+    def test_property_truncation_floor_and_bit_exact_replay(deadline,
+                                                            min_levels,
+                                                            seed):
+        base = _req(0)
+        req = dataclasses.replace(base, seed=200 + seed,
+                                  finish_deadline=deadline,
+                                  min_levels=min(min_levels,
+                                                 base.n_levels))
+        eng = SAServeEngine(_cfg())
+        eng.submit(req)
+        (res,) = eng.run()
+        assert res.completed
+        assert res.levels_run >= req.min_levels
+        for _lvl, frm, to in res.truncate_events:
+            assert req.min_levels <= to < frm <= req.n_levels
+        cuts = [(lvl, to) for lvl, _frm, to in res.truncate_events]
+        alone = run_standalone(req, eng.cfg, truncate_schedule=cuts)
+        assert alone.f_best == res.f_best
+        assert alone.levels_run == res.levels_run
